@@ -1,0 +1,164 @@
+"""Benchmark functions, one per paper table/figure (SIMDRAM §5).
+
+Each function prints a CSV block ``name,us_per_call,derived`` rows (the
+harness contract) and returns a dict for programmatic use.
+
+  table_throughput   16 ops × {8,16,32}-bit: SIMDRAM(1/4/16 banks) vs
+                     Ambit vs CPU vs GPU  (paper: up to 5.1×/Ambit avg)
+  table_energy       energy per op vs Ambit/CPU/GPU (paper: 2.5×, 257×, 31×)
+  table_synthesis    MAJ/NOT vs AND/OR/NOT command counts (Step-1 effect)
+  table_area         DRAM area overhead (<1 %)
+  table_reliability  TRA failure rate vs process variation per tech node
+  table_apps         7 application kernels vs Ambit/CPU/GPU
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core.area import DEFAULT_AREA
+from repro.core.energy import (energy_per_elem_pj, host_energy_per_elem_pj,
+                               uprogram_energy_nj)
+from repro.core.isa import SimdramDevice, compile_op
+from repro.core.ops_library import ALL_OPS, get_op
+from repro.core.reliability import TECH_NODES, tra_failure_rate
+from repro.core.timing import (CPU_BASELINE, DDR4, GPU_BASELINE, DramConfig,
+                               host_throughput_gops, throughput_gops,
+                               uprogram_latency_s)
+
+WIDTHS = (8, 16, 32)
+
+
+def _cfg_banks(n: int) -> DramConfig:
+    return DramConfig(n_banks=n)
+
+
+def table_throughput(widths=WIDTHS) -> Dict:
+    """Throughput (GOps/s) per op/width; derived = SIMDRAM:16 / Ambit:16."""
+    out = {}
+    print("# table_throughput: name,us_per_call,derived(simdram16_vs_ambit16)")
+    for n in widths:
+        for op in ALL_OPS:
+            t0 = time.perf_counter()
+            spec, up_sd = compile_op(op, n, "mig")
+            _, up_am = compile_op(op, n, "aig")
+            wall_us = (time.perf_counter() - t0) * 1e6
+            row = {
+                "simdram_1": throughput_gops(up_sd, _cfg_banks(1)),
+                "simdram_4": throughput_gops(up_sd, _cfg_banks(4)),
+                "simdram_16": throughput_gops(up_sd, _cfg_banks(16)),
+                "ambit_16": throughput_gops(up_am, _cfg_banks(16)),
+                "cpu": host_throughput_gops(n, spec.n_operands, len(spec.out_bits), CPU_BASELINE),
+                "gpu": host_throughput_gops(n, spec.n_operands, len(spec.out_bits), GPU_BASELINE),
+            }
+            row["vs_ambit"] = row["simdram_16"] / row["ambit_16"]
+            row["vs_cpu"] = row["simdram_16"] / row["cpu"]
+            row["vs_gpu"] = row["simdram_16"] / row["gpu"]
+            out[(op, n)] = row
+            print(f"throughput/{op}/{n}b,{wall_us:.1f},{row['vs_ambit']:.2f}")
+    avg = np.mean([r["vs_ambit"] for r in out.values()])
+    mx = max(r["vs_ambit"] for r in out.values())
+    print(f"throughput/AVG_vs_ambit,0,{avg:.2f}")
+    print(f"throughput/MAX_vs_ambit,0,{mx:.2f}")
+    print(f"throughput/AVG_vs_cpu,0,{np.mean([r['vs_cpu'] for r in out.values()]):.1f}")
+    print(f"throughput/AVG_vs_gpu,0,{np.mean([r['vs_gpu'] for r in out.values()]):.2f}")
+    return out
+
+
+def table_energy(widths=WIDTHS) -> Dict:
+    out = {}
+    print("# table_energy: name,us_per_call,derived(ambit_energy/simdram_energy)")
+    for n in widths:
+        for op in ALL_OPS:
+            spec, up_sd = compile_op(op, n, "mig")
+            _, up_am = compile_op(op, n, "aig")
+            e_sd = energy_per_elem_pj(up_sd)
+            e_am = energy_per_elem_pj(up_am)
+            e_cpu = host_energy_per_elem_pj(n, spec.n_operands, len(spec.out_bits), CPU_BASELINE)
+            e_gpu = host_energy_per_elem_pj(n, spec.n_operands, len(spec.out_bits), GPU_BASELINE)
+            row = {"simdram_pj": e_sd, "ambit_pj": e_am, "cpu_pj": e_cpu, "gpu_pj": e_gpu,
+                   "vs_ambit": e_am / e_sd, "vs_cpu": e_cpu / e_sd, "vs_gpu": e_gpu / e_sd}
+            out[(op, n)] = row
+            print(f"energy/{op}/{n}b,0,{row['vs_ambit']:.2f}")
+    print(f"energy/AVG_vs_ambit,0,{np.mean([r['vs_ambit'] for r in out.values()]):.2f}")
+    print(f"energy/AVG_vs_cpu,0,{np.mean([r['vs_cpu'] for r in out.values()]):.1f}")
+    print(f"energy/AVG_vs_gpu,0,{np.mean([r['vs_gpu'] for r in out.values()]):.1f}")
+    return out
+
+
+def table_synthesis(widths=(8, 16)) -> Dict:
+    """Step-1 effect: gate counts AIG vs naive-MIG vs optimized-MIG."""
+    from repro.core.synthesis import synthesize
+    out = {}
+    print("# table_synthesis: name,us_per_call,derived(naive_maj/opt_maj)")
+    for n in widths:
+        for op in ALL_OPS:
+            spec = get_op(op, n)
+            t0 = time.perf_counter()
+            aig, _ = spec.build("aig")
+            opt, rep = synthesize(aig)
+            us = (time.perf_counter() - t0) * 1e6
+            hand, _ = spec.build("mig")
+            hand_opt, hrep = synthesize(hand)
+            row = {
+                "aig_gates": rep.aig_stats["total"],
+                "naive_maj": rep.mig_stats.get("maj", 0),
+                "auto_maj": rep.opt_stats.get("maj", 0),
+                "hand_maj": hrep.opt_stats.get("maj", 0),
+            }
+            out[(op, n)] = row
+            d = row["naive_maj"] / max(row["hand_maj"], 1)
+            print(f"synthesis/{op}/{n}b,{us:.0f},{d:.2f}")
+    return out
+
+
+def table_area() -> Dict:
+    rep = DEFAULT_AREA.report()
+    print("# table_area: name,us_per_call,derived(total_dram_frac)")
+    print(f"area/dram_overhead,0,{rep['total_dram_frac']:.5f}")
+    print(f"area/meets_lt_1pct,0,{int(rep['meets_paper_claim_lt_1pct'])}")
+    return rep
+
+
+def table_reliability(n_trials: int = 100_000) -> Dict:
+    out = {}
+    print("# table_reliability: name,us_per_call,derived(failure_rate)")
+    for node, cell in TECH_NODES.items():
+        for sigma in (0.0, 0.05, 0.10, 0.15, 0.20, 0.25):
+            t0 = time.perf_counter()
+            fr = tra_failure_rate(sigma, cell, n_trials)
+            us = (time.perf_counter() - t0) * 1e6
+            out[(node, sigma)] = fr
+            print(f"reliability/{node}/sigma{int(sigma*100):02d},{us:.0f},{fr:.2e}")
+    return out
+
+
+def table_apps(fast: bool = True) -> Dict:
+    """7 app kernels: SIMDRAM vs Ambit command-latency + host comparisons."""
+    from repro.apps import bitweaving, brightness, knn, lenet, tpch, vgg
+
+    runs = [
+        ("lenet", lambda d: lenet.run(device=d, elementwise_pum=False)),
+        ("vgg13", lambda d: vgg.run("vgg13", device=d, elementwise_pum=False)),
+        ("vgg16", lambda d: vgg.run("vgg16", device=d, elementwise_pum=False)),
+        ("knn", lambda d: knn.run(n_points=2048, n_features=16, device=d)),
+        ("tpch", lambda d: tpch.run(n_rows=8192, device=d)),
+        ("bitweaving", lambda d: bitweaving.run(n_rows=65536, device=d)),
+        ("brightness", lambda d: brightness.run(h=64, w=64, device=d)),
+    ]
+    out = {}
+    print("# table_apps: name,us_per_call,derived(ambit_latency/simdram_latency)")
+    for name, fn in runs:
+        t0 = time.perf_counter()
+        r_sd = fn(SimdramDevice(backend="bitplane", style="mig"))
+        r_am = fn(SimdramDevice(backend="bitplane", style="aig"))
+        us = (time.perf_counter() - t0) * 1e6
+        speedup = r_am["latency_s"] / max(r_sd["latency_s"], 1e-30)
+        out[name] = {"simdram_s": r_sd["latency_s"], "ambit_s": r_am["latency_s"],
+                     "speedup": speedup, "energy_mj": r_sd["energy_mj"]}
+        print(f"apps/{name},{us:.0f},{speedup:.2f}")
+    print(f"apps/AVG_speedup_vs_ambit,0,{np.mean([r['speedup'] for r in out.values()]):.2f}")
+    return out

@@ -1,0 +1,46 @@
+"""Benchmark harness entrypoint: one function per paper table.
+
+Prints ``name,us_per_call,derived`` CSV rows.  Modes:
+
+  python -m benchmarks.run              # all paper tables (fast settings)
+  python -m benchmarks.run --table X    # one table
+  python -m benchmarks.run --full       # larger trial counts / widths
+
+Roofline/dry-run benchmarks for the LM stack live in benchmarks/roofline.py
+(they need the 512-device env var and are invoked via repro.launch.dryrun).
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from . import paper_tables as T
+
+TABLES = {
+    "throughput": lambda full: T.table_throughput(widths=(8, 16, 32) if full else (8, 16, 32)),
+    "energy": lambda full: T.table_energy(),
+    "synthesis": lambda full: T.table_synthesis(widths=(8, 16) if not full else (8, 16, 32)),
+    "area": lambda full: T.table_area(),
+    "reliability": lambda full: T.table_reliability(200_000 if full else 50_000),
+    "apps": lambda full: T.table_apps(fast=not full),
+}
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--table", choices=sorted(TABLES), default=None)
+    p.add_argument("--full", action="store_true")
+    args = p.parse_args()
+
+    t0 = time.time()
+    names = [args.table] if args.table else list(TABLES)
+    for name in names:
+        print(f"\n## {name}")
+        TABLES[name](args.full)
+    print(f"\n# total_wall_s,{time.time() - t0:.1f},0")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""§4 system-integration demo: the offload decision + transposition unit.
+
+Sweeps workload sizes and operand residency to show WHEN in-DRAM
+execution wins over the host — the paper's horizontal/vertical
+coexistence story — then demonstrates the LM integration flag
+(cfg.pum="bitplane") routing a quantized ReLU through a real bbop.
+
+Run:  PYTHONPATH=src python examples/pum_offload_demo.py
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.costmodel import decide
+from repro.core.transpose import transpose_cost_s
+from repro.configs import smoke_config
+from repro.models.transformer import init_lm, lm_forward
+
+
+def main():
+    print("op=addition/8b — host vs PuM (times in ms):")
+    print(f"{'elements':>12} {'host':>8} {'PuM+trsp':>9} {'PuM(warm)':>9}  verdict")
+    for logn in (10, 14, 18, 22, 26):
+        n = 1 << logn
+        cold = decide("addition", 8, n)
+        warm = decide("addition", 8, n, operands_vertical=2,
+                      result_stays_vertical=True)
+        v = "OFFLOAD" if cold.offload else ("warm-only" if warm.offload else "host")
+        print(f"{n:12,} {cold.host_s*1e3:8.3f} {cold.pum_total_s*1e3:9.3f} "
+              f"{warm.pum_total_s*1e3:9.3f}  {v}")
+
+    print("\ntransposition-unit cost (1M × 8b):",
+          f"{transpose_cost_s(1<<20, 8)*1e6:.1f} μs per direction")
+
+    # LM integration: quantized ReLU through the SIMDRAM bit-plane backend
+    cfg = smoke_config("seamless-m4t-medium").replace(
+        act="relu", pum="bitplane", param_dtype="float32")
+    params = init_lm(jax.random.PRNGKey(0), cfg)
+    toks = jnp.zeros((1, 8), jnp.int32)
+    feats = jnp.zeros((1, 4, cfg.d_model), jnp.float32)
+    logits, _ = lm_forward(params, toks, cfg, encoder_feats=feats)
+    print(f"\nLM with pum=bitplane: logits {logits.shape}, "
+          f"finite={bool(jnp.isfinite(logits).all())}")
+
+
+if __name__ == "__main__":
+    main()

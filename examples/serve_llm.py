@@ -1,0 +1,45 @@
+"""Serving example: continuous-batching greedy decoding over cache slots.
+
+Spins up the Server with a small dense model, submits a burst of
+requests with different prompt lengths, and shows slot reuse + EOS
+handling.  (Weights are random — outputs are arbitrary tokens; the point
+is the serving machinery: KV slots, ring positions, admission.)
+
+Run:  PYTHONPATH=src python examples/serve_llm.py
+"""
+
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import smoke_config
+from repro.models.transformer import init_lm
+from repro.train.serve import Request, Server
+
+
+def main():
+    cfg = smoke_config("yi-6b").replace(n_layers=2)
+    params = init_lm(jax.random.PRNGKey(0), cfg)
+    server = Server(cfg, params, batch_slots=4, max_len=64)
+
+    rng = np.random.default_rng(0)
+    reqs = [Request(prompt=list(rng.integers(2, cfg.vocab_size, size=n)),
+                    max_new=8) for n in (3, 7, 5, 2, 9, 4)]
+    for r in reqs:
+        server.submit(r)
+
+    t0 = time.time()
+    server.run(max_steps=256)
+    dt = time.time() - t0
+    done = sum(r.done for r in reqs)
+    toks = sum(len(r.out) for r in reqs)
+    print(f"served {done}/{len(reqs)} requests, {toks} tokens "
+          f"in {dt:.1f}s ({toks/dt:.1f} tok/s on CPU)")
+    for i, r in enumerate(reqs):
+        print(f"  req{i}: prompt[{len(r.prompt)}] -> {r.out}")
+    assert all(r.done for r in reqs)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""End-to-end driver: train a ~100M-param LM for a few hundred steps.
+
+A dense GQA model (d=640, 10 layers, ~100M params with embeddings) on the
+synthetic pipeline, with checkpointing every 50 steps and automatic
+resume.  ~0.5-1 s/step on a laptop-class CPU.
+
+Run:  PYTHONPATH=src python examples/train_lm.py [--steps 300]
+"""
+
+import argparse
+
+import jax
+
+from repro.models.config import ModelConfig
+from repro.launch.train import train
+import repro.launch.train as T
+from repro.configs import ARCHS
+
+
+CONFIG_100M = ModelConfig(
+    name="dense-100m", family="dense",
+    n_layers=10, d_model=640, n_heads=10, n_kv_heads=5,
+    d_ff=2048, vocab_size=32000, head_dim=64, act="swiglu",
+)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--seq_len", type=int, default=256)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--ckpt", default="experiments/ckpt_100m")
+    args = ap.parse_args()
+
+    print(f"training {CONFIG_100M.name}: "
+          f"{CONFIG_100M.param_count()/1e6:.0f}M params, "
+          f"{args.steps} steps @ seq {args.seq_len} × batch {args.batch}")
+
+    # route through the generic driver with a custom config
+    orig_get, orig_smoke = T.get_config, T.smoke_config
+    T.get_config = lambda name: CONFIG_100M
+    T.smoke_config = lambda name: CONFIG_100M
+    try:
+        out = train(arch="dense-100m", smoke=False, steps=args.steps,
+                    seq_len=args.seq_len, batch=args.batch,
+                    ckpt_dir=args.ckpt, ckpt_every=50,
+                    log_path="experiments/train_log_100m.jsonl")
+    finally:
+        T.get_config, T.smoke_config = orig_get, orig_smoke
+    print(f"loss: {out['first_loss']:.3f} -> {out['final_loss']:.3f} "
+          f"({out['wall_s']:.0f}s total)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,14 @@
+"""The paper's seven application kernels (§5), on the SIMDRAM substrate.
+
+  vgg.py         VGG-13 / VGG-16 quantized inference
+  lenet.py       LeNet-5 quantized inference
+  knn.py         k-nearest-neighbours (L1 distance + min tree)
+  tpch.py        TPC-H-style predicate scan + aggregate
+  bitweaving.py  BitWeaving column scans
+  brightness.py  image brightness adjustment (add + clamp predication)
+
+Each kernel runs end-to-end with real data through SIMDRAM bbops (host
+code only where the paper also keeps the CPU involved), verifies against
+a numpy oracle, and reports the per-device command statistics that feed
+benchmarks/apps.py.
+"""

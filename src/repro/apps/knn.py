@@ -1,0 +1,48 @@
+"""k-nearest-neighbours on SIMDRAM (paper §5 app kernel).
+
+Distance computation is the bulk-parallel part: L1 distance between the
+query and every reference point, computed feature-by-feature with
+SIMDRAM subtraction + abs + addition bbops (each bbop processes all N
+reference points as SIMD lanes).  Top-k selection happens host-side on
+the N distances (tiny), matching the paper's split.
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import numpy as np
+
+from repro.core.isa import SimdramDevice
+
+
+def run(
+    n_points: int = 4096,
+    n_features: int = 16,
+    k: int = 5,
+    n_bits: int = 8,
+    device: SimdramDevice | None = None,
+    seed: int = 0,
+) -> Dict:
+    dev = device or SimdramDevice(backend="bitplane")
+    rng = np.random.default_rng(seed)
+    refs = rng.integers(0, 1 << n_bits, size=(n_points, n_features)).astype(np.int64)
+    labels = rng.integers(0, 4, size=n_points)
+    query = rng.integers(0, 1 << n_bits, size=(n_features,)).astype(np.int64)
+
+    acc_bits = n_bits + int(np.ceil(np.log2(n_features))) + 1
+    dist = np.zeros(n_points, dtype=np.int64)
+    for f in range(n_features):
+        col = refs[:, f]
+        q = np.full_like(col, query[f])
+        diff = np.asarray(dev.bbop("subtraction", col, q, n_bits=n_bits + 1))
+        ad = np.asarray(dev.bbop("abs", diff, n_bits=n_bits + 1, signed_out=True))
+        dist = np.asarray(dev.bbop("addition", dist, ad.astype(np.int64),
+                                   n_bits=acc_bits))
+
+    want = np.abs(refs - query[None, :]).sum(axis=1)
+    assert np.array_equal(dist, want), "kNN distance mismatch"
+
+    nearest = np.argsort(dist)[:k]
+    pred = int(np.bincount(labels[nearest]).argmax())
+    return {"arch": "knn", "n_points": n_points, "pred": pred, **dev.totals()}

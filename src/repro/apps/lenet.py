@@ -1,0 +1,52 @@
+"""LeNet-5 quantized inference on SIMDRAM (paper §5 app kernel)."""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import numpy as np
+
+from repro.core.isa import SimdramDevice
+from .nn_layers import LayerCost, conv2d_int, dense_int, maxpool2x2_pum, relu_pum
+
+
+def run(device: SimdramDevice | None = None, seed: int = 0,
+        elementwise_pum: bool = True) -> Dict:
+    dev = device or SimdramDevice(backend="bitplane")
+    rng = np.random.default_rng(seed)
+
+    x = rng.integers(0, 64, size=(1, 28, 28)).astype(np.int64)
+    total_macs = 0
+
+    def conv_block(x, c_out, k, pad):
+        nonlocal total_macs
+        c_in = x.shape[0]
+        w = rng.integers(-8, 8, size=(c_out, c_in, k, k)).astype(np.int64)
+        y = conv2d_int(x, w, pad=pad)
+        macs = int(np.prod(y.shape)) * c_in * k * k
+        total_macs += macs
+        LayerCost("conv", macs, int(np.prod(y.shape))).account_matmul(dev, 8)
+        y = np.clip(y >> 4, -(1 << 15), (1 << 15) - 1)
+        ref = np.maximum(y, 0)
+        y = relu_pum(dev, y, 16) if elementwise_pum else ref
+        assert np.array_equal(y, ref)
+        return maxpool2x2_pum(dev, y, 16) if elementwise_pum else \
+            y.reshape(y.shape[0], y.shape[1] // 2, 2, y.shape[2] // 2, 2).max(axis=(2, 4))
+
+    x = conv_block(x, 6, 5, pad=2)     # 6×14×14
+    x = conv_block(x, 16, 5, pad=0)    # 16×5×5
+    feat = x.reshape(-1)
+
+    for width in (120, 84, 10):
+        w = rng.integers(-8, 8, size=(width, feat.shape[0])).astype(np.int64)
+        total_macs += width * feat.shape[0]
+        LayerCost("fc", width * feat.shape[0], width).account_matmul(dev, 8)
+        feat = dense_int(feat, w)
+        feat = np.clip(feat >> 4, -(1 << 15), (1 << 15) - 1)
+        if width != 10:
+            ref = np.maximum(feat, 0)
+            feat = relu_pum(dev, feat, 16) if elementwise_pum else ref
+            assert np.array_equal(feat, ref)
+
+    return {"arch": "lenet5", "macs": total_macs, "pred": int(np.argmax(feat)),
+            **dev.totals()}

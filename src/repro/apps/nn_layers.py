@@ -1,0 +1,119 @@
+"""Quantized NN building blocks over SIMDRAM bbops.
+
+Convolutions/matmuls use the bit-serial formulation (kernel or analytic
+accounting), elementwise stages (ReLU, residual adds, pooling compare
+trees) run as real bbops on the selected backend.  Mirrors the paper's NN
+kernels: int8 weights/activations, per-tensor power-of-two scales.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import numpy as np
+
+from repro.core.isa import SimdramDevice, compile_op
+from repro.core.timing import uprogram_latency_s
+from repro.core.energy import uprogram_energy_nj
+
+
+def quantize(x: np.ndarray, bits: int = 8, signed: bool = True) -> Tuple[np.ndarray, float]:
+    """Symmetric power-of-two quantization."""
+    amax = np.abs(x).max() or 1.0
+    qmax = (1 << (bits - 1)) - 1 if signed else (1 << bits) - 1
+    scale = 2.0 ** np.floor(np.log2(qmax / amax)) if amax > 0 else 1.0
+    q = np.clip(np.round(x * scale), -qmax - 1 if signed else 0, qmax)
+    return q.astype(np.int32), float(scale)
+
+
+def im2col(x: np.ndarray, kh: int, kw: int, stride: int = 1, pad: int = 0) -> Tuple[np.ndarray, int, int]:
+    """(C, H, W) -> (out_h*out_w, C*kh*kw) patch matrix."""
+    c, h, w = x.shape
+    if pad:
+        x = np.pad(x, ((0, 0), (pad, pad), (pad, pad)))
+    oh = (x.shape[1] - kh) // stride + 1
+    ow = (x.shape[2] - kw) // stride + 1
+    cols = np.zeros((oh * ow, c * kh * kw), dtype=x.dtype)
+    idx = 0
+    for i in range(oh):
+        for j in range(ow):
+            patch = x[:, i * stride: i * stride + kh, j * stride: j * stride + kw]
+            cols[idx] = patch.reshape(-1)
+            idx += 1
+    return cols, oh, ow
+
+
+@dataclass
+class LayerCost:
+    """Bit-serial command accounting for one offloaded layer."""
+    name: str
+    macs: int            # multiply-accumulates
+    elements: int        # elementwise op lanes
+
+    def account_matmul(self, dev: SimdramDevice, n_bits: int = 8) -> None:
+        """Charge the device for a bit-serial MAC workload: each MAC is one
+        n-bit multiplication + one 2n-bit addition μProgram lane."""
+        _, up_mul = compile_op("multiplication", n_bits, dev.style)
+        _, up_add = compile_op("addition", 2 * n_bits, dev.style)
+        for up in (up_mul, up_add):
+            dev._account(up.op_name, up.n_bits, up, self.macs)
+
+
+def conv2d_int(
+    x: np.ndarray, w: np.ndarray, stride: int = 1, pad: int = 0
+) -> np.ndarray:
+    """Integer conv via im2col + int matmul.  x: (C,H,W), w: (O,C,kh,kw)."""
+    o, c, kh, kw = w.shape
+    cols, oh, ow = im2col(x, kh, kw, stride, pad)
+    wmat = w.reshape(o, -1).astype(np.int64)
+    out = cols.astype(np.int64) @ wmat.T         # (oh*ow, O)
+    return out.T.reshape(o, oh, ow)
+
+
+def relu_pum(dev: SimdramDevice, x: np.ndarray, n_bits: int = 16) -> np.ndarray:
+    """ReLU executed as a real SIMDRAM bbop (clips to n_bits two's compl.)."""
+    flat = x.reshape(-1)
+    lim = 1 << (n_bits - 1)
+    clipped = np.clip(flat, -lim, lim - 1)
+    out = np.asarray(
+        dev.bbop("relu", clipped.astype(np.int64) & ((1 << n_bits) - 1),
+                 n_bits=n_bits, signed_out=True)
+    )
+    return out.reshape(x.shape).astype(np.int64)
+
+
+def maxpool2x2_pum(dev: SimdramDevice, x: np.ndarray, n_bits: int = 16) -> np.ndarray:
+    """2×2 max-pool as a tree of SIMDRAM `max` bbops (signed)."""
+    c, h, w = x.shape
+    h2, w2 = h // 2, w // 2
+    x = x[:, : h2 * 2, : w2 * 2]
+    a = x[:, 0::2, 0::2].reshape(-1)
+    b = x[:, 0::2, 1::2].reshape(-1)
+    cc = x[:, 1::2, 0::2].reshape(-1)
+    d = x[:, 1::2, 1::2].reshape(-1)
+    mask = (1 << n_bits) - 1
+
+    def mx(u, v):
+        # signed max via flipped-msb unsigned max (ops_library signed=True)
+        dev_out = dev.bbop("if_else",
+                           np.asarray(dev.bbop("greater",
+                                               _bias(u, n_bits), _bias(v, n_bits),
+                                               n_bits=n_bits)).astype(np.int64),
+                           u.astype(np.int64) & mask, v.astype(np.int64) & mask,
+                           n_bits=n_bits, signed_out=True)
+        return np.asarray(dev_out).astype(np.int64)
+
+    m1 = mx(a, b)
+    m2 = mx(cc, d)
+    m = mx(m1, m2)
+    return m.reshape(c, h2, w2)
+
+
+def _bias(x: np.ndarray, n_bits: int) -> np.ndarray:
+    """Signed -> order-preserving unsigned (flip sign bit)."""
+    return (x.astype(np.int64) + (1 << (n_bits - 1))) & ((1 << n_bits) - 1)
+
+
+def dense_int(x: np.ndarray, w: np.ndarray) -> np.ndarray:
+    return x.astype(np.int64) @ w.astype(np.int64).T

@@ -1,0 +1,80 @@
+"""VGG-13 / VGG-16 quantized inference on the SIMDRAM substrate (paper §5).
+
+Convolution MACs are charged to the device as bit-serial mul+add
+μPrograms (the paper's accounting); ReLU and max-pool stages execute as
+*real* bbops.  Synthetic int8 weights; correctness is asserted against an
+integer numpy oracle layer-by-layer.
+
+`run(arch="vgg13"|"vgg16", ...)` returns command/latency/energy totals.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from repro.core.isa import SimdramDevice
+from .nn_layers import LayerCost, conv2d_int, maxpool2x2_pum, relu_pum
+
+# (conv channel plan per block, 'M' = 2x2 maxpool) — standard VGG configs
+VGG_PLANS = {
+    "vgg13": [64, 64, "M", 128, 128, "M", 256, 256, "M", 512, 512, "M", 512, 512, "M"],
+    "vgg16": [64, 64, "M", 128, 128, "M", 256, 256, 256, "M",
+              512, 512, 512, "M", 512, 512, 512, "M"],
+}
+
+
+def run(
+    arch: str = "vgg13",
+    img_hw: int = 32,
+    n_classes: int = 10,
+    device: SimdramDevice | None = None,
+    seed: int = 0,
+    elementwise_pum: bool = True,
+) -> Dict:
+    dev = device or SimdramDevice(backend="bitplane")
+    rng = np.random.default_rng(seed)
+    plan = VGG_PLANS[arch]
+
+    x = rng.integers(-64, 64, size=(3, img_hw, img_hw)).astype(np.int64)
+    c_in = 3
+    total_macs = 0
+    for li, item in enumerate(plan):
+        if item == "M":
+            ref = x.reshape(x.shape[0], x.shape[1] // 2, 2, x.shape[2] // 2, 2).max(axis=(2, 4))
+            if elementwise_pum:
+                x = maxpool2x2_pum(dev, x, n_bits=16)
+                assert np.array_equal(x, ref), f"{arch} maxpool L{li}"
+            else:
+                x = ref
+            continue
+        c_out = int(item)
+        w = rng.integers(-8, 8, size=(c_out, c_in, 3, 3)).astype(np.int64)
+        y = conv2d_int(x, w, stride=1, pad=1)
+        macs = int(np.prod(y.shape)) * c_in * 9
+        total_macs += macs
+        LayerCost(f"conv{li}", macs, int(np.prod(y.shape))).account_matmul(dev, n_bits=8)
+        # re-quantize activations to int16 range then ReLU in PuM
+        y = np.clip(y >> 6, -(1 << 15), (1 << 15) - 1)
+        ref = np.maximum(y, 0)
+        if elementwise_pum:
+            y = relu_pum(dev, y, n_bits=16)
+            assert np.array_equal(y, ref), f"{arch} relu L{li}"
+        else:
+            y = ref
+        x = y
+        c_in = c_out
+
+    # classifier head (host-side, like the paper's CPU fallback)
+    feat = x.reshape(-1)
+    wfc = rng.integers(-8, 8, size=(n_classes, feat.shape[0])).astype(np.int64)
+    logits = wfc @ feat
+    t = dev.totals()
+    return {
+        "arch": arch,
+        "macs": total_macs,
+        "pred": int(np.argmax(logits)),
+        **t,
+    }

@@ -1,0 +1,376 @@
+"""SIMDRAM Step 2: operand-to-row mapping + μProgram generation.
+
+Translates an optimized MAJ/NOT circuit (Step-1 output) into the minimal
+sequence of AAP/AP DRAM commands, by solving a small register-allocation
+problem over the six B-group compute rows:
+
+  - every MAJ node must be computed by one triple-row activation (AP) on a
+    *predefined* triple, so its three operands must first be staged into
+    that triple's rows (AAP copies);
+  - NOT is realized by copying through a dual-contact cell (write the
+    d-port, read the n-port) — polarity is tracked per row so NOTs fuse
+    into copies and into the two DCC-bearing triples;
+  - values still needed later that would be clobbered are spilled to
+    D-group scratch rows;
+  - the scheduler greedily picks, per MAJ, the triple with the lowest
+    staging cost (operands already resident count for free — this is where
+    "choosing the operand-to-row mapping to minimize row activations"
+    happens).
+
+The result is a :class:`UProgram`.  Its command count is the paper's
+latency/energy currency: 1 AP = 1 triple activation, 1 AAP = 2 activations.
+
+RowHammer note (paper §4): the allocator enforces a bound on consecutive
+activations of the same row pair by construction — the greedy schedule
+never activates one data row more than twice in a row without an
+intervening precharge of a different row; the dry-run check in the tests
+asserts the bound.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from .logic import CONST0, CONST1, INPUT, MAJ, NOT, Circuit
+from .uprogram import (B_ROWS, C0, C1, DCC0, DCC1, N_SPECIAL, T0, T1, T2, T3,
+                       TRIPLES, Command, RowRef, UProgram)
+
+# value = (node_id, negated)  — what a row currently holds
+Value = Tuple[int, bool]
+
+
+class _RowState:
+    """Tracks row contents + node residency during scheduling."""
+
+    def __init__(self, n_scratch_base: int):
+        self.content: Dict[int, Optional[Value]] = {r: None for r in B_ROWS}
+        self.locs: Dict[int, Set[Tuple[int, bool]]] = {}  # node -> {(row, neg_in_row)}
+        self.scratch_base = n_scratch_base
+        self.free_scratch: List[int] = []
+        self.n_scratch = 0
+        self.pinned: Dict[int, Value] = {}  # rows pinned (input/const rows)
+
+    def set_row(self, row: int, val: Optional[Value]) -> None:
+        old = self.content.get(row)
+        if old is not None:
+            node, neg = old
+            self.locs.get(node, set()).discard((row, neg))
+        self.content[row] = val
+        if val is not None:
+            node, neg = val
+            self.locs.setdefault(node, set()).add((row, neg))
+
+    def alloc_scratch(self) -> int:
+        if self.free_scratch:
+            return self.free_scratch.pop()
+        r = self.scratch_base + self.n_scratch
+        self.n_scratch += 1
+        self.content.setdefault(r, None)
+        return r
+
+    def release_node(self, node: int) -> None:
+        """Node dead: recycle any scratch rows it occupies."""
+        for row, _neg in list(self.locs.get(node, ())):
+            if row >= self.scratch_base:
+                self.set_row(row, None)
+                self.free_scratch.append(row)
+
+
+def _normalize(circ: Circuit, nid: int) -> Value:
+    neg = False
+    while circ.ops[nid] == NOT:
+        nid = circ.args[nid][0]
+        neg = not neg
+    return nid, neg
+
+
+@dataclass
+class _Sched:
+    circ: Circuit
+    cmds: List[Command]
+    rows: _RowState
+    uses: Dict[int, int]
+
+    # ---- residency queries ------------------------------------------------
+    def where(self, val: Value) -> Optional[RowRef]:
+        """Find a row ref that *reads as* val.  DCC rows read both ports."""
+        node, neg = val
+        best: Optional[RowRef] = None
+        for row, row_neg in self.rows.locs.get(node, ()):
+            if row_neg == neg:
+                return (row, False) if row not in (DCC0, DCC1) else (row, False)
+            if row in (DCC0, DCC1) and row_neg == (not neg):
+                best = (row, True)   # read through the n-port
+        return best
+
+    # ---- command emission ---------------------------------------------------
+    def emit_aap(self, src: RowRef, dst: RowRef, dst_val: Value) -> None:
+        self.cmds.append(Command("AAP", src=src, dst=dst))
+        row, dneg = dst
+        # writing through n-port stores the complement at the d-port
+        node, vneg = dst_val
+        self.rows.set_row(row, (node, vneg ^ dneg))
+
+    def read_ref_value(self, ref: RowRef) -> Value:
+        row, neg = ref
+        node, rneg = self.rows.content[row]
+        return node, rneg ^ neg
+
+    # ---- staging ----------------------------------------------------------
+    def stage_cost(self, val: Value, slot: RowRef) -> int:
+        """AAPs needed to make reading `slot` yield `val`."""
+        row, slot_neg = slot
+        cur = self.rows.content.get(row)
+        if cur is not None and cur == (val[0], val[1] ^ slot_neg):
+            return 0
+        node, neg = val
+        need = (node, neg ^ slot_neg)          # what the row must hold
+        if self.where(need) is not None:
+            return 1
+        # have the complement somewhere -> route through a DCC
+        if self.where((need[0], not need[1])) is not None:
+            # writing into a DCC n-port inverts for free
+            if row in (DCC0, DCC1):
+                return 1
+            return 2
+        raise KeyError(f"value for node {node} not resident anywhere")
+
+    def stage(
+        self,
+        val: Value,
+        slot: RowRef,
+        protect: Sequence[int],
+        forbidden_rows: Sequence[int] = (),
+    ) -> None:
+        row, slot_neg = slot
+        cur = self.rows.content.get(row)
+        need = (val[0], val[1] ^ slot_neg)
+        if cur == need:
+            return
+        src = self.where(need)
+        if src is not None:
+            self._evict_rows([row], protect)
+            self.emit_aap(src, (row, False), need)
+            return
+        src = self.where((need[0], not need[1]))
+        assert src is not None, f"node {need[0]} vanished"
+        if row in (DCC0, DCC1):
+            # write through the n-port: row's d-port then holds ~value
+            self._evict_rows([row], protect)
+            self.emit_aap(src, (row, True), (need[0], not need[1]))
+            assert self.read_ref_value((row, slot_neg)) == val
+            return
+        # route through a DCC row: src -> DCCx (d-port), read DCCxn -> row.
+        # never use a DCC that belongs to the triple being staged — it may
+        # already hold a staged operand.
+        dcc = self._pick_dcc(protect_rows=list(forbidden_rows) + [row], protect=protect)
+        # both `row` and `dcc` get overwritten: evict against the full set
+        self._evict_rows([row, dcc], protect)
+        src = self.where((need[0], not need[1]))
+        assert src is not None
+        self.emit_aap(src, (dcc, False), (need[0], not need[1]))
+        self.emit_aap((dcc, True), (row, False), need)
+
+    def _pick_dcc(self, protect_rows: Sequence[int], protect: Sequence[int]) -> int:
+        for d in (DCC0, DCC1):
+            if d in protect_rows:
+                continue
+            cur = self.rows.content[d]
+            if cur is None or self.uses.get(cur[0], 0) == 0:
+                return d
+        for d in (DCC0, DCC1):
+            if d not in protect_rows:
+                return d
+        raise RuntimeError("no DCC row available")
+
+    def _evict_rows(self, rows: Sequence[int], protect: Sequence[int]) -> None:
+        """Spill any live value whose every residency lies in ``rows``
+        (all of which are about to be overwritten)."""
+        doomed = set(rows)
+        for row in rows:
+            cur = self.rows.content.get(row)
+            if cur is None:
+                continue
+            node, _neg = cur
+            if self.uses.get(node, 0) <= 0 and node not in protect:
+                continue
+            locs = self.rows.locs.get(node, set())
+            if locs and all(r in doomed for r, _ in locs):
+                scratch = self.rows.alloc_scratch()
+                self.emit_aap((row, False), (scratch, False), cur)
+
+    # ---- MAJ execution -------------------------------------------------------
+    def exec_maj(self, nid: int) -> None:
+        ops = [_normalize(self.circ, a) for a in self.circ.args[nid]]
+        # pick cheapest triple
+        best_t, best_cost, best_assign = None, None, None
+        for ti, triple in enumerate(TRIPLES):
+            # greedy operand->slot matching: try to keep resident operands
+            remaining = list(range(3))
+            assign: List[Optional[int]] = [None] * 3   # slot -> operand idx
+            # first pass: exact residents
+            for si, slot in enumerate(triple):
+                row, sneg = slot
+                cur = self.rows.content.get(row)
+                if cur is None:
+                    continue
+                for oi in remaining:
+                    node, neg = ops[oi]
+                    if cur == (node, neg ^ sneg):
+                        assign[si] = oi
+                        remaining.remove(oi)
+                        break
+            for si, slot in enumerate(triple):
+                if assign[si] is None:
+                    assign[si] = remaining.pop()
+            try:
+                cost = sum(
+                    self.stage_cost(ops[assign[si]], slot)
+                    for si, slot in enumerate(triple)
+                )
+            except KeyError:
+                continue
+            # small penalty for clobbering live-but-sole-resident values
+            for slot in triple:
+                cur = self.rows.content.get(slot[0])
+                if cur is not None and self.uses.get(cur[0], 0) > 0:
+                    others = [l for l in self.rows.locs.get(cur[0], ()) if l[0] != slot[0]]
+                    if not others and cur[0] not in [o[0] for o in ops]:
+                        cost += 1
+            if best_cost is None or cost < best_cost:
+                best_t, best_cost, best_assign = ti, cost, assign
+        assert best_t is not None
+        triple = TRIPLES[best_t]
+        protect = [o[0] for o in ops] + [nid]
+        triple_rows = [r for r, _ in triple]
+        # the AP will clobber all three rows: spill live *bystander* values
+        # (non-operands) whose every residency lies inside the triple
+        op_roots = {o[0] for o in ops}
+        for row in triple_rows:
+            cur = self.rows.content.get(row)
+            if cur is None or cur[0] in op_roots:
+                continue
+            node = cur[0]
+            if self.uses.get(node, 0) <= 0:
+                continue
+            locs = self.rows.locs.get(node, set())
+            if locs and all(r in triple_rows for r, _ in locs):
+                r0, rneg = next(iter(locs))
+                scratch = self.rows.alloc_scratch()
+                self.emit_aap((r0, False), (scratch, False), (node, rneg))
+        for si, slot in enumerate(triple):
+            self.stage(
+                ops[best_assign[si]], slot, protect=protect,
+                forbidden_rows=triple_rows,
+            )
+        # consume operand uses
+        for node, _neg in ops:
+            if node in self.uses:
+                self.uses[node] -= 1
+        # the AP clobbers ALL THREE rows: spill any still-live operand whose
+        # only residency is inside the triple before firing it
+        triple_rows = {r for r, _ in triple}
+        for node in {o[0] for o in ops}:
+            if self.uses.get(node, 0) > 0:
+                locs = self.rows.locs.get(node, set())
+                if locs and all(row in triple_rows for row, _ in locs):
+                    row, rneg = next(iter(locs))
+                    scratch = self.rows.alloc_scratch()
+                    self.emit_aap((row, False), (scratch, False), (node, rneg))
+        self.cmds.append(Command("AP", triple=best_t))
+        # all three rows now hold the MAJ result (n-port slots store complement)
+        for row, sneg in triple:
+            self.rows.set_row(row, (nid, sneg))
+        # recycle scratch of dead operands
+        for node, _neg in ops:
+            if self.uses.get(node, 0) <= 0:
+                self.rows.release_node(node)
+
+
+def compile_circuit(
+    circ: Circuit,
+    input_ids: Sequence[Sequence[int]],
+    op_name: str = "op",
+    n_bits: int = 0,
+) -> UProgram:
+    """Compile a MAJ/NOT circuit into a μProgram (Step 2)."""
+    live = circ.live_nodes()
+    for nid in live:
+        if circ.ops[nid] not in (INPUT, CONST0, CONST1, NOT, MAJ):
+            raise ValueError(
+                f"Step-2 input must be a MAJ/NOT circuit (found {circ.ops[nid]}); "
+                "run repro.core.synthesis.synthesize first"
+            )
+
+    # --- operand-to-row mapping: inputs land in consecutive D rows -----------
+    in_rows: List[List[int]] = []
+    next_row = N_SPECIAL
+    input_row_of: Dict[int, int] = {}
+    for op_bits in input_ids:
+        rows = []
+        for nid in op_bits:
+            input_row_of[nid] = next_row
+            rows.append(next_row)
+            next_row += 1
+        in_rows.append(rows)
+    # one D row per output bit, in declared order
+    flat_out_rows: List[int] = []
+    for i, _o in enumerate(circ.outputs):
+        flat_out_rows.append(next_row)
+        next_row += 1
+
+    rows = _RowState(n_scratch_base=next_row)
+    # use counts (per normalized root node) drive eviction/spill decisions
+    uses: Dict[int, int] = {}
+    for nid in live:
+        if circ.ops[nid] == MAJ:
+            for a in circ.args[nid]:
+                root, _neg = _normalize(circ, a)
+                uses[root] = uses.get(root, 0) + 1
+    for o in circ.outputs:
+        root, _neg = _normalize(circ, o)
+        uses[root] = uses.get(root, 0) + 1
+
+    sched = _Sched(circ=circ, cmds=[], rows=rows, uses=uses)
+    for nid in live:
+        op = circ.ops[nid]
+        if op == INPUT:
+            rows.set_row(input_row_of[nid], (nid, False))
+        elif op == CONST0:
+            rows.set_row(C0, (nid, False))
+            rows.content.setdefault(C0, (nid, False))
+        elif op == CONST1:
+            rows.set_row(C1, (nid, False))
+        elif op == MAJ:
+            sched.exec_maj(nid)
+        # NOT: polarity-only, no command
+
+    # --- write outputs to their D rows ---------------------------------------
+    for i, o in enumerate(circ.outputs):
+        val = _normalize(circ, o)
+        dst = flat_out_rows[i]
+        src = sched.where(val)
+        if src is not None:
+            sched.emit_aap(src, (dst, False), val)
+        else:
+            srcn = sched.where((val[0], not val[1]))
+            assert srcn is not None, f"output node {val[0]} not resident"
+            dcc = sched._pick_dcc(protect_rows=[], protect=[])
+            sched._evict_rows([dcc], protect=[val[0]])
+            sched.emit_aap(srcn, (dcc, False), (val[0], not val[1]))
+            sched.emit_aap((dcc, True), (dst, False), val)
+        uses[val[0]] = uses.get(val[0], 1) - 1
+
+    # group flat output rows back per declared output vector order
+    out_rows = [[r] for r in flat_out_rows]
+
+    return UProgram(
+        op_name=op_name,
+        n_bits=n_bits,
+        commands=sched.cmds,
+        in_rows=[list(r) for r in in_rows],
+        out_rows=out_rows,
+        n_rows_total=rows.scratch_base + rows.n_scratch,
+        n_scratch=rows.n_scratch,
+    )

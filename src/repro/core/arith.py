@@ -1,0 +1,213 @@
+"""Bit-serial arithmetic circuit builders (shared by all 16 SIMDRAM ops).
+
+Each builder exists in two *styles*:
+
+- ``"aig"``  — AND/OR/XOR/NOT gates only.  This is the "conventional"
+  description of the operation, and — after XOR expansion — exactly what the
+  **Ambit baseline** executes (Ambit hardware natively performs 2-input
+  AND/OR via a TRA with a constant row, and NOT via dual-contact cells).
+- ``"mig"``  — hand-optimized MAJ/NOT construction (e.g. the 3-MAJ full
+  adder), mirroring the paper's efficient majority-based implementations.
+  This is what **SIMDRAM** executes.
+
+Both styles share one functional definition per op, so the test-suite can
+exhaustively check them against integer oracles and against each other.
+
+Bit-shifts are *free*: a shift is a re-indexing of BitVec node lists, which
+in DRAM corresponds to changing the row indices that subsequent commands
+touch (paper §2, "by simply changing the row indices of the SIMDRAM
+commands that read the shifted data").
+"""
+
+from __future__ import annotations
+
+from typing import List, Optional, Tuple
+
+from .logic import BitVec, Circuit, const_vec
+from .synthesis import maj_full_adder
+
+
+class Gates:
+    """Style-dispatched gate builder over a :class:`Circuit`."""
+
+    def __init__(self, circuit: Circuit, style: str = "mig"):
+        assert style in ("aig", "mig")
+        self.c = circuit
+        self.style = style
+
+    # primitive gates ----------------------------------------------------
+    def NOT(self, a: int) -> int:
+        return self.c.NOT(a)
+
+    def AND(self, a: int, b: int) -> int:
+        if self.style == "mig":
+            return self.c.MAJ(a, b, self.c.const(0))
+        return self.c.AND(a, b)
+
+    def OR(self, a: int, b: int) -> int:
+        if self.style == "mig":
+            return self.c.MAJ(a, b, self.c.const(1))
+        return self.c.OR(a, b)
+
+    def XOR(self, a: int, b: int) -> int:
+        if self.style == "mig":
+            nand = self.c.NOT(self.c.MAJ(a, b, self.c.const(0)))
+            orr = self.c.MAJ(a, b, self.c.const(1))
+            return self.c.MAJ(nand, orr, self.c.const(0))
+        return self.c.XOR(a, b)
+
+    def XNOR(self, a: int, b: int) -> int:
+        return self.c.NOT(self.XOR(a, b))
+
+    def MUX(self, sel: int, t: int, f: int) -> int:
+        """sel ? t : f"""
+        if self.style == "mig":
+            at = self.c.MAJ(sel, t, self.c.const(0))
+            af = self.c.MAJ(self.c.NOT(sel), f, self.c.const(0))
+            return self.c.MAJ(at, af, self.c.const(1))
+        return self.c.MUX(sel, t, f)
+
+    def full_adder(self, a: int, b: int, cin: int) -> Tuple[int, int]:
+        """returns (sum, carry)."""
+        if self.style == "mig":
+            return maj_full_adder(self.c, a, b, cin)
+        s1 = self.c.XOR(a, b)
+        s = self.c.XOR(s1, cin)
+        carry = self.c.OR(self.c.AND(a, b), self.c.AND(s1, cin))
+        return s, carry
+
+    # vector helpers -------------------------------------------------------
+    def not_vec(self, x: BitVec) -> BitVec:
+        return BitVec([self.NOT(b) for b in x.bits])
+
+    def and_vec(self, x: BitVec, y: BitVec) -> BitVec:
+        return BitVec([self.AND(a, b) for a, b in zip(x.bits, y.bits)])
+
+    def mux_vec(self, sel: int, t: BitVec, f: BitVec) -> BitVec:
+        return BitVec([self.MUX(sel, a, b) for a, b in zip(t.bits, f.bits)])
+
+    def broadcast_and(self, bit: int, x: BitVec) -> BitVec:
+        return BitVec([self.AND(bit, b) for b in x.bits])
+
+    # arithmetic ------------------------------------------------------------
+    def add(self, x: BitVec, y: BitVec, cin: Optional[int] = None) -> Tuple[BitVec, int]:
+        """Ripple-carry add; returns (sum, carry_out). Widths must match."""
+        assert len(x) == len(y)
+        carry = cin if cin is not None else self.c.const(0)
+        out: List[int] = []
+        for a, b in zip(x.bits, y.bits):
+            s, carry = self.full_adder(a, b, carry)
+            out.append(s)
+        return BitVec(out), carry
+
+    def neg(self, x: BitVec) -> BitVec:
+        s, _ = self.add(self.not_vec(x), const_vec(self.c, 0, len(x)), cin=self.c.const(1))
+        return s
+
+    def sub(self, x: BitVec, y: BitVec) -> Tuple[BitVec, int]:
+        """x - y; returns (diff, carry_out). carry_out=1 ⇔ x >= y (unsigned)."""
+        return self.add(x, self.not_vec(y), cin=self.c.const(1))
+
+    def uge(self, x: BitVec, y: BitVec) -> int:
+        _, cout = self.sub(x, y)
+        return cout
+
+    def ugt(self, x: BitVec, y: BitVec) -> int:
+        return self.NOT(self.uge(y, x))
+
+    def _flip_msb(self, x: BitVec) -> BitVec:
+        return BitVec(x.bits[:-1] + [self.NOT(x.msb)])
+
+    def sge(self, x: BitVec, y: BitVec) -> int:
+        """signed x >= y: flip sign bits, compare unsigned."""
+        return self.uge(self._flip_msb(x), self._flip_msb(y))
+
+    def sgt(self, x: BitVec, y: BitVec) -> int:
+        return self.ugt(self._flip_msb(x), self._flip_msb(y))
+
+    def eq(self, x: BitVec, y: BitVec) -> int:
+        acc = self.c.const(1)
+        for a, b in zip(x.bits, y.bits):
+            acc = self.AND(acc, self.XNOR(a, b))
+        return acc
+
+    def zero_extend(self, x: BitVec, n: int) -> BitVec:
+        return BitVec(x.bits + [self.c.const(0)] * (n - len(x)))
+
+    def shift_left(self, x: BitVec, k: int) -> BitVec:
+        """Free shift: row re-indexing (drops high bits, zero-fills low)."""
+        return BitVec([self.c.const(0)] * k + x.bits[: len(x) - k])
+
+    def mul(self, x: BitVec, y: BitVec) -> BitVec:
+        """Unsigned shift-add multiply -> 2n-bit product."""
+        n, m = len(x), len(y)
+        width = n + m
+        acc = const_vec(self.c, 0, width)
+        yz = self.zero_extend(y, width)
+        for i, xb in enumerate(x.bits):
+            addend = BitVec(
+                [self.c.const(0)] * i
+                + [self.AND(xb, b) for b in yz.bits[: width - i]]
+            )
+            acc, _ = self.add(acc, addend)
+        return acc
+
+    def divmod(self, x: BitVec, y: BitVec) -> Tuple[BitVec, BitVec]:
+        """Unsigned restoring division -> (quotient, remainder).
+
+        Division by zero yields q = all-ones, r = x (hardware convention).
+        """
+        n = len(x)
+        w = n + 1  # partial remainder width
+        r = const_vec(self.c, 0, w)
+        d = self.zero_extend(y, w)
+        qbits: List[int] = [self.c.const(0)] * n
+        for i in reversed(range(n)):
+            # r = (r << 1) | x_i
+            r = BitVec([x.bits[i]] + r.bits[:-1])
+            t, cout = self.sub(r, d)  # cout=1 ⇔ r >= d
+            qbits[i] = cout
+            r = self.mux_vec(cout, t, r)
+        return BitVec(qbits), BitVec(r.bits[:n])
+
+    def popcount(self, bits: List[int], out_width: int) -> BitVec:
+        """Sum of single bits -> out_width-bit count.
+
+        Carry-save (Wallace) tree of 3:2 compressors: every full adder
+        folds three weight-w bits into one weight-w sum + one weight-2w
+        carry — and the carry is a single MAJ, the substrate's native
+        gate.  ~n FAs total vs the naive ripple accumulator's n·log n
+        (bitcount-8 μProgram: 534 → ~230 activations; see EXPERIMENTS.md
+        §Paper-domain perf)."""
+        columns: List[List[int]] = [list(bits)]
+        w = 0
+        while True:
+            # compress column w until ≤ 2 bits remain in it
+            while len(columns[w]) > 2:
+                a = columns[w].pop()
+                b = columns[w].pop()
+                if len(columns[w]) >= 1:
+                    cc = columns[w].pop()
+                    s, carry = self.full_adder(a, b, cc)
+                else:
+                    s = self.XOR(a, b)
+                    carry = self.AND(a, b)
+                columns[w].append(s)
+                if len(columns) <= w + 1:
+                    columns.append([])
+                columns[w + 1].append(carry)
+            if len(columns[w]) == 2:
+                a = columns[w].pop()
+                b = columns[w].pop()
+                s = self.XOR(a, b)
+                carry = self.AND(a, b)
+                columns[w].append(s)
+                if len(columns) <= w + 1:
+                    columns.append([])
+                columns[w + 1].append(carry)
+            if w + 1 >= len(columns):
+                break
+            w += 1
+        out = [col[0] if col else self.c.const(0) for col in columns]
+        out = out[:out_width] + [self.c.const(0)] * max(0, out_width - len(out))
+        return BitVec(out)

@@ -1,0 +1,178 @@
+"""TPU-native bit-plane backend (the hardware adaptation of SIMDRAM).
+
+Vertical layout on TPU: an array of N k-bit lanes is stored as a
+``(k, ceil(N/32))`` uint32 tensor — bit-plane *j* holds bit *j* of every
+lane, 32 lanes per word.  This is exactly SIMDRAM's vertical DRAM layout
+with "DRAM row" ↦ "bit-plane row", and it turns every VPU bitwise
+instruction into a 32·8·128-lane SIMD bit-operation (one 8×128 vreg of
+uint32).
+
+MAJ/NOT programs execute as straight-line bitwise ops::
+
+    MAJ(a,b,c) = (a & b) | (a & c) | (b & c)      # TRA analogue
+    NOT(a)     = ~a                                # DCC analogue
+
+Unlike the DRAM substrate there is no row-count constraint, so the
+*circuit* (Step-1 output) is executed directly — XLA fuses the whole
+straight-line program into one elementwise kernel.  The μProgram path
+(:mod:`repro.core.control_unit`) exists to model the real hardware; this
+module is the performance path, and :mod:`repro.kernels` provides the
+Pallas-tiled versions of the hot loops.
+
+Everything here is pure-jnp and jit-friendly; functions are cached per
+(op, n_bits) so circuits are built once.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .logic import Circuit
+from .ops_library import OpSpec, get_op
+from .synthesis import synthesize
+
+_ONE = jnp.uint32(0xFFFFFFFF)
+_ZERO = jnp.uint32(0)
+
+
+# ---------------------------------------------------------------------------
+# vertical layout conversion (the "transposition unit", jnp reference path)
+# ---------------------------------------------------------------------------
+
+def pack(values: jax.Array, n_bits: int) -> jax.Array:
+    """Horizontal -> vertical: (..., N) int -> (..., n_bits, N//32) uint32.
+
+    N must be a multiple of 32 (pad lanes first).  Lane *l* maps to bit
+    ``l % 32`` of word ``l // 32`` in every plane.
+    """
+    n = values.shape[-1]
+    assert n % 32 == 0, f"lane count {n} must be a multiple of 32"
+    v = values.astype(jnp.uint32)
+    words = v.reshape(*v.shape[:-1], n // 32, 32)
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+
+    def plane(j):
+        bits = (words >> jnp.uint32(j)) & jnp.uint32(1)
+        return (bits << shifts).sum(axis=-1, dtype=jnp.uint32)
+
+    planes = [plane(j) for j in range(n_bits)]
+    return jnp.stack(planes, axis=-2)
+
+
+def unpack(planes: jax.Array, signed: bool = False, dtype=jnp.int32) -> jax.Array:
+    """Vertical -> horizontal: (..., n_bits, W) uint32 -> (..., 32*W) ints."""
+    n_bits = planes.shape[-2]
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    acc = None
+    for j in range(n_bits):
+        w = planes[..., j, :]
+        bits = (w[..., None] >> shifts) & jnp.uint32(1)
+        bits = bits.reshape(*w.shape[:-1], -1).astype(jnp.uint32)
+        contrib = bits << jnp.uint32(j)
+        acc = contrib if acc is None else acc | contrib
+    if signed and 1 < n_bits < 32:
+        sign = (acc >> jnp.uint32(n_bits - 1)) & jnp.uint32(1)
+        out = acc.astype(jnp.int32) - (sign.astype(jnp.int32) << n_bits)
+    else:
+        # n_bits == 32: two's-complement view of the word is already signed
+        out = acc.astype(jnp.int32) if signed else acc
+        out = out.astype(jnp.int32)
+    return out.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# circuit execution on bit-planes
+# ---------------------------------------------------------------------------
+
+def execute_circuit(
+    circ: Circuit,
+    input_ids: Sequence[Sequence[int]],
+    operand_planes: Sequence[jax.Array],
+) -> List[jax.Array]:
+    """Run a circuit where operand *i*'s bit-planes feed its input nodes.
+
+    ``operand_planes[i]`` has shape (width_i, W).  Returns one (W,) plane
+    per circuit output (callers restack into output vectors).
+    """
+    w = operand_planes[0].shape[-1]
+    zero = jnp.zeros((w,), jnp.uint32)
+    one = jnp.full((w,), _ONE)
+    inputs = {}
+    for ids, planes in zip(input_ids, operand_planes):
+        for j, nid in enumerate(ids):
+            inputs[nid] = planes[j]
+    return circ.evaluate_outputs(inputs, zero, one)
+
+
+@functools.lru_cache(maxsize=256)
+def _compiled_op(name: str, n_bits: int, optimize: bool = True):
+    """Build + synthesize an op circuit once; returns (spec, circ, ids)."""
+    spec = get_op(name, n_bits)
+    circ, ids = spec.build("mig")
+    if optimize:
+        opt, _rep = synthesize(circ)
+        name2id = {opt.names[i]: i for i in range(len(opt.ops)) if opt.ops[i] == "in"}
+        ids = [[name2id[circ.names[nid]] for nid in op] for op in ids]
+        circ = opt
+    return spec, circ, ids
+
+
+def op_on_planes(name: str, n_bits: int, *operand_planes: jax.Array) -> List[jax.Array]:
+    """Execute a SIMDRAM op on vertical-layout operands.
+
+    Returns one (out_width_o, W) plane-stack per output.
+    """
+    spec, circ, ids = _compiled_op(name, n_bits)
+    flat = execute_circuit(circ, ids, operand_planes)
+    outs: List[jax.Array] = []
+    pos = 0
+    for wdt in spec.out_bits:
+        outs.append(jnp.stack(flat[pos: pos + wdt]))
+        pos += wdt
+    return outs
+
+
+# Horizontal-in/horizontal-out convenience (pack → op → unpack).
+#
+# NOTE on jit: the unrolled circuit for wide multiply/divide is hundreds of
+# tiny elementwise HLOs; XLA-CPU's fusion pass goes pathological on such
+# graphs (minutes of compile for zero runtime benefit at test sizes).  The
+# eager path executes the same jnp ops immediately and is plenty for
+# correctness work; on TPU the Pallas kernels (repro.kernels) are the
+# performance path, with the circuit unrolled *inside* one kernel where it
+# belongs.  Use jit=True explicitly for small circuits if desired.
+
+def _bbop_padded(name: str, n_bits: int, *operands: jax.Array, signed_out: bool = False):
+    spec, _, _ = _compiled_op(name, n_bits)
+    planes = [pack(op, w) for op, w in zip(operands, spec.operand_bits)]
+    outs = op_on_planes(name, n_bits, *planes)
+    res = [unpack(o, signed=signed_out) for o in outs]
+    return res[0] if len(res) == 1 else tuple(res)
+
+
+_bbop_jitted = jax.jit(_bbop_padded, static_argnames=("name", "n_bits", "signed_out"))
+
+
+def bbop(name: str, n_bits: int, *operands: jax.Array, signed_out: bool = False,
+         jit: bool = False):
+    """Horizontal-in/out SIMDRAM op; pads lane count to a multiple of 32."""
+    n = operands[0].shape[-1]
+    padded = (n + 31) // 32 * 32
+    if padded != n:
+        operands = tuple(
+            jnp.pad(jnp.asarray(o), [(0, 0)] * (jnp.asarray(o).ndim - 1) + [(0, padded - n)])
+            for o in operands
+        )
+    fn = _bbop_jitted if jit else _bbop_padded
+    res = fn(name, n_bits, *operands, signed_out=signed_out)
+    if padded != n:
+        if isinstance(res, tuple):
+            res = tuple(r[..., :n] for r in res)
+        else:
+            res = res[..., :n]
+    return res

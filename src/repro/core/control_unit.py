@@ -1,0 +1,106 @@
+"""SIMDRAM Step 3: the control unit that executes μPrograms.
+
+The paper places a small control unit in the memory controller that replays
+a stored command sequence ("μProgram memory") whenever the CPU issues a
+``bbop`` instruction.  The crucial property: the *same hardware* executes
+*any* μProgram — programs are data, not logic.
+
+We reproduce that property in JAX: :func:`encode_uprogram` turns a
+μProgram into a dense ``(n_cmds, 13)`` int32 command table, and
+:func:`make_interpreter` builds ONE jitted ``lax.scan`` interpreter whose
+compiled XLA executable is reused for every operation of the same table
+shape — swapping the command table (an input array) never triggers
+recompilation.  This is the JAX-native analogue of "add a new operation
+without hardware changes".
+
+Command word layout (int32 × 13)::
+
+  [ is_ap,  r0, n0,  r1, n1,  r2, n2,  w0, nw0,  w1, nw1,  w2, nw2 ]
+
+  AAP src→dst :  is_ap=0, (r0,n0)=src port, writes w0..w2 = dst (repeated)
+  AP  triple  :  is_ap=1, reads = writes = the triple's three ports
+
+Port semantics match :class:`repro.core.subarray.Subarray` exactly: a
+``neg`` port reads/writes the complement (dual-contact cell).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .uprogram import TRIPLES, Command, UProgram
+
+CMD_WIDTH = 13
+_FULL = np.uint32(0xFFFFFFFF)
+
+
+def encode_uprogram(uprog: UProgram) -> np.ndarray:
+    """μProgram -> (n_cmds, 13) int32 command table."""
+    rows = []
+    for c in uprog.commands:
+        if c.kind == "AAP":
+            (rs, ns), (rd, nd) = c.src, c.dst
+            rows.append([0, rs, ns, rs, ns, rs, ns, rd, nd, rd, nd, rd, nd])
+        else:
+            t = TRIPLES[c.triple]
+            flat: list = [1]
+            for r, n in t:
+                flat += [r, int(n)]
+            for r, n in t:
+                flat += [r, int(n)]
+            rows.append(flat)
+    return np.asarray(rows, dtype=np.int32)
+
+
+def _step(state: jnp.ndarray, cmd: jnp.ndarray) -> Tuple[jnp.ndarray, None]:
+    """Execute one command word on the (n_rows, n_words) uint32 state."""
+    is_ap = cmd[0].astype(jnp.uint32)
+
+    def read(r, n):
+        v = state[r]
+        return v ^ (n.astype(jnp.uint32) * jnp.uint32(0xFFFFFFFF))
+
+    v0 = read(cmd[1], cmd[2])
+    v1 = read(cmd[3], cmd[4])
+    v2 = read(cmd[5], cmd[6])
+    maj = (v0 & v1) | (v0 & v2) | (v1 & v2)
+    val = jnp.where(is_ap.astype(bool), maj, v0)
+
+    def write(st, r, n):
+        out = val ^ (n.astype(jnp.uint32) * jnp.uint32(0xFFFFFFFF))
+        return st.at[r].set(out)
+
+    state = write(state, cmd[7], cmd[8])
+    state = write(state, cmd[9], cmd[10])
+    state = write(state, cmd[11], cmd[12])
+    return state, None
+
+
+@functools.partial(jax.jit, donate_argnums=0)
+def run_command_table(state: jnp.ndarray, table: jnp.ndarray) -> jnp.ndarray:
+    """The control unit: scan the command table over the subarray state.
+
+    jit signature depends only on shapes — any μProgram with the same
+    command count reuses the compiled executable; different counts compile
+    one interpreter each (bounded by the op library size, like the paper's
+    μProgram memory).
+    """
+    state, _ = jax.lax.scan(_step, state, table)
+    return state
+
+
+def make_interpreter():
+    """Return a fresh (non-donating) interpreter for repeated use on the
+    same buffers in tests."""
+
+    @jax.jit
+    def run(state, table):
+        state, _ = jax.lax.scan(_step, state, table)
+        return state
+
+    return run

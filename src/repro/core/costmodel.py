@@ -1,0 +1,73 @@
+"""Offload decision cost model (paper §4: when is PuM worth it?).
+
+An operation on N elements can run (a) on the host (CPU/TPU side of the
+system — bandwidth-bound stream) or (b) in DRAM via SIMDRAM.  Offloading
+pays the transposition cost for any operand not already vertical, plus the
+μProgram latency; it wins when data is large, already resident vertically,
+or reused across several PuM ops (amortized transpose).
+
+`decide()` returns the plan with estimated times — used by the LM-stack
+PuM integration to route quantized elementwise stages, and testable on its
+own (monotonicity properties in tests/test_costmodel.py).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional
+
+from .isa import compile_op
+from .timing import DDR4, CPU_BASELINE, DramConfig, HostConfig, host_throughput_gops, uprogram_latency_s
+from .transpose import transpose_cost_s
+
+
+@dataclass(frozen=True)
+class OffloadPlan:
+    op: str
+    n_bits: int
+    n_elems: int
+    host_s: float
+    pum_compute_s: float
+    pum_transpose_s: float
+    offload: bool
+
+    @property
+    def pum_total_s(self) -> float:
+        return self.pum_compute_s + self.pum_transpose_s
+
+    @property
+    def speedup(self) -> float:
+        return self.host_s / max(self.pum_total_s, 1e-30)
+
+
+def decide(
+    op: str,
+    n_bits: int,
+    n_elems: int,
+    operands_vertical: int = 0,
+    result_stays_vertical: bool = False,
+    cfg: DramConfig = DDR4,
+    host: HostConfig = CPU_BASELINE,
+) -> OffloadPlan:
+    spec, uprog = compile_op(op, n_bits)
+    n_inv = max(1, -(-n_elems // cfg.simd_lanes))  # ceil-div
+    pum_compute = uprogram_latency_s(uprog, cfg) * n_inv
+
+    n_ops_to_transpose = max(0, spec.n_operands - operands_vertical)
+    t_in = transpose_cost_s(n_elems * n_ops_to_transpose, n_bits, cfg)
+    t_out = 0.0 if result_stays_vertical else transpose_cost_s(
+        n_elems * len(spec.out_bits), max(spec.out_bits), cfg
+    )
+
+    host_s = n_elems / (host_throughput_gops(
+        n_bits, spec.n_operands, len(spec.out_bits), host
+    ) * 1e9)
+
+    plan = OffloadPlan(
+        op=op, n_bits=n_bits, n_elems=n_elems,
+        host_s=host_s,
+        pum_compute_s=pum_compute,
+        pum_transpose_s=t_in + t_out,
+        offload=False,
+    )
+    return OffloadPlan(**{**plan.__dict__, "offload": plan.pum_total_s < host_s})

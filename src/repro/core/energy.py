@@ -1,0 +1,47 @@
+"""DRAM energy model (paper §5: energy vs Ambit / CPU / GPU).
+
+Per-command energy derived from DDR4 IDD-based activation costs as used by
+the Ambit and SIMDRAM evaluations:
+
+  E_act+pre (one row activation + precharge cycle)  ≈ 0.909 nJ
+  AAP = 2 activations  → 2·E_act + overhead
+  AP  = 1 (triple) activation
+
+Triple-row activation opens one physical row's worth of sense amplifiers,
+so its activation energy is modelled as 1× E_act (the three cells share
+charge on the same bitline — no extra bitline swing), matching the paper's
+"AP ≈ ACT" accounting.
+
+Host (CPU/GPU) energy per element = bytes_moved × E_DRAM_per_byte +
+core energy from the streaming-power model in :mod:`repro.core.timing`.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from .timing import CPU_BASELINE, GPU_BASELINE, DDR4, DramConfig, HostConfig, host_throughput_gops
+from .uprogram import UProgram
+
+E_ACT_NJ = 0.909          # one ACT+PRE cycle, whole 8KiB row
+DRAM_PJ_PER_BYTE = 39.0   # off-chip DRAM access energy (pJ/B), incl. I/O
+
+
+def uprogram_energy_nj(up: UProgram, cfg: DramConfig = DDR4) -> float:
+    """Energy of one μProgram invocation on ONE subarray (all lanes)."""
+    return up.n_aap * 2 * E_ACT_NJ + up.n_ap * E_ACT_NJ
+
+
+def energy_per_elem_pj(up: UProgram, cfg: DramConfig = DDR4) -> float:
+    lanes = cfg.columns_per_subarray
+    return uprogram_energy_nj(up, cfg) * 1e3 / lanes
+
+
+def host_energy_per_elem_pj(
+    n_bits: int, n_operands: int, n_outputs: int, host: HostConfig
+) -> float:
+    bytes_per_elem = (n_operands + n_outputs) * n_bits / 8.0
+    e_dram = bytes_per_elem * DRAM_PJ_PER_BYTE
+    gops = host_throughput_gops(n_bits, n_operands, n_outputs, host)
+    e_core = host.power_w / (gops * 1e9) * 1e12  # pJ per element
+    return e_dram + e_core

@@ -1,0 +1,220 @@
+"""SIMDRAM ISA surface (``bbop_*``) + backend dispatch.
+
+The paper extends the host ISA with instructions that (1) set up / convert
+data layout (``bbop_trsp_init``) and (2) trigger in-DRAM execution of a
+named operation (``bbop_op``).  This module is the programmer-facing
+equivalent: a registry of operations, a per-(op, width) compilation cache
+("μProgram memory"), and a backend switch:
+
+  backend="subarray"   faithful row-granular DRAM simulation (numpy oracle)
+  backend="interp"     JAX scan/switch control-unit interpreter (Step 3)
+  backend="bitplane"   TPU-native fused bit-plane execution (fast path)
+  backend="pallas"     Pallas-tiled bit-plane kernels (see repro.kernels)
+
+All backends implement identical semantics; tests cross-check them.
+:class:`SimdramDevice` carries the DRAM config and accumulates per-call
+command/energy statistics so application kernels can report the paper's
+throughput/energy numbers from real executions.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import bitplane
+from .allocation import compile_circuit
+from .control_unit import encode_uprogram, make_interpreter
+from .energy import energy_per_elem_pj, uprogram_energy_nj
+from .ops_library import OpSpec, get_op
+from .subarray import pack_bits, run_op, unpack_bits
+from .synthesis import synthesize, to_mig
+from .timing import DDR4, DramConfig, throughput_gops, uprogram_latency_s
+from .uprogram import UProgram
+
+
+@functools.lru_cache(maxsize=512)
+def compile_op(name: str, n_bits: int, style: str = "mig") -> Tuple[OpSpec, UProgram]:
+    """Steps 1+2 for one op: circuit -> optimized MIG -> μProgram.
+
+    ``style="mig"`` is the SIMDRAM pipeline; ``style="aig"`` compiles the
+    AND/OR/NOT description (the Ambit baseline executes this program).
+    """
+    spec = get_op(name, n_bits)
+    circ, ids = spec.build(style)
+    if style == "mig":
+        opt, _ = synthesize(circ)
+    else:
+        opt = to_mig(circ)   # naive translation: AND/OR cost 1 TRA each, XOR expands
+    name2id = {opt.names[i]: i for i in range(len(opt.ops)) if opt.ops[i] == "in"}
+    ids_m = [[name2id[circ.names[nid]] for nid in op] for op in ids]
+    uprog = compile_circuit(opt, ids_m, op_name=name, n_bits=n_bits)
+    return spec, uprog
+
+
+def compile_shift(n_bits: int, k: int) -> Tuple[None, UProgram]:
+    """Bit-shift as pure row re-indexing — ZERO DRAM commands (paper §2:
+    "by simply changing the row indices of the SIMDRAM commands that read
+    the shifted data").  Vacated bit positions read the constant C0 row."""
+    from .uprogram import C0, N_SPECIAL
+    in_rows = [[N_SPECIAL + j for j in range(n_bits)]]
+    out_rows = []
+    for j in range(n_bits):
+        src = j - k                      # left shift by k: out[j] = in[j-k]
+        out_rows.append([in_rows[0][src] if 0 <= src < n_bits else C0])
+    return None, UProgram(
+        op_name=f"shift_{k}", n_bits=n_bits, commands=[],
+        in_rows=in_rows, out_rows=out_rows,
+        n_rows_total=N_SPECIAL + n_bits, n_scratch=0,
+    )
+
+
+@dataclass
+class CallStats:
+    op: str
+    n_bits: int
+    elements: int
+    aap: int
+    ap: int
+    latency_s: float
+    energy_nj: float
+
+
+@dataclass
+class SimdramDevice:
+    """A SIMDRAM-enabled memory device: executes bbops, tracks costs."""
+
+    cfg: DramConfig = field(default_factory=lambda: DDR4)
+    backend: str = "bitplane"
+    style: str = "mig"
+    calls: List[CallStats] = field(default_factory=list)
+
+    def _account(self, name: str, n_bits: int, uprog: UProgram, elements: int):
+        n_invocations = int(np.ceil(elements / self.cfg.simd_lanes)) or 1
+        per_sub = self.cfg.n_banks * self.cfg.subarrays_per_bank
+        self.calls.append(
+            CallStats(
+                op=name,
+                n_bits=n_bits,
+                elements=elements,
+                aap=uprog.n_aap * n_invocations,
+                ap=uprog.n_ap * n_invocations,
+                latency_s=uprogram_latency_s(uprog, self.cfg) * n_invocations,
+                energy_nj=uprogram_energy_nj(uprog, self.cfg) * n_invocations * per_sub,
+            )
+        )
+
+    def bbop_shift(self, x, k: int, n_bits: int):
+        """Left-shift by k (k<0 = right): zero commands, zero latency."""
+        _, uprog = compile_shift(n_bits, k)
+        self._account(uprog.op_name, n_bits, uprog,
+                      int(np.asarray(x).shape[-1]))
+        outs = run_op(uprog, [n_bits],
+                      [np.asarray(x).astype(np.uint64)],
+                      n_columns=_round_up(int(np.asarray(x).shape[-1]), 32))
+        return outs[0].astype(np.int64)
+
+    # -- the bbop instruction ------------------------------------------------
+    def bbop(self, name: str, *operands, n_bits: int, signed_out: bool = False):
+        """Execute one SIMDRAM operation over flat integer operands."""
+        spec, uprog = compile_op(name, n_bits, self.style)
+        elements = int(np.asarray(operands[0]).shape[-1])
+        self._account(name, n_bits, uprog, elements)
+
+        if self.backend == "subarray":
+            outs = run_op(
+                uprog, spec.out_bits,
+                [np.asarray(o).astype(np.uint64) for o in operands],
+                n_columns=_round_up(elements, 32),
+            )
+            outs = [o.astype(np.int64) for o in outs]
+            if signed_out:
+                outs = [_np_signed(o, w) for o, w in zip(outs, spec.out_bits)]
+            return outs[0] if len(outs) == 1 else tuple(outs)
+
+        if self.backend == "interp":
+            return self._run_interp(spec, uprog, operands, signed_out)
+
+        # bitplane / pallas: fused circuit execution (pallas swaps the
+        # elementwise executor for the tiled kernel in repro.kernels.ops)
+        if self.backend == "pallas":
+            from repro.kernels import ops as kops
+            return kops.bbop_pallas(name, n_bits, *operands, signed_out=signed_out)
+        return bitplane.bbop(name, n_bits, *operands, signed_out=signed_out)
+
+    def _run_interp(self, spec, uprog, operands, signed_out):
+        elements = int(np.asarray(operands[0]).shape[-1])
+        cols = _round_up(elements, 32)
+        state = np.zeros((uprog.n_rows_total, cols // 32), dtype=np.uint32)
+        state[7] = 0xFFFFFFFF  # C1
+        for op_idx, rows in enumerate(uprog.in_rows):
+            planes = pack_bits(
+                np.asarray(operands[op_idx]).astype(np.uint64), len(rows), cols
+            )
+            for j, r in enumerate(rows):
+                state[r] = planes[j]
+        table = encode_uprogram(uprog)
+        run = _cached_interpreter()
+        out_state = np.asarray(run(jnp.asarray(state), jnp.asarray(table)))
+        outs = []
+        pos = 0
+        for w in spec.out_bits:
+            rows = [uprog.out_rows[pos + j][0] for j in range(w)]
+            planes = np.stack([out_state[r] for r in rows])
+            vals = unpack_bits(planes, elements).astype(np.int64)
+            if signed_out:
+                vals = _np_signed(vals, w)
+            outs.append(vals)
+            pos += w
+        return outs[0] if len(outs) == 1 else tuple(outs)
+
+    # -- reporting -------------------------------------------------------------
+    def totals(self) -> Dict[str, float]:
+        return {
+            "calls": len(self.calls),
+            "aap": sum(c.aap for c in self.calls),
+            "ap": sum(c.ap for c in self.calls),
+            "latency_s": sum(c.latency_s for c in self.calls),
+            "energy_mj": sum(c.energy_nj for c in self.calls) * 1e-6,
+        }
+
+    def reset(self):
+        self.calls.clear()
+
+
+@functools.lru_cache(maxsize=1)
+def _cached_interpreter():
+    return make_interpreter()
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def _np_signed(x: np.ndarray, n_bits: int) -> np.ndarray:
+    x = x.astype(np.int64) & ((1 << n_bits) - 1)
+    return np.where(x >= (1 << (n_bits - 1)), x - (1 << n_bits), x)
+
+
+# module-level convenience: the 16 ops as bbop_<name> on a default device
+_default_device = SimdramDevice()
+
+
+def default_device() -> SimdramDevice:
+    return _default_device
+
+
+def __getattr__(attr: str):
+    if attr.startswith("bbop_"):
+        op = attr[len("bbop_"):]
+        def call(*operands, n_bits: int, signed_out: bool = False, device=None):
+            dev = device or _default_device
+            return dev.bbop(op, *operands, n_bits=n_bits, signed_out=signed_out)
+        call.__name__ = attr
+        return call
+    raise AttributeError(attr)

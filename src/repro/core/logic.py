@@ -1,0 +1,293 @@
+"""Logic-circuit IR for SIMDRAM Step 1.
+
+A :class:`Circuit` is a DAG of gates over {INPUT, CONST0, CONST1, NOT, AND,
+OR, XOR, MAJ}.  Operations are first described with AND/OR/XOR/NOT (an
+AIG-style description, the "conventional" implementation the paper starts
+from) and then rewritten by :mod:`repro.core.synthesis` into the MAJ/NOT
+basis that maps 1:1 onto DRAM triple-row activations.
+
+Nodes are integers (indices into parallel arrays).  The builder performs
+hash-consing (structural dedup) and local constant folding, so equivalent
+sub-circuits are shared — this mirrors the "optimized implementation"
+requirement of SIMDRAM Step 1 and keeps μPrograms short.
+
+Evaluation is generic over any object supporting ``& | ^ ~`` (python ints,
+numpy uint64 truth-table words, jnp uint32 bit-plane vectors), which is what
+lets the same IR serve as: truth-table oracle, DRAM-simulator program, and
+TPU bit-plane program.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+# Gate opcodes ---------------------------------------------------------------
+INPUT = "in"
+CONST0 = "c0"
+CONST1 = "c1"
+NOT = "not"
+AND = "and"
+OR = "or"
+XOR = "xor"
+MAJ = "maj"
+
+_COMMUTATIVE = {AND, OR, XOR, MAJ}
+AIG_OPS = (NOT, AND, OR, XOR)
+MIG_OPS = (NOT, MAJ)
+
+
+@dataclass
+class Circuit:
+    """Mutable gate DAG with hash-consing and peephole simplification."""
+
+    ops: List[str] = field(default_factory=list)
+    args: List[Tuple[int, ...]] = field(default_factory=list)
+    names: List[Optional[str]] = field(default_factory=list)
+    outputs: List[int] = field(default_factory=list)
+    output_names: List[str] = field(default_factory=list)
+    _cache: Dict[Tuple, int] = field(default_factory=dict)
+    _c0: Optional[int] = None
+    _c1: Optional[int] = None
+
+    # -- construction ---------------------------------------------------
+    def _raw(self, op: str, args: Tuple[int, ...], name: Optional[str] = None) -> int:
+        key = (op, tuple(sorted(args)) if op in _COMMUTATIVE else args)
+        if op != INPUT and key in self._cache:
+            return self._cache[key]
+        nid = len(self.ops)
+        self.ops.append(op)
+        self.args.append(args)
+        self.names.append(name)
+        if op != INPUT:
+            self._cache[key] = nid
+        return nid
+
+    def input(self, name: str) -> int:
+        return self._raw(INPUT, (), name)
+
+    def const(self, v: int) -> int:
+        if v:
+            if self._c1 is None:
+                self._c1 = self._raw(CONST1, ())
+            return self._c1
+        if self._c0 is None:
+            self._c0 = self._raw(CONST0, ())
+        return self._c0
+
+    def is_const(self, nid: int) -> Optional[int]:
+        if self.ops[nid] == CONST0:
+            return 0
+        if self.ops[nid] == CONST1:
+            return 1
+        return None
+
+    # -- gates with peephole simplification ------------------------------
+    def NOT(self, a: int) -> int:
+        if self.ops[a] == NOT:
+            return self.args[a][0]
+        c = self.is_const(a)
+        if c is not None:
+            return self.const(1 - c)
+        return self._raw(NOT, (a,))
+
+    def _compl(self, a: int, b: int) -> bool:
+        """True iff b == NOT(a) structurally."""
+        return (self.ops[b] == NOT and self.args[b][0] == a) or (
+            self.ops[a] == NOT and self.args[a][0] == b
+        )
+
+    def AND(self, a: int, b: int) -> int:
+        if a == b:
+            return a
+        if self._compl(a, b):
+            return self.const(0)
+        for x, y in ((a, b), (b, a)):
+            c = self.is_const(x)
+            if c == 0:
+                return self.const(0)
+            if c == 1:
+                return y
+        return self._raw(AND, (a, b))
+
+    def OR(self, a: int, b: int) -> int:
+        if a == b:
+            return a
+        if self._compl(a, b):
+            return self.const(1)
+        for x, y in ((a, b), (b, a)):
+            c = self.is_const(x)
+            if c == 1:
+                return self.const(1)
+            if c == 0:
+                return y
+        return self._raw(OR, (a, b))
+
+    def XOR(self, a: int, b: int) -> int:
+        if a == b:
+            return self.const(0)
+        if self._compl(a, b):
+            return self.const(1)
+        for x, y in ((a, b), (b, a)):
+            c = self.is_const(x)
+            if c == 0:
+                return y
+            if c == 1:
+                return self.NOT(y)
+        return self._raw(XOR, (a, b))
+
+    def MAJ(self, a: int, b: int, c: int) -> int:
+        # majority axioms: M(a,a,b)=a ; M(a,a',b)=b
+        if a == b or a == c:
+            return a
+        if b == c:
+            return b
+        if self._compl(a, b):
+            return c
+        if self._compl(a, c):
+            return b
+        if self._compl(b, c):
+            return a
+        # constant folding: M(a,b,0)=a&b ; M(a,b,1)=a|b — keep as MAJ only in
+        # MIG-land (synthesis re-introduces the const form); at build time
+        # folding to AND/OR keeps AIGs canonical.
+        consts = [(i, self.is_const(x)) for i, x in enumerate((a, b, c))]
+        known = [(i, v) for i, v in consts if v is not None]
+        if len(known) >= 2:
+            # two constants decide (equal consts) or forward the variable
+            (i1, v1), (i2, v2) = known[0], known[1]
+            if v1 == v2:
+                return self.const(v1)
+            rem = [x for j, x in enumerate((a, b, c)) if j not in (i1, i2)][0]
+            return rem
+        return self._raw(MAJ, (a, b, c))
+
+    def MUX(self, sel: int, t: int, f: int) -> int:
+        """if sel then t else f (AIG form)."""
+        return self.OR(self.AND(sel, t), self.AND(self.NOT(sel), f))
+
+    # -- outputs ---------------------------------------------------------
+    def mark_output(self, nid: int, name: str) -> None:
+        self.outputs.append(nid)
+        self.output_names.append(name)
+
+    # -- analysis --------------------------------------------------------
+    def __len__(self) -> int:
+        return len(self.ops)
+
+    def live_nodes(self) -> List[int]:
+        """Topologically-ordered list of nodes reachable from outputs."""
+        seen = set()
+        order: List[int] = []
+        stack = list(self.outputs)
+        # iterative DFS post-order
+        visit: List[Tuple[int, bool]] = [(n, False) for n in reversed(stack)]
+        while visit:
+            nid, done = visit.pop()
+            if done:
+                order.append(nid)
+                continue
+            if nid in seen:
+                continue
+            seen.add(nid)
+            visit.append((nid, True))
+            for a in self.args[nid]:
+                if a not in seen:
+                    visit.append((a, False))
+        return order
+
+    def stats(self) -> Dict[str, int]:
+        out: Dict[str, int] = {}
+        for nid in self.live_nodes():
+            out[self.ops[nid]] = out.get(self.ops[nid], 0) + 1
+        out["total"] = sum(v for k, v in out.items() if k not in (INPUT, CONST0, CONST1))
+        out["depth"] = self.depth()
+        return out
+
+    def depth(self) -> int:
+        d: Dict[int, int] = {}
+        for nid in self.live_nodes():
+            if self.ops[nid] in (INPUT, CONST0, CONST1):
+                d[nid] = 0
+            elif self.ops[nid] == NOT:
+                d[nid] = d[self.args[nid][0]]  # NOT is free in DRAM (DCC)
+            else:
+                d[nid] = 1 + max(d[a] for a in self.args[nid])
+        return max((d[o] for o in self.outputs), default=0)
+
+    def is_mig(self) -> bool:
+        return all(
+            self.ops[n] in (INPUT, CONST0, CONST1, NOT, MAJ) for n in self.live_nodes()
+        )
+
+    # -- evaluation -------------------------------------------------------
+    def evaluate(self, inputs: Dict[int, Any], zero: Any, one: Any) -> Dict[int, Any]:
+        """Evaluate all live nodes.
+
+        ``inputs`` maps input node-id -> value.  ``zero``/``one`` are the
+        all-zeros / all-ones values of the carrier type (e.g. numpy
+        ``uint64(0)`` and ``~uint64(0)``).  Works for python ints, numpy
+        arrays and jax arrays alike.
+        """
+        val: Dict[int, Any] = {}
+        for nid in self.live_nodes():
+            op = self.ops[nid]
+            if op == INPUT:
+                val[nid] = inputs[nid]
+            elif op == CONST0:
+                val[nid] = zero
+            elif op == CONST1:
+                val[nid] = one
+            elif op == NOT:
+                val[nid] = ~val[self.args[nid][0]]
+            elif op == AND:
+                a, b = self.args[nid]
+                val[nid] = val[a] & val[b]
+            elif op == OR:
+                a, b = self.args[nid]
+                val[nid] = val[a] | val[b]
+            elif op == XOR:
+                a, b = self.args[nid]
+                val[nid] = val[a] ^ val[b]
+            elif op == MAJ:
+                a, b, c = (val[x] for x in self.args[nid])
+                val[nid] = (a & b) | (a & c) | (b & c)
+            else:  # pragma: no cover
+                raise ValueError(f"unknown op {op}")
+        return val
+
+    def evaluate_outputs(self, inputs: Dict[int, Any], zero: Any, one: Any) -> List[Any]:
+        val = self.evaluate(inputs, zero, one)
+        return [val[o] for o in self.outputs]
+
+
+@dataclass
+class BitVec:
+    """A little-endian vector of circuit node ids (bit 0 = LSB)."""
+
+    bits: List[int]
+
+    def __len__(self) -> int:
+        return len(self.bits)
+
+    def __getitem__(self, i):
+        if isinstance(i, slice):
+            return BitVec(self.bits[i])
+        return self.bits[i]
+
+    @property
+    def msb(self) -> int:
+        return self.bits[-1]
+
+
+def input_vec(c: Circuit, name: str, n: int) -> BitVec:
+    return BitVec([c.input(f"{name}[{i}]") for i in range(n)])
+
+
+def const_vec(c: Circuit, value: int, n: int) -> BitVec:
+    return BitVec([c.const((value >> i) & 1) for i in range(n)])
+
+
+def mark_output_vec(c: Circuit, v: BitVec, name: str) -> None:
+    for i, b in enumerate(v.bits):
+        c.mark_output(b, f"{name}[{i}]")

@@ -1,0 +1,336 @@
+"""The 16 SIMDRAM operations (paper §5) as parametric circuits + oracles.
+
+Operation classes demonstrated by the paper:
+  (1) N-input logic:      and_red, or_red, xor_red
+  (2) relational:         equal, greater, greater_equal, max, min
+  (3) arithmetic:         addition, subtraction, multiplication, division
+  (4) predication:        if_else
+  (5) other complex ops:  bitcount, relu, abs
+
+Every op is exposed as an :class:`OpSpec` with:
+  - ``build(style)`` -> (Circuit, per-operand input node-ids) where
+    ``style`` selects the AND/OR/NOT description ("aig", what Ambit runs)
+    or the optimized MAJ/NOT one ("mig", what SIMDRAM runs);
+  - ``oracle(*uint arrays)`` -> numpy reference used by the test-suite and
+    by the application kernels.
+
+New operations are added by writing one more builder — this *is* the
+paper's flexibility claim (user-defined ops enter through the same
+three-step pipeline without hardware changes).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Sequence, Tuple
+
+import numpy as np
+
+from .arith import Gates
+from .logic import BitVec, Circuit, input_vec, mark_output_vec
+
+BuildResult = Tuple[Circuit, List[List[int]]]
+
+
+@dataclass(frozen=True)
+class OpSpec:
+    name: str
+    n_bits: int                    # element width of the main operands
+    operand_bits: Tuple[int, ...]  # width of each input operand (1 = predicate)
+    out_bits: Tuple[int, ...]
+    signed: bool
+    _builder: Callable[[str], BuildResult]
+    _oracle: Callable[..., Tuple[np.ndarray, ...]]
+
+    def build(self, style: str = "mig") -> BuildResult:
+        return self._builder(style)
+
+    def oracle(self, *operands: np.ndarray) -> Tuple[np.ndarray, ...]:
+        return self._oracle(*operands)
+
+    @property
+    def n_operands(self) -> int:
+        return len(self.operand_bits)
+
+
+def _mask(n: int) -> int:
+    return (1 << n) - 1
+
+
+def _to_signed(x: np.ndarray, n: int) -> np.ndarray:
+    x = x.astype(np.int64) & _mask(n)
+    return np.where(x >= (1 << (n - 1)), x - (1 << n), x)
+
+
+def _wrap(x: np.ndarray, n: int) -> np.ndarray:
+    return (x.astype(np.int64) & _mask(n)).astype(np.uint64)
+
+
+def _setup(style: str, widths: Sequence[int], names: Sequence[str]):
+    c = Circuit()
+    g = Gates(c, style)
+    vecs = [input_vec(c, nm, w) for nm, w in zip(names, widths)]
+    ids = [[b for b in v.bits] for v in vecs]
+    return c, g, vecs, ids
+
+
+# ---------------------------------------------------------------------------
+# builders
+# ---------------------------------------------------------------------------
+
+def make_add(n: int) -> OpSpec:
+    def build(style: str) -> BuildResult:
+        c, g, vecs, ids = _setup(style, [n, n], ["x", "y"])
+        s, _ = g.add(vecs[0], vecs[1])
+        mark_output_vec(c, s, "sum")
+        return c, ids
+
+    return OpSpec(
+        "addition", n, (n, n), (n,), False, build,
+        lambda x, y: (_wrap(x.astype(np.int64) + y.astype(np.int64), n),),
+    )
+
+
+def make_sub(n: int) -> OpSpec:
+    def build(style: str) -> BuildResult:
+        c, g, vecs, ids = _setup(style, [n, n], ["x", "y"])
+        d, _ = g.sub(vecs[0], vecs[1])
+        mark_output_vec(c, d, "diff")
+        return c, ids
+
+    return OpSpec(
+        "subtraction", n, (n, n), (n,), False, build,
+        lambda x, y: (_wrap(x.astype(np.int64) - y.astype(np.int64), n),),
+    )
+
+
+def make_mul(n: int) -> OpSpec:
+    def build(style: str) -> BuildResult:
+        c, g, vecs, ids = _setup(style, [n, n], ["x", "y"])
+        p = g.mul(vecs[0], vecs[1])
+        mark_output_vec(c, p, "prod")
+        return c, ids
+
+    return OpSpec(
+        "multiplication", n, (n, n), (2 * n,), False, build,
+        lambda x, y: (_wrap(x.astype(np.uint64) * y.astype(np.uint64), 2 * n),),
+    )
+
+
+def make_div(n: int) -> OpSpec:
+    def build(style: str) -> BuildResult:
+        c, g, vecs, ids = _setup(style, [n, n], ["x", "y"])
+        q, r = g.divmod(vecs[0], vecs[1])
+        mark_output_vec(c, q, "quot")
+        mark_output_vec(c, r, "rem")
+        return c, ids
+
+    def oracle(x, y):
+        x = x.astype(np.uint64)
+        y = y.astype(np.uint64)
+        q = np.where(y == 0, np.uint64(_mask(n)), x // np.maximum(y, 1))
+        r = np.where(y == 0, x, x % np.maximum(y, 1))
+        return _wrap(q, n), _wrap(r, n)
+
+    return OpSpec("division", n, (n, n), (n, n), False, build, oracle)
+
+
+def make_equal(n: int) -> OpSpec:
+    def build(style: str) -> BuildResult:
+        c, g, vecs, ids = _setup(style, [n, n], ["x", "y"])
+        c.mark_output(g.eq(vecs[0], vecs[1]), "eq")
+        return c, ids
+
+    return OpSpec(
+        "equal", n, (n, n), (1,), False, build,
+        lambda x, y: ((x == y).astype(np.uint64),),
+    )
+
+
+def make_greater(n: int, signed: bool = False) -> OpSpec:
+    def build(style: str) -> BuildResult:
+        c, g, vecs, ids = _setup(style, [n, n], ["x", "y"])
+        gt = g.sgt(vecs[0], vecs[1]) if signed else g.ugt(vecs[0], vecs[1])
+        c.mark_output(gt, "gt")
+        return c, ids
+
+    def oracle(x, y):
+        if signed:
+            return ((_to_signed(x, n) > _to_signed(y, n)).astype(np.uint64),)
+        return ((x.astype(np.uint64) > y.astype(np.uint64)).astype(np.uint64),)
+
+    return OpSpec("greater", n, (n, n), (1,), signed, build, oracle)
+
+
+def make_greater_equal(n: int, signed: bool = False) -> OpSpec:
+    def build(style: str) -> BuildResult:
+        c, g, vecs, ids = _setup(style, [n, n], ["x", "y"])
+        ge = g.sge(vecs[0], vecs[1]) if signed else g.uge(vecs[0], vecs[1])
+        c.mark_output(ge, "ge")
+        return c, ids
+
+    def oracle(x, y):
+        if signed:
+            return ((_to_signed(x, n) >= _to_signed(y, n)).astype(np.uint64),)
+        return ((x.astype(np.uint64) >= y.astype(np.uint64)).astype(np.uint64),)
+
+    return OpSpec("greater_equal", n, (n, n), (1,), signed, build, oracle)
+
+
+def make_max(n: int, signed: bool = False) -> OpSpec:
+    def build(style: str) -> BuildResult:
+        c, g, vecs, ids = _setup(style, [n, n], ["x", "y"])
+        ge = g.sge(vecs[0], vecs[1]) if signed else g.uge(vecs[0], vecs[1])
+        mark_output_vec(c, g.mux_vec(ge, vecs[0], vecs[1]), "max")
+        return c, ids
+
+    def oracle(x, y):
+        if signed:
+            xs, ys = _to_signed(x, n), _to_signed(y, n)
+            return (_wrap(np.where(xs >= ys, xs, ys), n),)
+        return (np.maximum(x.astype(np.uint64), y.astype(np.uint64)),)
+
+    return OpSpec("max", n, (n, n), (n,), signed, build, oracle)
+
+
+def make_min(n: int, signed: bool = False) -> OpSpec:
+    def build(style: str) -> BuildResult:
+        c, g, vecs, ids = _setup(style, [n, n], ["x", "y"])
+        ge = g.sge(vecs[0], vecs[1]) if signed else g.uge(vecs[0], vecs[1])
+        mark_output_vec(c, g.mux_vec(ge, vecs[1], vecs[0]), "min")
+        return c, ids
+
+    def oracle(x, y):
+        if signed:
+            xs, ys = _to_signed(x, n), _to_signed(y, n)
+            return (_wrap(np.where(xs >= ys, ys, xs), n),)
+        return (np.minimum(x.astype(np.uint64), y.astype(np.uint64)),)
+
+    return OpSpec("min", n, (n, n), (n,), signed, build, oracle)
+
+
+def make_if_else(n: int) -> OpSpec:
+    """Predication: out = sel ? x : y (sel is a 1-bit lane predicate)."""
+
+    def build(style: str) -> BuildResult:
+        c, g, vecs, ids = _setup(style, [1, n, n], ["sel", "x", "y"])
+        mark_output_vec(c, g.mux_vec(vecs[0].bits[0], vecs[1], vecs[2]), "out")
+        return c, ids
+
+    return OpSpec(
+        "if_else", n, (1, n, n), (n,), False, build,
+        lambda s, x, y: (np.where(s & 1, x, y).astype(np.uint64),),
+    )
+
+
+def _make_reduction(opname: str, n: int, n_inputs: int) -> OpSpec:
+    def build(style: str) -> BuildResult:
+        names = [f"x{i}" for i in range(n_inputs)]
+        c, g, vecs, ids = _setup(style, [n] * n_inputs, names)
+        acc = vecs[0]
+        fn = {"and_red": g.AND, "or_red": g.OR, "xor_red": g.XOR}[opname]
+        for v in vecs[1:]:
+            acc = BitVec([fn(a, b) for a, b in zip(acc.bits, v.bits)])
+        mark_output_vec(c, acc, "red")
+        return c, ids
+
+    np_fn = {"and_red": np.bitwise_and, "or_red": np.bitwise_or,
+             "xor_red": np.bitwise_xor}[opname]
+
+    def oracle(*xs):
+        acc = xs[0].astype(np.uint64)
+        for x in xs[1:]:
+            acc = np_fn(acc, x.astype(np.uint64))
+        return (acc,)
+
+    return OpSpec(opname, n, tuple([n] * n_inputs), (n,), False, build, oracle)
+
+
+def make_and_red(n: int, n_inputs: int = 4) -> OpSpec:
+    return _make_reduction("and_red", n, n_inputs)
+
+
+def make_or_red(n: int, n_inputs: int = 4) -> OpSpec:
+    return _make_reduction("or_red", n, n_inputs)
+
+
+def make_xor_red(n: int, n_inputs: int = 4) -> OpSpec:
+    return _make_reduction("xor_red", n, n_inputs)
+
+
+def make_bitcount(n: int) -> OpSpec:
+    out_w = max(1, (n).bit_length())
+
+    def build(style: str) -> BuildResult:
+        c, g, vecs, ids = _setup(style, [n], ["x"])
+        mark_output_vec(c, g.popcount(vecs[0].bits, out_w), "cnt")
+        return c, ids
+
+    def oracle(x):
+        x = x.astype(np.uint64)
+        cnt = np.zeros_like(x)
+        for i in range(n):
+            cnt += (x >> np.uint64(i)) & np.uint64(1)
+        return (cnt,)
+
+    return OpSpec("bitcount", n, (n,), (out_w,), False, build, oracle)
+
+
+def make_relu(n: int) -> OpSpec:
+    """ReLU over signed two's-complement lanes: msb==1 -> 0."""
+
+    def build(style: str) -> BuildResult:
+        c, g, vecs, ids = _setup(style, [n], ["x"])
+        keep = g.NOT(vecs[0].msb)
+        mark_output_vec(c, g.broadcast_and(keep, vecs[0]), "relu")
+        return c, ids
+
+    def oracle(x):
+        xs = _to_signed(x, n)
+        return (_wrap(np.where(xs < 0, 0, xs), n),)
+
+    return OpSpec("relu", n, (n,), (n,), True, build, oracle)
+
+
+def make_abs(n: int) -> OpSpec:
+    def build(style: str) -> BuildResult:
+        c, g, vecs, ids = _setup(style, [n], ["x"])
+        mark_output_vec(c, g.mux_vec(vecs[0].msb, g.neg(vecs[0]), vecs[0]), "abs")
+        return c, ids
+
+    def oracle(x):
+        xs = _to_signed(x, n)
+        return (_wrap(np.abs(xs), n),)
+
+    return OpSpec("abs", n, (n,), (n,), True, build, oracle)
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+_FACTORIES: Dict[str, Callable[..., OpSpec]] = {
+    "abs": make_abs,
+    "addition": make_add,
+    "and_red": make_and_red,
+    "bitcount": make_bitcount,
+    "division": make_div,
+    "equal": make_equal,
+    "greater": make_greater,
+    "greater_equal": make_greater_equal,
+    "if_else": make_if_else,
+    "max": make_max,
+    "min": make_min,
+    "multiplication": make_mul,
+    "or_red": make_or_red,
+    "relu": make_relu,
+    "subtraction": make_sub,
+    "xor_red": make_xor_red,
+}
+
+ALL_OPS = tuple(sorted(_FACTORIES))
+assert len(ALL_OPS) == 16  # the paper's 16 demonstrated operations
+
+
+def get_op(name: str, n_bits: int, **kw) -> OpSpec:
+    return _FACTORIES[name](n_bits, **kw)

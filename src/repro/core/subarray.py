@@ -1,0 +1,152 @@
+"""Faithful row-granular DRAM subarray simulator (SIMDRAM Step 3 substrate).
+
+The subarray is a ``(n_rows, n_words)`` uint32 array: row *r*, bit-column
+*c* is bit ``c % 32`` of word ``c // 32`` — i.e. each row is a 1-bit-tall
+bit-vector across all DRAM columns (SIMD lanes).  Vertical data layout means
+operand bit *j* of every lane lives in one row.
+
+Semantics implemented exactly as the hardware primitives:
+
+  - ``AAP(src, dst)``: dst row := value read through ``src`` port.  Writing
+    a DCC row through its n-port stores the complement at the d-port (the
+    array always stores the d-port value).
+  - ``AP(triple)``: the three rows (read through their port polarities)
+    charge-share; **all three** rows end up holding MAJ of the three read
+    values (n-port participants store the complement physically).
+
+C0/C1 are pinned constant rows.  This simulator is the correctness oracle
+for Step 2's μPrograms: `tests/test_uprogram.py` proves every compiled op
+equals its integer oracle for both the SIMDRAM (MIG) and Ambit (AIG)
+programs.
+
+The fast TPU path (bit-plane backend + Pallas kernels) is in
+:mod:`repro.core.bitplane` / :mod:`repro.kernels`; the scan/switch-based
+programmable control unit is in :mod:`repro.core.control_unit`.
+"""
+
+from __future__ import annotations
+
+from typing import List, Sequence, Tuple
+
+import numpy as np
+
+from .uprogram import C0, C1, DCC_ROWS, TRIPLES, Command, RowRef, UProgram
+
+
+class Subarray:
+    """Numpy-backed row-granular simulator (exact, used as oracle)."""
+
+    def __init__(self, n_rows: int, n_columns: int):
+        assert n_columns % 32 == 0
+        self.n_rows = n_rows
+        self.n_words = n_columns // 32
+        self.n_columns = n_columns
+        self.rows = np.zeros((n_rows, self.n_words), dtype=np.uint32)
+        self.rows[C1] = np.uint32(0xFFFFFFFF)
+        self.activation_count = np.zeros(n_rows, dtype=np.int64)
+
+    # --- port-level access -----------------------------------------------
+    def read(self, ref: RowRef) -> np.ndarray:
+        row, neg = ref
+        v = self.rows[row]
+        return ~v if neg else v
+
+    def write(self, ref: RowRef, value: np.ndarray) -> None:
+        row, neg = ref
+        if row in (C0, C1):
+            raise ValueError("constant rows are read-only")
+        self.rows[row] = (~value if neg else value).astype(np.uint32)
+
+    # --- DRAM commands ------------------------------------------------------
+    def aap(self, src: RowRef, dst: RowRef) -> None:
+        self.activation_count[src[0]] += 1
+        self.activation_count[dst[0]] += 1
+        self.write(dst, self.read(src))
+
+    def ap(self, triple_idx: int) -> None:
+        triple = TRIPLES[triple_idx]
+        vals = [self.read(ref) for ref in triple]
+        maj = (vals[0] & vals[1]) | (vals[0] & vals[2]) | (vals[1] & vals[2])
+        for ref in triple:
+            self.activation_count[ref[0]] += 1
+            self.write(ref, maj)
+
+    def execute(self, cmds: Sequence[Command]) -> None:
+        for c in cmds:
+            if c.kind == "AAP":
+                self.aap(c.src, c.dst)
+            else:
+                self.ap(c.triple)
+
+
+# ---------------------------------------------------------------------------
+# vertical-layout helpers (transposition-unit functionality, numpy side)
+# ---------------------------------------------------------------------------
+
+def pack_bits(values: np.ndarray, n_bits: int, n_columns: int) -> np.ndarray:
+    """Horizontal -> vertical: (lanes,) uints -> (n_bits, n_words) uint32."""
+    lanes = values.shape[0]
+    assert lanes <= n_columns
+    out = np.zeros((n_bits, n_columns // 32), dtype=np.uint32)
+    vals = values.astype(np.uint64)
+    for j in range(n_bits):
+        bits = ((vals >> np.uint64(j)) & np.uint64(1)).astype(np.uint32)
+        padded = np.zeros(n_columns, dtype=np.uint8)
+        padded[:lanes] = bits
+        out[j] = np.packbits(padded, bitorder="little").view(np.uint32)
+    return out
+
+
+def unpack_bits(planes: np.ndarray, lanes: int) -> np.ndarray:
+    """Vertical -> horizontal: (n_bits, n_words) uint32 -> (lanes,) uint64."""
+    n_bits = planes.shape[0]
+    out = np.zeros(lanes, dtype=np.uint64)
+    for j in range(n_bits):
+        bits = np.unpackbits(
+            planes[j].view(np.uint8), bitorder="little"
+        )[:lanes].astype(np.uint64)
+        out |= bits << np.uint64(j)
+    return out
+
+
+def run_uprogram(
+    uprog: UProgram, operands: Sequence[np.ndarray], n_columns: int = 256
+) -> List[np.ndarray]:
+    """Load operands vertically, execute the μProgram, read back outputs.
+
+    ``operands[i]`` is a (lanes,) integer array for operand *i*.  Returns one
+    (lanes,) uint64 array per output row group (1 bit per group; callers
+    regroup via ``uprog.out_rows`` widths — see :func:`run_op`).
+    """
+    lanes = operands[0].shape[0]
+    sa = Subarray(uprog.n_rows_total, n_columns)
+    for op_idx, rows in enumerate(uprog.in_rows):
+        planes = pack_bits(np.asarray(operands[op_idx]), len(rows), n_columns)
+        for j, r in enumerate(rows):
+            sa.rows[r] = planes[j]
+    sa.execute(uprog.commands)
+    outs = []
+    for rows in uprog.out_rows:
+        planes = np.stack([sa.rows[r] for r in rows])
+        outs.append(unpack_bits(planes, lanes))
+    return outs
+
+
+def run_op(
+    uprog: UProgram,
+    out_widths: Sequence[int],
+    operands: Sequence[np.ndarray],
+    n_columns: int = 256,
+) -> List[np.ndarray]:
+    """Like :func:`run_uprogram` but regroups single-bit outputs into the
+    op's declared output widths (e.g. 8 sum rows -> one 8-bit result)."""
+    flat = run_uprogram(uprog, operands, n_columns)
+    outs: List[np.ndarray] = []
+    pos = 0
+    for w in out_widths:
+        acc = np.zeros_like(flat[0])
+        for j in range(w):
+            acc |= (flat[pos + j] & np.uint64(1)) << np.uint64(j)
+        outs.append(acc)
+        pos += w
+    return outs

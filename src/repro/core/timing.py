@@ -1,0 +1,85 @@
+"""DRAM timing model → latency & throughput per μProgram (paper §5 tables).
+
+Constants follow the Ambit/SIMDRAM evaluation setup (DDR4-2400, 16 banks,
+one compute-enabled subarray active per bank; 8 KiB row = 65 536 bitlines =
+65 536 SIMD lanes per subarray):
+
+  tRAS = 35 ns, tRP = 15 ns
+  AP  (triple-row activation)           t = tRAS + tRP          = 50 ns
+  AAP (activate-activate-precharge)     t = 2·tRAS + tRP        = 85 ns
+
+A μProgram's latency is a pure function of its command mix — this is the
+paper's central cost model: optimizing MAJ count (Step 1) and row moves
+(Step 2) *is* optimizing latency.  Throughput multiplies SIMD lanes by
+bank-level parallelism.  CPU/GPU comparison points use published
+bandwidth-bound roofline numbers for the same bulk element-wise workloads
+(see :mod:`repro.core.energy` for the energy side).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from .uprogram import UProgram
+
+NS = 1e-9
+
+
+@dataclass(frozen=True)
+class DramConfig:
+    name: str = "DDR4-2400"
+    t_ras_ns: float = 35.0
+    t_rp_ns: float = 15.0
+    columns_per_subarray: int = 65536     # 8 KiB row
+    rows_per_subarray: int = 1024
+    n_banks: int = 16                      # compute banks active in parallel
+    subarrays_per_bank: int = 1            # simultaneously-computing subarrays
+    channel_bw_gbs: float = 19.2           # DDR4-2400 x64
+
+    @property
+    def t_ap_ns(self) -> float:
+        return self.t_ras_ns + self.t_rp_ns
+
+    @property
+    def t_aap_ns(self) -> float:
+        return 2 * self.t_ras_ns + self.t_rp_ns
+
+    @property
+    def simd_lanes(self) -> int:
+        return self.columns_per_subarray * self.n_banks * self.subarrays_per_bank
+
+
+DDR4 = DramConfig()
+
+
+def uprogram_latency_s(up: UProgram, cfg: DramConfig = DDR4) -> float:
+    return (up.n_aap * cfg.t_aap_ns + up.n_ap * cfg.t_ap_ns) * NS
+
+
+def throughput_gops(up: UProgram, cfg: DramConfig = DDR4) -> float:
+    """Giga-operations/s: one 'operation' = one n-bit element result."""
+    lat = uprogram_latency_s(up, cfg)
+    return cfg.simd_lanes / lat / 1e9
+
+
+# --- CPU / GPU analytic comparison points ------------------------------------
+# Bulk bitwise/elementwise kernels on CPU/GPU are DRAM-bandwidth-bound; the
+# paper's baselines follow the same logic.  An n-bit binary op streams
+# 2 reads + 1 write of n bits per element.
+
+@dataclass(frozen=True)
+class HostConfig:
+    name: str
+    mem_bw_gbs: float      # achievable stream bandwidth
+    power_w: float         # package power while streaming
+
+
+CPU_BASELINE = HostConfig("Skylake-like CPU", mem_bw_gbs=23.1, power_w=65.0)
+GPU_BASELINE = HostConfig("HBM2 GPU (Titan-V-like)", mem_bw_gbs=652.8, power_w=250.0)
+
+
+def host_throughput_gops(
+    n_bits: int, n_operands: int, n_outputs: int, host: HostConfig
+) -> float:
+    bytes_per_elem = (n_operands + n_outputs) * n_bits / 8.0
+    return host.mem_bw_gbs / bytes_per_elem

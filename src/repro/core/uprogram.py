@@ -1,0 +1,124 @@
+"""μProgram ISA and DRAM row organization (SIMDRAM Step 2 output).
+
+Row address space of one compute-enabled subarray (Ambit-style B/C/D
+groups, which SIMDRAM builds on):
+
+  B-group (compute rows):
+    T0..T3          4 regular compute rows
+    DCC0, DCC1      2 dual-contact-cell rows.  Each DCC row is one physical
+                    row reachable through two wordlines: the *d*-port
+                    (stores x) and the *n*-port (reads/writes ~x).  This is
+                    the substrate's free NOT.
+  C-group: C0 (all zeros), C1 (all ones) — constant rows.
+  D-group: regular data rows — operand bit-rows (vertical layout: bit i of
+    every SIMD lane lives in one D row), output rows, and allocator scratch.
+
+Commands (the two DRAM primitives the memory controller issues):
+
+  AAP(src, dst)   "activate-activate-precharge": RowClone copy src→dst
+                  (2 row activations + 1 precharge;  t ≈ 2·tRAS + tRP).
+  AP(triple)      "activate-precharge" triple-row activation: the three
+                  rows of a predefined B-group triple charge-share and all
+                  end up holding MAJ of their initial values
+                  (t ≈ tRAS + tRP).
+
+Row references carry a polarity bit: ``(row, neg=True)`` addresses the
+n-port of a DCC row (reads ~x / writes-through-inversion).  Regular rows
+only support ``neg=False``.
+
+A :class:`UProgram` is the fully-resolved command sequence for one
+operation, plus the operand→row map — exactly what SIMDRAM's control unit
+stores in its μProgram memory and replays on a ``bbop`` instruction.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+# --- physical row indices ----------------------------------------------------
+T0, T1, T2, T3 = 0, 1, 2, 3
+DCC0, DCC1 = 4, 5
+C0, C1 = 6, 7
+N_SPECIAL = 8           # first D-group row index
+B_ROWS = (T0, T1, T2, T3, DCC0, DCC1)
+DCC_ROWS = (DCC0, DCC1)
+
+ROW_NAMES = {T0: "T0", T1: "T1", T2: "T2", T3: "T3",
+             DCC0: "DCC0", DCC1: "DCC1", C0: "C0", C1: "C1"}
+
+
+def row_name(r: int) -> str:
+    return ROW_NAMES.get(r, f"D{r - N_SPECIAL}")
+
+
+# RowRef: (physical_row, negated_port)
+RowRef = Tuple[int, bool]
+
+# Predefined TRA triples the B-group row decoder can activate simultaneously
+# (mirrors Ambit's triple-row-activation address set; DCC n-ports appear in
+# two of them so a negated operand feeds a MAJ without an extra copy).
+TRIPLES: Tuple[Tuple[RowRef, RowRef, RowRef], ...] = (
+    ((T0, False), (T1, False), (T2, False)),
+    ((T1, False), (T2, False), (T3, False)),
+    ((DCC0, True), (T1, False), (T2, False)),
+    ((DCC1, True), (T0, False), (T3, False)),
+)
+
+
+@dataclass(frozen=True)
+class Command:
+    kind: str                 # "AAP" | "AP"
+    src: Optional[RowRef] = None      # AAP only
+    dst: Optional[RowRef] = None      # AAP only
+    triple: Optional[int] = None      # AP only: index into TRIPLES
+
+    def __repr__(self) -> str:
+        if self.kind == "AAP":
+            s = row_name(self.src[0]) + ("n" if self.src[1] else "")
+            d = row_name(self.dst[0]) + ("n" if self.dst[1] else "")
+            return f"AAP({s} -> {d})"
+        t = TRIPLES[self.triple]
+        rows = ",".join(row_name(r) + ("n" if n else "") for r, n in t)
+        return f"AP({rows})"
+
+
+@dataclass
+class UProgram:
+    """Compiled command sequence for one SIMDRAM operation."""
+
+    op_name: str
+    n_bits: int
+    commands: List[Command]
+    # operand i, bit j  ->  D-group physical row holding that bit-row
+    in_rows: List[List[int]]
+    # output o, bit j   ->  D-group physical row the result lands in
+    out_rows: List[List[int]]
+    n_rows_total: int          # physical rows incl. scratch
+    n_scratch: int
+
+    # -- cost accounting (drives timing/energy/throughput models) ---------
+    @property
+    def n_aap(self) -> int:
+        return sum(1 for c in self.commands if c.kind == "AAP")
+
+    @property
+    def n_ap(self) -> int:
+        return sum(1 for c in self.commands if c.kind == "AP")
+
+    @property
+    def n_activations(self) -> int:
+        # AAP = 2 ACTs, AP = 1 (triple) ACT
+        return 2 * self.n_aap + self.n_ap
+
+    def stats(self) -> Dict[str, int]:
+        return {
+            "AAP": self.n_aap,
+            "AP": self.n_ap,
+            "total_cmds": len(self.commands),
+            "activations": self.n_activations,
+            "scratch_rows": self.n_scratch,
+        }
+
+    def listing(self) -> str:
+        return "\n".join(f"{i:4d}: {c!r}" for i, c in enumerate(self.commands))

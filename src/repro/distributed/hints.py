@@ -1,0 +1,88 @@
+"""Mesh-optional sharding constraints.
+
+Model code calls ``hint(x, *spec)`` to pin an intermediate's layout when
+tracing under a mesh (dry-run / production) — and silently no-ops when
+there is none (unit tests, CPU smoke runs).  This keeps layer code free of
+mesh plumbing while letting the perf pass force activation layouts.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+
+def _ambient_mesh():
+    try:
+        m = jax.sharding.get_abstract_mesh()
+        if m is not None and m.axis_names:
+            return m
+    except Exception:
+        pass
+    try:
+        from jax._src import mesh as mesh_lib
+        m = mesh_lib.thread_resources.env.physical_mesh
+        if m is not None and not m.empty:
+            return m
+    except Exception:
+        pass
+    return None
+
+
+def _axis_size(mesh, s) -> int:
+    if s is None:
+        return 1
+    if isinstance(s, str):
+        return mesh.shape[s]
+    out = 1
+    for a in s:
+        out *= mesh.shape[a]
+    return out
+
+
+def hint(x: jax.Array, *spec) -> jax.Array:
+    """with_sharding_constraint(x, P(*spec)) iff a mesh with all the
+    referenced axes is ambient; per-dim divisibility is checked and
+    non-dividing axes degrade to replication.  Identity otherwise."""
+    mesh = _ambient_mesh()
+    if mesh is None:
+        return x
+    names = set(mesh.axis_names)
+    fitted = []
+    for dim, s in zip(x.shape, spec):
+        if s is None:
+            fitted.append(None)
+            continue
+        axes = (s,) if isinstance(s, str) else tuple(s)
+        if not set(axes) <= names or dim % _axis_size(mesh, axes) != 0:
+            fitted.append(None)
+        else:
+            fitted.append(s)
+    try:
+        return jax.lax.with_sharding_constraint(x, P(*fitted))
+    except Exception:
+        return x
+
+
+def hint_kv(x: jax.Array) -> jax.Array:
+    """Layout hint for (B, S, G, hd) KV tensors/caches: batch on the DATA
+    axes, kv-heads on `model` when they divide (else head_dim) — matching
+    distributed.sharding.cache_shardings so decode steps never reshard the
+    cache.  NOTE: in a sharding *constraint* None means REPLICATED, so the
+    batch dim must be explicitly pinned to DATA (leaving it None forces a
+    full-batch all-gather — measured 2×2.1 GB/layer on qwen2 decode)."""
+    mesh = _ambient_mesh()
+    if mesh is None or "model" not in mesh.axis_names:
+        return x
+    data = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    data_ax = data if len(data) > 1 else (data[0] if data else None)
+    g, hd = x.shape[-2], x.shape[-1]
+    msize = mesh.shape["model"]
+    lead = [None] * (x.ndim - 4)           # stacked-layer prefix if 5D
+    if g % msize == 0:
+        return hint(x, *lead, data_ax, None, "model", None)
+    if hd % msize == 0:
+        return hint(x, *lead, data_ax, None, None, "model")
+    return hint(x, *lead, data_ax, None, None, None)

@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for SIMDRAM's compute hot-spots.
+
+  bitplane_ops.py      fused MAJ/NOT-circuit execution on bit-planes
+  transpose_kernel.py  32×32 SWAR bit transpose (the transposition unit)
+  bitserial_matmul.py  binary popcount-matmul (bit-serial NN engine)
+  ops.py               jit'd wrappers + padding + dispatch
+  ref.py               pure-jnp oracles for all of the above
+
+All kernels validate in interpret mode on CPU; BlockSpecs target TPU v5e
+VMEM (see per-module budget notes).
+"""

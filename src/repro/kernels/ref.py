@@ -1,0 +1,86 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each kernel in repro.kernels has its reference here; tests sweep shapes &
+dtypes and assert_allclose (exact for integer kernels) against these.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_M1 = jnp.uint32(0x55555555)
+_M2 = jnp.uint32(0x33333333)
+_M4 = jnp.uint32(0x0F0F0F0F)
+_H01 = jnp.uint32(0x01010101)
+
+
+def popcount_u32(v: jax.Array) -> jax.Array:
+    """SWAR popcount of each uint32 element -> int32."""
+    v = v.astype(jnp.uint32)
+    v = v - ((v >> 1) & _M1)
+    v = (v & _M2) + ((v >> 2) & _M2)
+    v = (v + (v >> 4)) & _M4
+    return ((v * _H01) >> 24).astype(jnp.int32)
+
+
+def binary_matmul_ref(a_words: jax.Array, w_words: jax.Array) -> jax.Array:
+    """out[m,n] = Σ_k popcount(a_words[m,k] & w_words[k,n]).
+
+    a_words: (M, Kw) uint32 — M lanes, K=32·Kw binary features, bit-packed
+    w_words: (Kw, N) uint32
+    returns: (M, N) int32
+    """
+    anded = a_words[:, :, None] & w_words[None, :, :]
+    return popcount_u32(anded).sum(axis=1).astype(jnp.int32)
+
+
+def bitserial_matmul_ref(
+    a: jax.Array, w: jax.Array, a_bits: int, w_bits: int,
+    a_signed: bool = False, w_signed: bool = True,
+) -> jax.Array:
+    """Integer matmul computed bit-serially (the SIMDRAM NN formulation).
+
+    a: (M, K) int — activations, values must fit a_bits
+    w: (K, N) int — weights, values must fit w_bits
+    out[m,n] = Σ_k a[m,k]·w[k,n]  ==  Σ_{i,j} s_i s_j 2^{i+j} (aᵢ·wⱼ)
+    where aᵢ is bit-plane i and the MSB plane of a signed operand carries
+    weight -2^(bits-1) (two's complement).
+    """
+    M, K = a.shape
+    Kw, N = w.shape
+    assert K == Kw
+    a_signed = a_signed and a_bits > 1   # 1-bit operands are unsigned {0,1}
+    w_signed = w_signed and w_bits > 1
+    au = a.astype(jnp.int32) & ((1 << a_bits) - 1)
+    wu = w.astype(jnp.int32) & ((1 << w_bits) - 1)
+    out = jnp.zeros((M, N), jnp.int32)
+    for i in range(a_bits):
+        sa = -1 if (a_signed and i == a_bits - 1) else 1
+        abit = (au >> i) & 1
+        for j in range(w_bits):
+            sw = -1 if (w_signed and j == w_bits - 1) else 1
+            wbit = (wu >> j) & 1
+            out = out + (sa * sw) * ((abit @ wbit) << (i + j))
+    return out
+
+
+def transpose32_ref(values: jax.Array) -> jax.Array:
+    """h2v oracle: (N,) uint32 lane values -> (32, N//32) uint32 planes."""
+    n = values.shape[0]
+    assert n % 32 == 0
+    v = values.astype(jnp.uint32).reshape(n // 32, 32)          # [block, lane]
+    bits = (v[:, :, None] >> jnp.arange(32, dtype=jnp.uint32)) & jnp.uint32(1)
+    # planes[j, b] = Σ_l bit_j(v[b,l]) << l
+    planes = (bits.astype(jnp.uint32) << jnp.arange(32, dtype=jnp.uint32)[None, :, None]).sum(
+        axis=1, dtype=jnp.uint32
+    )
+    return planes.T                                              # (32, N//32)
+
+
+def elementwise_circuit_ref(name: str, n_bits: int, *operands):
+    """Oracle for the fused bit-plane elementwise kernel: the (already
+    cross-validated) eager bitplane backend."""
+    from repro.core import bitplane
+    return bitplane.bbop(name, n_bits, *operands)

@@ -1,0 +1,108 @@
+"""Pallas kernel: the transposition unit (horizontal ↔ vertical layout).
+
+SIMDRAM's memory-controller transposition unit converts 32 horizontal
+words into 32 vertical bit-planes with a fixed wiring network.  The TPU
+analogue is the classic SWAR 32×32 bit-matrix transpose: log₂32 = 5
+rounds of masked shift/XOR swaps, fully vectorized across lane-blocks, so
+each VPU op processes BLOCK_B independent 32×32 bit tiles at once.
+
+Layout contract (matches repro.core.bitplane.pack):
+  input  values  (N,)  uint32   — lane l's value
+  output planes  (32, N/32) uint32 — plane j, word b holds bit j of lanes
+                                      32b..32b+31 (lane l at bit l%32)
+
+Tiling: grid over N/32 words in blocks of BLOCK_B; each instance holds a
+(BLOCK_B, 32) uint32 tile in VMEM (default 256·32·4 B = 32 KiB in, same
+out).  The swap network is identical for every tile — Mosaic emits 5
+rounds of shift/mask ops on 8×128 vregs.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_B = 256
+
+# python ints (not traced constants): materialized inside the kernel body
+_MASKS = (0x0000FFFF, 0x00FF00FF, 0x0F0F0F0F, 0x33333333, 0x55555555)
+_DELTAS = (16, 8, 4, 2, 1)
+
+
+def _swar_network(x: jax.Array) -> jax.Array:
+    """Hacker's-Delight 32×32 bit transpose, vectorized over tiles.
+
+    x: (B, 32) uint32; axis 1 indexes the 32 matrix rows.  Computes the
+    anti-diagonal transpose: out[:, r] bit c = x[:, 31-c] bit 31-r.
+    """
+    idx = jnp.arange(32)
+    for j, m_int in zip(_DELTAS, _MASKS):
+        m = jnp.uint32(m_int)
+        is_low = (idx & j) == 0
+        partner = idx ^ j
+        xp = x[:, partner]
+        new_low = x ^ ((x ^ (xp >> jnp.uint32(j))) & m)
+        new_high = x ^ (((xp ^ (x >> jnp.uint32(j))) & m) << jnp.uint32(j))
+        x = jnp.where(is_low[None, :], new_low, new_high)
+    return x
+
+
+def _swar_transpose_tile(x: jax.Array) -> jax.Array:
+    """True transpose of BLOCK_B independent 32×32 bit matrices.
+
+    x: (B, 32) uint32 — row l of tile b is lane (32b+l)'s value.
+    returns y: (B, 32) with y[b, j] bit l = bit j of lane (32b+l); the
+    row-reversal sandwich converts the network's anti-diagonal transpose
+    into the main-diagonal one (verified involution in tests).
+    """
+    return _swar_network(x[:, ::-1])[:, ::-1]
+
+
+def _kernel_h2v(in_ref, out_ref):
+    x = in_ref[...]                      # (B, 32) uint32
+    y = _swar_transpose_tile(x)
+    out_ref[...] = y.T                   # (32, B): plane-major
+
+def _kernel_v2h(in_ref, out_ref):
+    y = in_ref[...]                      # (32, B)
+    x = _swar_transpose_tile(y.T)
+    out_ref[...] = x
+
+
+def h2v_pallas(values: jax.Array, *, block_b: int = DEFAULT_BLOCK_B,
+               interpret: bool = True) -> jax.Array:
+    """(N,) uint32 -> (32, N/32) uint32 planes."""
+    n = values.shape[0]
+    assert n % 32 == 0
+    nb = n // 32
+    bb = min(block_b, nb)
+    assert nb % bb == 0, (nb, bb)
+    fn = pl.pallas_call(
+        _kernel_h2v,
+        grid=(nb // bb,),
+        in_specs=[pl.BlockSpec((bb, 32), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((32, bb), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((32, nb), jnp.uint32),
+        interpret=interpret,
+    )
+    return fn(values.astype(jnp.uint32).reshape(nb, 32))
+
+
+def v2h_pallas(planes: jax.Array, *, block_b: int = DEFAULT_BLOCK_B,
+               interpret: bool = True) -> jax.Array:
+    """(32, N/32) uint32 planes -> (N,) uint32 lane values."""
+    nb = planes.shape[1]
+    bb = min(block_b, nb)
+    assert nb % bb == 0
+    fn = pl.pallas_call(
+        _kernel_v2h,
+        grid=(nb // bb,),
+        in_specs=[pl.BlockSpec((32, bb), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((bb, 32), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nb, 32), jnp.uint32),
+        interpret=interpret,
+    )
+    return fn(planes.astype(jnp.uint32)).reshape(nb * 32)

@@ -1,0 +1,395 @@
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+MUST be the process entrypoint (python -m repro.launch.dryrun ...): the
+first two lines pin 512 XLA host devices BEFORE any other import touches
+jax, since jax locks the device count on first init.
+
+For each cell this:
+  1. builds param/optimizer/batch/cache ShapeDtypeStructs (jax.eval_shape
+     — zero allocation),
+  2. applies the sharding rules (repro.distributed.sharding),
+  3. jits the train/prefill/serve step with explicit in/out shardings,
+  4. .lower().compile() on the production mesh,
+  5. records memory_analysis(), cost_analysis() and per-collective bytes
+     parsed from the optimized HLO into experiments/dryrun/*.json — the
+     §Roofline inputs.
+"""
+
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse          # noqa: E402
+import json              # noqa: E402
+import re                # noqa: E402
+import time              # noqa: E402
+import traceback         # noqa: E402
+from typing import Dict, Optional, Tuple  # noqa: E402
+
+import jax               # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np       # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs import ARCHS, cell_is_supported, get_config  # noqa: E402
+from repro.models.config import SHAPES_BY_NAME, ModelConfig, ShapeSpec  # noqa: E402
+from repro.models.transformer import init_caches, init_lm  # noqa: E402
+from repro.train import optimizer as opt  # noqa: E402
+from repro.train.train_loop import make_train_step  # noqa: E402
+from repro.train.serve import make_prefill, make_serve_step  # noqa: E402
+from repro.distributed import sharding as shd  # noqa: E402
+from .mesh import make_production_mesh  # noqa: E402
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins, no allocation)
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, jax.ShapeDtypeStruct]:
+    b, l = shape.global_batch, shape.seq_len
+    sds = jax.ShapeDtypeStruct
+    if shape.kind == "train":
+        out = {"tokens": sds((b, l), jnp.int32), "labels": sds((b, l), jnp.int32)}
+        if cfg.is_encdec:
+            out["encoder_feats"] = sds((b, max(1, l // 4), cfg.d_model), jnp.float32)
+        if cfg.family == "vlm":
+            out["vision_embeds"] = sds((b, cfg.frontend_seq, cfg.d_model), jnp.float32)
+        return out
+    if shape.kind == "prefill":
+        out = {"tokens": sds((b, l), jnp.int32)}
+        if cfg.is_encdec:
+            out["encoder_feats"] = sds((b, max(1, l // 4), cfg.d_model), jnp.bfloat16)
+        if cfg.family == "vlm":
+            out["vision_embeds"] = sds((b, cfg.frontend_seq, cfg.d_model), jnp.bfloat16)
+        return out
+    # decode: one new token against a seq_len cache
+    out = {"token": sds((b,), jnp.int32), "pos": sds((b,), jnp.int32)}
+    if cfg.is_encdec:
+        out["memory"] = sds((b, max(1, l // 4), cfg.d_model), jnp.bfloat16)
+    return out
+
+
+def _eval_shapes(cfg: ModelConfig, shape: ShapeSpec):
+    """ShapeDtypeStructs for params / opt / caches via eval_shape."""
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    params_s = jax.eval_shape(lambda k: init_lm(k, cfg), key)
+    opt_s = jax.eval_shape(opt.init, params_s) if shape.kind == "train" else None
+    caches_s = None
+    if shape.kind == "decode":
+        caches_s = jax.eval_shape(
+            lambda: init_caches(cfg, shape.global_batch, shape.seq_len))
+    return params_s, opt_s, caches_s
+
+
+# ---------------------------------------------------------------------------
+# HLO collective accounting
+# ---------------------------------------------------------------------------
+
+_SHAPE_RE = re.compile(r"(bf16|f32|f16|s32|u32|s8|u8|pred|f64|s64|u64|s16|u16)\[([\d,]*)\]")
+_BYTES = {"bf16": 2, "f16": 2, "f32": 4, "f64": 8, "s32": 4, "u32": 4,
+          "s8": 1, "u8": 1, "pred": 1, "s64": 8, "u64": 8, "s16": 2, "u16": 2}
+_COLL_KINDS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _first_shape_bytes(s: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(s):
+        dt, dims = m.group(1), m.group(2)
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Per-device bytes moved over the interconnect, by collective kind.
+
+    Ring-algorithm accounting on the per-device (post-SPMD) module:
+      all-gather: output_bytes (each device receives ~full output)
+      all-reduce: 2 × input_bytes (reduce-scatter + all-gather phases)
+      reduce-scatter / all-to-all / collective-permute: input_bytes
+    """
+    out = {k: 0.0 for k in _COLL_KINDS}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = re.match(r"%?[\w\.\-]+\s*=\s*(.*)$", line)
+        if not m:
+            continue
+        rhs = m.group(1)
+        kind = None
+        for k in _COLL_KINDS:
+            if re.search(rf"\b{k}(-start|-done)?\(", rhs):
+                kind = k
+                break
+        if kind is None or f"{kind}-done(" in rhs:
+            continue
+        # split "OUTPUT_SHAPES opname(INPUT...)": measure both sides
+        paren = rhs.index("(")
+        out_bytes = _first_shape_bytes(rhs[:paren])
+        in_bytes = _first_shape_bytes(rhs[paren:])
+        if kind == "all-gather":
+            out[kind] += out_bytes
+        elif kind == "all-reduce":
+            out[kind] += 2 * in_bytes
+        else:
+            out[kind] += in_bytes
+    out["total"] = sum(out.values())
+    return out
+
+
+# ---------------------------------------------------------------------------
+# cell lowering
+# ---------------------------------------------------------------------------
+
+def _lower_one(cfg, shape, mesh, remat, n_microbatches, unroll=False,
+               policy="2d", quantize=False):
+    """Lower + compile one configuration; returns (compiled, compile_s)."""
+    params_s, opt_s, caches_s = _eval_shapes(cfg, shape)
+    if quantize and shape.kind != "train":
+        from repro.models.quantized import quantize_tree
+        params_s = jax.eval_shape(quantize_tree, params_s)
+    ins = input_specs(cfg, shape)
+
+    with jax.set_mesh(mesh) if hasattr(jax, "set_mesh") else mesh:
+        p_shard = shd.param_shardings(params_s, mesh, policy)
+        if shape.kind == "train":
+            o_shard = shd.opt_shardings(opt_s, params_s, mesh, policy)
+            b_shard = shd.batch_shardings(ins, mesh, policy)
+            step = make_train_step(cfg, opt.AdamWConfig(),
+                                   n_microbatches=n_microbatches, remat=remat,
+                                   unroll=unroll)
+            jitted = jax.jit(
+                step,
+                in_shardings=(p_shard, o_shard, b_shard),
+                out_shardings=(p_shard, o_shard, None),
+                donate_argnums=(0, 1),
+            )
+            lowered = jitted.lower(params_s, opt_s, ins)
+        elif shape.kind == "prefill":
+            b_shard = shd.batch_shardings(ins, mesh, policy)
+            fn = make_prefill(cfg, remat=remat, unroll=unroll)
+            jitted = jax.jit(
+                fn,
+                in_shardings=(p_shard,) + tuple(b_shard[k] for k in ins),
+                out_shardings=shd.logits_sharding(mesh, shape.global_batch),
+            )
+            lowered = jitted.lower(params_s, *[ins[k] for k in ins])
+        else:  # decode
+            c_shard = shd.cache_shardings(caches_s, mesh)
+            vec = shd.vector_sharding(mesh, shape.global_batch)
+            fn = make_serve_step(cfg, unroll=unroll)
+            mem = ins.get("memory")
+            in_sh = [p_shard, c_shard, vec, vec]
+            args = [params_s, caches_s, ins["token"], ins["pos"]]
+            if mem is not None:
+                in_sh.append(shd.batch_shardings({"m": mem}, mesh)["m"])
+                args.append(mem)
+            jitted = jax.jit(
+                fn,
+                in_shardings=tuple(in_sh),
+                out_shardings=(shd.logits_sharding(mesh, shape.global_batch),
+                               c_shard),
+                donate_argnums=(1,),
+            )
+            lowered = jitted.lower(*args)
+
+        t0 = time.time()
+        compiled = lowered.compile()
+        compile_s = time.time() - t0
+    return compiled, compile_s
+
+
+def _measure(compiled) -> Dict:
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    cost = cost[0] if isinstance(cost, list) else cost
+    hlo = compiled.as_text()
+    colls = collective_bytes(hlo)
+    return {
+        "flops": float(cost.get("flops", -1)),
+        "bytes": float(cost.get("bytes accessed", -1)),
+        "colls": colls,
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "peak_bytes": getattr(mem, "peak_memory_in_bytes", None)
+            or getattr(mem, "serialized_size_in_bytes", None),
+        },
+    }
+
+
+def _shrink_depth(cfg: ModelConfig, n: int) -> ModelConfig:
+    kw = {"n_layers": n}
+    if cfg.n_encoder_layers:
+        kw["n_encoder_layers"] = n
+    return cfg.replace(**kw)
+
+
+def lower_cell(
+    arch: str,
+    shape_name: str,
+    multi_pod: bool = False,
+    remat: str = "dots",
+    n_microbatches: int = 1,
+    variant: str = "base",
+    calibrate_depth: bool = True,
+    cfg_override: Optional[ModelConfig] = None,
+    policy: str = "2d",
+    quantize: bool = False,
+) -> Dict:
+    """Lower+compile a cell, with depth calibration.
+
+    XLA's cost_analysis counts a `while`(scan) body ONCE, not × trip
+    count, so the L-layer scan under-reports FLOPs/bytes/collectives by
+    ~L×.  We therefore compile depth-1 and depth-2 variants of the same
+    cell and extrapolate linearly:  m(L) = m(1) + (L-1)·[m(2)-m(1)].
+    The full-depth compile is still performed — it is the actual dry-run
+    artifact (sharding feasibility + true per-device memory footprint).
+    """
+    cfg = cfg_override or get_config(arch)
+    shape = SHAPES_BY_NAME[shape_name]
+    if not cell_is_supported(cfg, shape):
+        return {"arch": arch, "shape": shape_name, "skipped": True,
+                "reason": "long_500k needs sub-quadratic mixing (DESIGN.md)"}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    compiled, compile_s = _lower_one(cfg, shape, mesh, remat, n_microbatches,
+                                     policy=policy, quantize=quantize)
+    full = _measure(compiled)
+
+    flops, bytes_, colls = full["flops"], full["bytes"], dict(full["colls"])
+    calibrated = False
+    if calibrate_depth and cfg.n_layers > 2:
+        # unrolled depth-1/2 compiles: exact per-layer cost accounting
+        c1, _ = _lower_one(_shrink_depth(cfg, 1), shape, mesh, remat,
+                           n_microbatches, unroll=True, policy=policy,
+                           quantize=quantize)
+        c2, _ = _lower_one(_shrink_depth(cfg, 2), shape, mesh, remat,
+                           n_microbatches, unroll=True, policy=policy,
+                           quantize=quantize)
+        m1, m2 = _measure(c1), _measure(c2)
+        L = cfg.n_layers
+
+        def extrap(v1, v2):
+            # per-layer delta clamped at 0: XLA occasionally restructures
+            # between depths, making m2<m1 (would extrapolate negative)
+            return v1 + (L - 1) * max(0.0, v2 - v1)
+
+        flops = extrap(m1["flops"], m2["flops"])
+        bytes_ = extrap(m1["bytes"], m2["bytes"])
+        colls = {k: extrap(m1["colls"][k], m2["colls"][k])
+                 for k in m1["colls"]}
+        calibrated = True
+
+    result = {
+        "arch": arch,
+        "shape": shape_name,
+        "variant": variant,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_devices": int(np.prod(list(mesh.shape.values()))),
+        "compile_s": round(compile_s, 1),
+        "flops_per_device": flops,
+        "bytes_per_device": bytes_,
+        "collective_bytes": colls,
+        "flops_per_device_raw": full["flops"],
+        "collective_bytes_raw": full["colls"],
+        "depth_calibrated": calibrated,
+        "memory": full["memory"],
+        "params": cfg.param_count(),
+        "active_params": cfg.param_count(active_only=True),
+        "tokens": shape.global_batch * (1 if shape.is_decode else shape.seq_len),
+        "kind": shape.kind,
+        "skipped": False,
+    }
+    return result
+
+
+def save_result(res: Dict, out_dir: str = OUT_DIR) -> str:
+    os.makedirs(out_dir, exist_ok=True)
+    tag = f"{res['arch']}_{res['shape']}_{res['mesh']}"
+    if res.get("variant", "base") != "base":
+        tag += f"_{res['variant']}"
+    path = os.path.join(out_dir, tag + ".json")
+    with open(path, "w") as f:
+        json.dump(res, f, indent=1)
+    return path
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--remat", default="dots")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--variant", default="base")
+    ap.add_argument("--policy", default="2d", choices=["2d", "dp", "dp2", "serve"])
+    ap.add_argument("--quantize", action="store_true",
+                    help="int8 weight-only quantization (serve cells)")
+    ap.add_argument("--kvpad", type=int, default=0,
+                    help="replicate kv heads to this count for decode")
+    ap.add_argument("--moe", default=None, choices=["grouped", "ep"],
+                    help="MoE dispatch implementation override")
+    ap.add_argument("--kvint8", action="store_true",
+                    help="int8 KV cache for decode cells")
+    ap.add_argument("--ssmchunk", type=int, default=0,
+                    help="SSD chunk size override")
+    ap.add_argument("--out", default=OUT_DIR)
+    args = ap.parse_args()
+
+    cells = []
+    archs = list(ARCHS) if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES_BY_NAME) if (args.all or not args.shape) else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    for a in archs:
+        for s in shapes:
+            for mp in meshes:
+                cells.append((a, s, mp))
+
+    n_ok = n_skip = n_fail = 0
+    for a, s, mp in cells:
+        tag = f"{a} × {s} × {'2x16x16' if mp else '16x16'}"
+        try:
+            cfg_o = None
+            if args.kvpad or args.moe or args.kvint8 or args.ssmchunk:
+                kw = {}
+                if args.ssmchunk:
+                    kw["ssm_chunk"] = args.ssmchunk
+                if args.kvpad:
+                    kw["kv_head_pad"] = args.kvpad
+                if args.moe:
+                    kw["moe_impl"] = args.moe
+                if args.kvint8:
+                    kw["kv_cache_dtype"] = "int8"
+                cfg_o = get_config(a).replace(**kw)
+            res = lower_cell(a, s, multi_pod=mp, remat=args.remat,
+                             n_microbatches=args.microbatches,
+                             variant=args.variant, policy=args.policy,
+                             quantize=args.quantize, cfg_override=cfg_o)
+            if res.get("skipped"):
+                n_skip += 1
+                print(f"[skip] {tag}: {res['reason']}")
+            else:
+                n_ok += 1
+                path = save_result(res, args.out)
+                print(f"[ ok ] {tag}: compile={res['compile_s']}s "
+                      f"flops/dev={res['flops_per_device']:.3e} "
+                      f"coll={res['collective_bytes']['total']:.3e}B -> {path}")
+        except Exception as e:  # noqa: BLE001
+            n_fail += 1
+            print(f"[FAIL] {tag}: {type(e).__name__}: {e}")
+            traceback.print_exc(limit=3)
+    print(f"\ndryrun: ok={n_ok} skip={n_skip} fail={n_fail}")
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

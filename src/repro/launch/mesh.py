@@ -1,0 +1,24 @@
+"""Production mesh construction (no jax device-state side effects on import)."""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 = 256-chip pod (data, model); 2×16×16 = 512-chip two-pod mesh.
+
+    Call only after the XLA_FLAGS host-device-count env var is set by the
+    entrypoint (launch/dryrun.py) — importing this module never touches
+    jax device state.
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model_parallel: int = 1):
+    """Tiny mesh over the real host devices (tests / CPU training demos)."""
+    n = len(jax.devices())
+    data = max(1, n // model_parallel)
+    return jax.make_mesh((data, model_parallel), ("data", "model"))

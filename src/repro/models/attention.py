@@ -1,0 +1,218 @@
+"""Grouped-query attention with RoPE, KV cache, sliding window, cross-attn.
+
+Shapes: x (B, L, D); cache {"k","v"}: (B, S, n_kv, hd) with "pos" scalar
+write index.  Decode calls use L=1 queries against the full cache.
+
+The implementation is einsum-based; sharding is applied from outside via
+pjit in_shardings/with_sharding_constraint (see repro.distributed.sharding)
+— head dims shard on the 'model' mesh axis, batch on ('pod','data').
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import Params, apply_rope, dense, dense_init, rope_angles
+
+NEG_INF = -1e30
+
+
+def attn_init(key, d: int, n_heads: int, n_kv: int, hd: int, dtype,
+              qkv_bias: bool = False) -> Params:
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    return {
+        "q": dense_init(kq, d, n_heads * hd, dtype, bias=qkv_bias),
+        "k": dense_init(kk, d, n_kv * hd, dtype, bias=qkv_bias),
+        "v": dense_init(kv, d, n_kv * hd, dtype, bias=qkv_bias),
+        "o": dense_init(ko, n_heads * hd, d, dtype),
+    }
+
+
+def _split_heads(x: jax.Array, n: int, hd: int) -> jax.Array:
+    return x.reshape(*x.shape[:-1], n, hd)
+
+
+def _sdpa(q, k, v, mask, scale):
+    """q (B,Lq,H,hd), k/v (B,Lk,G,hd) with H = G·rep (GQA)."""
+    b, lq, h, hd = q.shape
+    g = k.shape[2]
+    rep = h // g
+    qg = q.reshape(b, lq, g, rep, hd)
+    logits = jnp.einsum("blgrh,bsgh->bgrls", qg, k).astype(jnp.float32) * scale
+    logits = jnp.where(mask[:, None, None, :, :], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bgrls,bsgh->blgrh", probs, v)
+    return out.reshape(b, lq, h, hd)
+
+
+def _banded_sdpa(q, k, v, window: int, scale):
+    """Exact sliding-window attention in O(L·2W) instead of O(L²).
+
+    Queries are blocked by `window`; block i attends keys of blocks i-1
+    and i only (sufficient for span `window`).  Kills the L×L score/mask
+    temps that made windowed 32k prefill memory-bound (hymba: 7 TB → GBs
+    of temps per device; EXPERIMENTS.md §Perf cell 4)."""
+    b, l, h, hd = q.shape
+    g = k.shape[2]
+    rep = h // g
+    w = window
+    assert l % w == 0, (l, w)
+    nb = l // w
+    qb = q.reshape(b, nb, w, g, rep, hd)
+    kb = k.reshape(b, nb, w, g, hd)
+    vb = v.reshape(b, nb, w, g, hd)
+    zeros = jnp.zeros_like(kb[:, :1])
+    k2 = jnp.concatenate(
+        [jnp.concatenate([zeros, kb[:, :-1]], axis=1), kb], axis=2)  # (b,nb,2w,g,hd)
+    v2 = jnp.concatenate(
+        [jnp.concatenate([jnp.zeros_like(vb[:, :1]), vb[:, :-1]], axis=1), vb],
+        axis=2)
+    logits = jnp.einsum("bnwgrh,bnsgh->bngrws", qb, k2).astype(jnp.float32) * scale
+    t = jnp.arange(w)[:, None]
+    s = jnp.arange(2 * w)[None, :]
+    rel = t + w - s                      # key→query distance
+    valid = (rel >= 0) & (rel < w)       # causal ∧ within window
+    blk0 = (jnp.arange(nb) == 0)[None, :, None, None, None, None]
+    valid = valid[None, None, None, None, :, :] & ~(blk0 & (s < w)[None, None, None, None, :, :])
+    logits = jnp.where(valid, logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bngrws,bnsgh->bnwgrh", probs, v2)
+    return out.reshape(b, l, h, hd)
+
+
+def attention(
+    p: Params,
+    x: jax.Array,
+    positions: jax.Array,
+    *,
+    n_heads: int,
+    n_kv: int,
+    hd: int,
+    rope_theta: float,
+    sliding_window: int = 0,
+    cache: Optional[Dict[str, jax.Array]] = None,
+    cache_index: Optional[jax.Array] = None,
+    memory: Optional[jax.Array] = None,
+    causal: bool = True,
+    kv_head_pad: int = 0,
+) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    """Self- or cross-attention.
+
+    cache: decode-mode KV cache dict {"k","v": (B,S,G,hd)} — new keys are
+      written at `cache_index` (ring slot for sliding window, else the true
+      position); `positions` always carries TRUE positions for RoPE.
+    memory: if given, cross-attention over memory (B,M,D) (no RoPE/cache).
+    """
+    b, l, _ = x.shape
+    q = _split_heads(dense(p["q"], x), n_heads, hd)
+
+    if memory is not None:
+        k = _split_heads(dense(p["k"], memory), n_kv, hd)
+        v = _split_heads(dense(p["v"], memory), n_kv, hd)
+        m = jnp.ones((b, l, k.shape[1]), bool)
+        out = _sdpa(q, k, v, m, 1.0 / jnp.sqrt(hd).astype(jnp.float32))
+        return dense(p["o"], out.reshape(b, l, n_heads * hd)), None
+
+    k = _split_heads(dense(p["k"], x), n_kv, hd)
+    v = _split_heads(dense(p["v"], x), n_kv, hd)
+    cos, sin = rope_angles(positions, hd, rope_theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+
+    if cache is not None:
+        # decode: scatter new kv at the write slot, attend over whole cache.
+        # Pin fresh k/v and the updated cache to the cache's own layout —
+        # otherwise GSPMD reshards the whole cache every step (observed as
+        # "involuntary full rematerialization" = a full-cache all-gather).
+        from repro.distributed.hints import hint_kv
+        s = cache["k"].shape[1]
+        idx = (cache_index if cache_index is not None else positions)[:, 0]
+        if kv_head_pad > n_kv:
+            # replicate kv heads up to the TP degree: each q-head group
+            # keeps its original kv head (consecutive duplication matches
+            # the grouped-query head order), attention stays fully local
+            rep = kv_head_pad // n_kv
+            k = jnp.repeat(k, rep, axis=2)
+            v = jnp.repeat(v, rep, axis=2)
+        k = hint_kv(k)
+        v = hint_kv(v)
+        quant = cache["k"].dtype == jnp.int8
+        if quant:
+            # int8 KV: symmetric per-(entry, head) scales; halves cache HBM
+            # traffic (SIMDRAM-aligned int-domain serving)
+            def q8(x):
+                amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
+                scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+                qx = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                              -127, 127).astype(jnp.int8)
+                return qx, scale
+            kq, ks = q8(k)
+            vq, vs = q8(v)
+        # masked elementwise write instead of vmap(dynamic_update_slice):
+        # the batched scatter forces GSPMD to all-gather the cache over the
+        # batch axis every step (measured 2×2.1 GB/layer on qwen decode);
+        # the where() form is embarrassingly parallel in every dim
+        write = (jnp.arange(s)[None, :] == idx[:, None])[:, :, None, None]
+        if quant:
+            newk = jnp.where(write, kq, cache["k"])
+            newv = jnp.where(write, vq, cache["v"])
+            new_ks = jnp.where(write[..., 0], ks, cache["k_scale"])
+            new_vs = jnp.where(write[..., 0], vs, cache["v_scale"])
+            k_eff = (newk.astype(jnp.float32) * new_ks[..., None]).astype(q.dtype)
+            v_eff = (newv.astype(jnp.float32) * new_vs[..., None]).astype(q.dtype)
+        else:
+            newk = jnp.where(write, k.astype(cache["k"].dtype), cache["k"])
+            newv = jnp.where(write, v.astype(cache["v"].dtype), cache["v"])
+            k_eff, v_eff = newk, newv
+        newk = hint_kv(newk)
+        newv = hint_kv(newv)
+        slots = jnp.arange(s)[None, :]             # (1,S)
+        cur = positions[:, 0][:, None]             # (B,1) true position
+        if sliding_window:
+            # ring buffer of size s == sliding_window: slot age, oldest drop
+            age = (idx[:, None] - slots) % s       # 0 = just written
+            true_pos = cur - age
+            valid = true_pos >= 0
+        else:
+            valid = slots <= cur
+        mask = valid[:, None, :] & jnp.ones((b, l, s), bool)
+        out = _sdpa(q, k_eff, v_eff, mask, 1.0 / jnp.sqrt(hd).astype(jnp.float32))
+        new_cache = {"k": newk, "v": newv}
+        if quant:
+            new_cache["k_scale"] = new_ks
+            new_cache["v_scale"] = new_vs
+        return dense(p["o"], out.reshape(b, l, n_heads * hd)), new_cache
+
+    # full-sequence (train / prefill)
+    if sliding_window and causal and l > sliding_window and l % sliding_window == 0:
+        # banded O(L·2W) form — exact for contiguous positions
+        out = _banded_sdpa(q, k, v, sliding_window,
+                           1.0 / jnp.sqrt(hd).astype(jnp.float32))
+        return dense(p["o"], out.reshape(b, l, n_heads * hd)), None
+    qpos = positions[:, :, None]                   # (B,L,1)
+    kpos = positions[:, None, :]                   # (B,1,L)
+    mask = jnp.ones((b, l, l), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if sliding_window:
+        mask &= kpos > (qpos - sliding_window)
+    out = _sdpa(q, k, v, mask, 1.0 / jnp.sqrt(hd).astype(jnp.float32))
+    return dense(p["o"], out.reshape(b, l, n_heads * hd)), None
+
+
+def init_cache(b: int, s: int, n_kv: int, hd: int, dtype,
+               quantized: bool = False) -> Dict[str, jax.Array]:
+    if quantized:
+        return {
+            "k": jnp.zeros((b, s, n_kv, hd), jnp.int8),
+            "v": jnp.zeros((b, s, n_kv, hd), jnp.int8),
+            "k_scale": jnp.ones((b, s, n_kv), jnp.float32),
+            "v_scale": jnp.ones((b, s, n_kv), jnp.float32),
+        }
+    return {
+        "k": jnp.zeros((b, s, n_kv, hd), dtype),
+        "v": jnp.zeros((b, s, n_kv, hd), dtype),
+    }

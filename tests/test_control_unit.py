@@ -1,0 +1,60 @@
+"""Step 3 control unit: the scan/switch interpreter ≡ subarray oracle."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.control_unit import encode_uprogram, make_interpreter
+from repro.core.isa import SimdramDevice, compile_op
+from repro.core.ops_library import ALL_OPS
+from repro.core.subarray import Subarray, pack_bits
+
+
+@pytest.mark.parametrize("name", ["addition", "greater", "if_else", "relu",
+                                  "bitcount", "xor_red"])
+def test_interpreter_equals_subarray(name):
+    n = 8
+    spec, up = compile_op(name, n)
+    rng = np.random.default_rng(11)
+    cols = 64
+    ops_vals = [rng.integers(0, 1 << w, size=cols).astype(np.uint64)
+                for w in spec.operand_bits]
+
+    sa = Subarray(up.n_rows_total, cols)
+    state = np.zeros((up.n_rows_total, cols // 32), np.uint32)
+    state[7] = 0xFFFFFFFF
+    for op_idx, rows in enumerate(up.in_rows):
+        planes = pack_bits(ops_vals[op_idx], len(rows), cols)
+        for j, r in enumerate(rows):
+            sa.rows[r] = planes[j]
+            state[r] = planes[j]
+    sa.execute(up.commands)
+
+    run = make_interpreter()
+    out = np.asarray(run(jnp.asarray(state), jnp.asarray(encode_uprogram(up))))
+    np.testing.assert_array_equal(out, sa.rows)
+
+
+def test_same_length_programs_share_one_executable():
+    """Programs are data: identical-shape command tables reuse the jit."""
+    run = make_interpreter()
+    _, up1 = compile_op("addition", 8)
+    t1 = encode_uprogram(up1)
+    state = jnp.zeros((up1.n_rows_total, 2), jnp.uint32)
+    run(state, jnp.asarray(t1))
+    # mutate the table (swap two AAPs) -> same compiled fn, different result
+    t2 = np.array(t1)
+    t2[0], t2[1] = t1[1].copy(), t1[0].copy()
+    run(state, jnp.asarray(t2))  # must not raise / recompile-error
+
+
+@pytest.mark.parametrize("backend", ["subarray", "interp", "bitplane"])
+def test_device_backends_agree(backend):
+    rng = np.random.default_rng(5)
+    x = rng.integers(0, 256, size=70).astype(np.int64)
+    y = rng.integers(0, 256, size=70).astype(np.int64)
+    dev = SimdramDevice(backend=backend)
+    got = np.asarray(dev.bbop("addition", x, y, n_bits=8)).astype(np.int64)
+    np.testing.assert_array_equal(got, (x + y) % 256)
+    got = np.asarray(dev.bbop("greater", x, y, n_bits=8)).astype(np.int64)
+    np.testing.assert_array_equal(got, (x > y).astype(np.int64))

@@ -1,0 +1,74 @@
+"""Timing / energy / area / reliability / costmodel properties."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.area import DEFAULT_AREA
+from repro.core.costmodel import decide
+from repro.core.energy import energy_per_elem_pj, host_energy_per_elem_pj
+from repro.core.isa import compile_op
+from repro.core.reliability import TECH_NODES, tra_failure_rate
+from repro.core.timing import (CPU_BASELINE, DDR4, DramConfig,
+                               host_throughput_gops, throughput_gops,
+                               uprogram_latency_s)
+
+
+def test_throughput_scales_with_banks():
+    _, up = compile_op("addition", 16)
+    t1 = throughput_gops(up, DramConfig(n_banks=1))
+    t16 = throughput_gops(up, DramConfig(n_banks=16))
+    assert abs(t16 / t1 - 16.0) < 1e-6
+
+
+def test_wider_ops_are_slower():
+    for name in ("addition", "multiplication"):
+        l8 = uprogram_latency_s(compile_op(name, 8)[1])
+        l16 = uprogram_latency_s(compile_op(name, 16)[1])
+        l32 = uprogram_latency_s(compile_op(name, 32)[1])
+        assert l8 < l16 < l32, name
+
+
+def test_simdram_beats_cpu_gpu_on_throughput_and_energy():
+    """Paper's headline: >> CPU throughput, >> CPU/GPU energy efficiency."""
+    _, up = compile_op("addition", 8)
+    sd = throughput_gops(up, DDR4)
+    cpu = host_throughput_gops(8, 2, 1, CPU_BASELINE)
+    assert sd / cpu > 10
+    e_sd = energy_per_elem_pj(up)
+    e_cpu = host_energy_per_elem_pj(8, 2, 1, CPU_BASELINE)
+    assert e_cpu / e_sd > 10
+
+
+def test_area_claim():
+    rep = DEFAULT_AREA.report()
+    assert rep["meets_paper_claim_lt_1pct"]
+    assert rep["total_dram_frac"] < 0.01
+
+
+def test_reliability_monotone_in_sigma():
+    rates = [tra_failure_rate(s, TECH_NODES["17nm"], 50_000)
+             for s in (0.0, 0.1, 0.2, 0.3)]
+    assert rates[0] == 0.0
+    assert rates[-1] > rates[1]
+    assert all(a <= b + 1e-9 for a, b in zip(rates, rates[1:]))
+
+
+def test_reliability_fine_at_realistic_variation():
+    """Paper: correct operation maintained across tech nodes (σ ≤ 10%)."""
+    for node, cell in TECH_NODES.items():
+        assert tra_failure_rate(0.10, cell, 50_000) < 1e-4, node
+
+
+def test_costmodel_monotone_in_size():
+    small = decide("addition", 8, 1 << 10)
+    big = decide("addition", 8, 1 << 24)
+    assert big.speedup > small.speedup
+
+
+def test_costmodel_prefers_vertical_operands():
+    cold = decide("addition", 8, 1 << 20, operands_vertical=0)
+    warm = decide("addition", 8, 1 << 20, operands_vertical=2,
+                  result_stays_vertical=True)
+    assert warm.pum_total_s < cold.pum_total_s
+    assert warm.speedup > cold.speedup

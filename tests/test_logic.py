@@ -1,0 +1,115 @@
+"""Circuit IR + Step-1 synthesis: unit + property tests."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.logic import AND, MAJ, NOT, OR, XOR, Circuit
+from repro.core.synthesis import maj_full_adder, optimize_mig, synthesize, to_mig
+
+U = np.uint64
+ONE = ~U(0)
+
+
+def _rand_inputs(c, names, n=64, seed=0):
+    rng = np.random.default_rng(seed)
+    vals = {}
+    for nid in range(len(c.ops)):
+        if c.ops[nid] == "in":
+            bits = rng.integers(0, 2, size=n).astype(np.uint64)
+            vals[nid] = np.where(bits == 1, ONE, U(0))
+    return vals
+
+
+def test_peephole_identities():
+    c = Circuit()
+    a, b = c.input("a"), c.input("b")
+    assert c.AND(a, a) == a
+    assert c.OR(a, a) == a
+    assert c.XOR(a, a) == c.const(0)
+    assert c.NOT(c.NOT(a)) == a
+    assert c.AND(a, c.const(0)) == c.const(0)
+    assert c.AND(a, c.const(1)) == a
+    assert c.MAJ(a, a, b) == a
+    assert c.MAJ(a, c.NOT(a), b) == b
+    # hash-consing: same gate -> same node
+    assert c.AND(a, b) == c.AND(b, a)
+
+
+def test_maj_truth_table():
+    c = Circuit()
+    x, y, z = (c.input(s) for s in "xyz")
+    m = c.MAJ(x, y, z)
+    c.mark_output(m, "m")
+    for bits in range(8):
+        vals = {x: U(0) if not (bits & 1) else ONE,
+                y: U(0) if not (bits & 2) else ONE,
+                z: U(0) if not (bits & 4) else ONE}
+        (out,) = c.evaluate_outputs(vals, U(0), ONE)
+        want = ONE if bin(bits).count("1") >= 2 else U(0)
+        assert out == want
+
+
+def test_maj_full_adder_exhaustive():
+    c = Circuit()
+    a, b, ci = (c.input(s) for s in "abc")
+    s, co = maj_full_adder(c, a, b, ci)
+    c.mark_output(s, "s")
+    c.mark_output(co, "c")
+    for bits in range(8):
+        va, vb, vc = bits & 1, (bits >> 1) & 1, (bits >> 2) & 1
+        vals = {a: ONE if va else U(0), b: ONE if vb else U(0),
+                ci: ONE if vc else U(0)}
+        s_o, c_o = c.evaluate_outputs(vals, U(0), ONE)
+        total = va + vb + vc
+        assert (s_o == ONE) == bool(total & 1)
+        assert (c_o == ONE) == (total >= 2)
+
+
+@st.composite
+def random_circuit(draw):
+    c = Circuit()
+    nodes = [c.input(f"i{k}") for k in range(draw(st.integers(2, 5)))]
+    nodes.append(c.const(0))
+    nodes.append(c.const(1))
+    for _ in range(draw(st.integers(1, 25))):
+        op = draw(st.sampled_from(["and", "or", "xor", "not", "maj"]))
+        pick = lambda: nodes[draw(st.integers(0, len(nodes) - 1))]
+        if op == "not":
+            nodes.append(c.NOT(pick()))
+        elif op == "maj":
+            nodes.append(c.MAJ(pick(), pick(), pick()))
+        else:
+            nodes.append(getattr(c, op.upper())(pick(), pick()))
+    c.mark_output(nodes[-1], "out")
+    c.mark_output(nodes[len(nodes) // 2], "mid")
+    return c
+
+
+@given(random_circuit())
+@settings(max_examples=60, deadline=None)
+def test_synthesis_preserves_semantics(circ):
+    """AIG->MIG->optimize is semantics-preserving on random circuits."""
+    mig, report = synthesize(circ)
+    assert mig.is_mig()
+    # map inputs by name
+    src_in = {circ.names[i]: i for i in range(len(circ.ops)) if circ.ops[i] == "in"}
+    dst_in = {mig.names[i]: i for i in range(len(mig.ops)) if mig.ops[i] == "in"}
+    vals_src = _rand_inputs(circ, None)
+    vals_dst = {dst_in[circ.names[nid]]: v for nid, v in vals_src.items()
+                if circ.names[nid] in dst_in}
+    # any input dropped by simplification gets an arbitrary value - fine
+    o1 = circ.evaluate_outputs(vals_src, U(0), ONE)
+    o2 = mig.evaluate_outputs(vals_dst, U(0), ONE)
+    for a, b in zip(o1, o2):
+        assert np.array_equal(a, b)
+
+
+@given(random_circuit())
+@settings(max_examples=30, deadline=None)
+def test_optimize_never_grows(circ):
+    mig = to_mig(circ)
+    opt = optimize_mig(mig)
+    n0 = sum(1 for n in mig.live_nodes() if mig.ops[n] == MAJ)
+    n1 = sum(1 for n in opt.live_nodes() if opt.ops[n] == MAJ)
+    assert n1 <= n0

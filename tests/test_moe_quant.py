@@ -1,0 +1,81 @@
+"""MoE dispatch equivalence + int8 weight quantization."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.moe import moe_forward, moe_forward_grouped, moe_init
+from repro.models.quantized import dequantize_weight, quantize_tree
+
+
+def test_grouped_matches_dense_dispatch():
+    """With capacity ≥ T·K/E·E (no drops), grouped == dense-masked MoE."""
+    key = jax.random.PRNGKey(0)
+    d, ff, n_e, top_k = 16, 32, 4, 2
+    p = moe_init(key, d, ff, n_e, "swiglu", jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, d)) * 0.5
+    out_d, aux_d = moe_forward(p, x, top_k=top_k, act="swiglu")
+    out_g, aux_g = moe_forward_grouped(p, x, top_k=top_k, act="swiglu",
+                                       capacity_factor=float(n_e))
+    np.testing.assert_allclose(np.asarray(out_g), np.asarray(out_d),
+                               rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(float(aux_g), float(aux_d), rtol=1e-5)
+
+
+def test_grouped_capacity_drops_are_weighted_zero():
+    """Tiny capacity: output must still be finite and ≈ a scaled version
+    (dropped tokens contribute zero, nothing NaNs or double-writes)."""
+    key = jax.random.PRNGKey(2)
+    d, ff, n_e = 8, 16, 4
+    p = moe_init(key, d, ff, n_e, "swiglu", jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(3), (1, 32, d))
+    out, _ = moe_forward_grouped(p, x, top_k=2, act="swiglu",
+                                 capacity_factor=0.25)
+    assert np.isfinite(np.asarray(out)).all()
+
+
+def test_quantize_roundtrip_error_bounded():
+    key = jax.random.PRNGKey(4)
+    w = jax.random.normal(key, (64, 32)) * 0.1
+    q = quantize_tree({"w": w})
+    assert q["w_q"].dtype == jnp.int8
+    assert q["scale"].shape == (32,)
+    back = dequantize_weight(q, jnp.float32)
+    err = np.abs(np.asarray(back) - np.asarray(w)).max()
+    amax = float(jnp.abs(w).max())
+    assert err <= amax / 127.0 + 1e-7
+
+
+def test_quantized_lm_decode_close_to_fp():
+    from repro.configs import smoke_config
+    from repro.models.transformer import decode_step, init_caches, init_lm
+
+    cfg = smoke_config("yi-6b").replace(param_dtype="float32", n_layers=2)
+    params = init_lm(jax.random.PRNGKey(0), cfg)
+    qparams = quantize_tree(params)
+    caches = init_caches(cfg, 1, 8)
+    tok = jnp.zeros((1,), jnp.int32)
+    pos = jnp.zeros((1,), jnp.int32)
+    lg_fp, _ = decode_step(params, caches, tok, pos, cfg)
+    lg_q, _ = decode_step(qparams, caches, tok, pos, cfg)
+    # int8 weight error is small relative to logit scale
+    denom = float(jnp.abs(lg_fp).max()) + 1e-6
+    rel = float(jnp.abs(lg_q - lg_fp).max()) / denom
+    assert rel < 0.15, rel
+
+
+def test_quantized_moe_forward():
+    key = jax.random.PRNGKey(5)
+    d, ff, n_e = 8, 16, 4
+    p = moe_init(key, d, ff, n_e, "swiglu", jnp.float32)
+    # stack as if layers: (E,d,ff) already 3D -> quantize_tree handles
+    qp = quantize_tree(p)
+    assert "w_q" in qp["up"]
+    x = jax.random.normal(jax.random.PRNGKey(6), (1, 8, d)) * 0.5
+    out_q, _ = moe_forward_grouped(qp, x, top_k=2, act="swiglu",
+                                   capacity_factor=4.0)
+    out_f, _ = moe_forward_grouped(p, x, top_k=2, act="swiglu",
+                                   capacity_factor=4.0)
+    np.testing.assert_allclose(np.asarray(out_q), np.asarray(out_f),
+                               rtol=0.2, atol=0.05)

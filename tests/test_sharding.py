@@ -1,0 +1,103 @@
+"""Sharding rules: every param of every arch fits both production meshes."""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import AbstractMesh
+
+from repro.configs import ARCHS, get_config
+from repro.distributed import sharding as shd
+from repro.models.config import SHAPES_BY_NAME
+from repro.models.transformer import init_caches, init_lm
+
+MESHES = {
+    "16x16": AbstractMesh((16, 16), ("data", "model")),
+    "2x16x16": AbstractMesh((2, 16, 16), ("pod", "data", "model")),
+}
+
+
+def _axis_size(mesh, axis):
+    if axis is None:
+        return 1
+    if isinstance(axis, str):
+        return mesh.shape[axis]
+    return math.prod(mesh.shape[a] for a in axis)
+
+
+@pytest.mark.parametrize("mesh_name", list(MESHES))
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_param_specs_divide(arch, mesh_name):
+    cfg = get_config(arch)
+    mesh = MESHES[mesh_name]
+    params_s = jax.eval_shape(
+        lambda k: init_lm(k, cfg), jax.ShapeDtypeStruct((2,), jnp.uint32))
+
+    def check(path, leaf):
+        spec = shd.param_spec(path, leaf, mesh)
+        assert len(spec) <= len(leaf.shape)
+        for dim, ax in zip(leaf.shape, tuple(spec) + (None,) * leaf.ndim):
+            assert dim % _axis_size(mesh, ax) == 0, (path, leaf.shape, spec)
+
+    jax.tree_util.tree_map_with_path(check, params_s)
+
+
+@pytest.mark.parametrize("arch", ["qwen2-72b", "mamba2-370m", "hymba-1.5b",
+                                  "internvl2-1b", "seamless-m4t-medium"])
+@pytest.mark.parametrize("shape_name", ["decode_32k", "long_500k"])
+def test_cache_specs_divide(arch, shape_name):
+    cfg = get_config(arch)
+    from repro.configs import cell_is_supported
+    shape = SHAPES_BY_NAME[shape_name]
+    if not cell_is_supported(cfg, shape):
+        pytest.skip("unsupported cell (documented skip)")
+    mesh = MESHES["2x16x16"]
+    caches_s = jax.eval_shape(
+        lambda: init_caches(cfg, shape.global_batch, shape.seq_len))
+
+    # reuse the spec logic (NamedSharding construction requires a real mesh,
+    # so validate the fitted PartitionSpecs directly)
+    def check(path, leaf):
+        names = shd._names(path)
+        name = names[-1] if names else ""
+        s = leaf.shape
+        if name in ("k", "v"):
+            g_ax = shd._fit(mesh, s[3], "model")
+            hd_ax = shd._fit(mesh, s[4], "model") if g_ax is None else None
+            spec = shd.fit_spec(mesh, s, None, shd.data_axes(mesh), None,
+                                g_ax, hd_ax)
+        elif name == "ssm":
+            h_ax = shd._fit(mesh, s[2], "model")
+            p_ax = shd._fit(mesh, s[4], "model") if h_ax is None else None
+            spec = shd.fit_spec(mesh, s, None, shd.data_axes(mesh), h_ax,
+                                None, p_ax)
+        elif name == "conv":
+            spec = shd.fit_spec(mesh, s, None, shd.data_axes(mesh), None,
+                                "model")
+        else:
+            return
+        for dim, ax in zip(s, tuple(spec) + (None,) * leaf.ndim):
+            assert dim % _axis_size(mesh, ax) == 0, (path, s, spec)
+
+    jax.tree_util.tree_map_with_path(check, caches_s)
+
+
+def test_fit_spec_fallbacks():
+    mesh = MESHES["2x16x16"]
+    # batch of 1 -> fully replicated
+    assert shd.fit_spec(mesh, (1,), ("pod", "data"))[0] is None
+    # batch of 16 -> only the 'data' axis fits
+    assert shd.fit_spec(mesh, (16,), ("pod", "data"))[0] == "data"
+    # batch of 32 -> both axes
+    assert shd.fit_spec(mesh, (32,), ("pod", "data"))[0] == ("pod", "data")
+    # dim 50 on model(16) -> replicated
+    assert shd.fit_spec(mesh, (50,), "model")[0] is None
+
+
+def test_vocab_padding():
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        assert cfg.vocab_padded % 256 == 0
+        assert 0 <= cfg.vocab_padded - cfg.vocab_size < 256
