@@ -1,0 +1,84 @@
+"""Throughput vs subarray/bank count (the paper's 1/4/16-bank sweep).
+
+SIMDRAM's end-to-end evaluation scales one compute-enabled subarray per
+bank from 1 to 16 banks; throughput grows near-linearly because every
+subarray replays the broadcast command stream concurrently.  This
+benchmark reproduces that curve with the bank engine:
+
+  - **modeled**: :func:`repro.core.timing.bank_throughput_gops` per op ×
+    width × subarray count (exactly linear — command broadcast is
+    shared, replay is concurrent);
+  - **measured**: wall time of one vmapped batched-interpreter replay on
+    this host at each subarray count (a correctness-execution proxy —
+    on CPU, vmap serializes, so this shows the engine's real batching
+    overhead rather than DRAM physics).
+
+Output follows the harness contract: ``name,us_per_call,derived`` CSV
+rows, where *derived* is modeled GOps/s (modeled rows) or the speedup
+vs the 1-subarray measured wall time (measured rows).
+
+  python -m benchmarks.bank_scaling
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, Sequence
+
+from repro.core.bank import Bank, random_operand_sets
+from repro.core.isa import compile_op
+from repro.core.ops_library import get_op
+from repro.core.timing import DDR4, bank_throughput_gops, uprogram_latency_s
+
+SUBARRAY_COUNTS = (1, 2, 4, 8, 16)
+OPS = ("addition", "multiplication", "greater", "xor_red")
+
+
+def table_bank_scaling(
+    widths: Sequence[int] = (8, 16),
+    counts: Sequence[int] = SUBARRAY_COUNTS,
+    lanes: int = 4096,
+    measure: bool = True,
+) -> Dict:
+    """Modeled + measured throughput-vs-subarray-count table."""
+    out: Dict[str, Dict] = {"modeled": {}, "measured": {}}
+    print("# bank_scaling/modeled: name,us_per_call,derived(gops)")
+    for op in OPS:
+        for n_bits in widths:
+            _, up = compile_op(op, n_bits)
+            lat_us = uprogram_latency_s(up, DDR4) * 1e6
+            base = bank_throughput_gops(up, DDR4, n_subarrays=counts[0])
+            for n in counts:
+                gops = bank_throughput_gops(up, DDR4, n_subarrays=n)
+                out["modeled"][(op, n_bits, n)] = gops
+                print(f"model/{op}/{n_bits}b/sub{n},{lat_us:.2f},{gops:.2f}"
+                      f"  # x{gops / base:.1f} vs sub{counts[0]}")
+
+    if not measure:
+        return out
+
+    print("# bank_scaling/measured: name,us_per_call,derived(speedup_vs_sub1)")
+    for op in ("addition", "greater"):
+        n_bits = 8
+        spec = get_op(op, n_bits)
+        base_us = None
+        for n in counts:
+            bank = Bank(n_subarrays=n)
+            sets = random_operand_sets(spec, n, lanes)
+            bank.execute_batch(op, n_bits, sets)      # warm the executable
+            t0 = time.perf_counter()
+            reps = 3
+            for _ in range(reps):
+                bank.execute_batch(op, n_bits, sets)
+            us = (time.perf_counter() - t0) * 1e6 / reps
+            # throughput proxy: elements per wall-second, normalized to
+            # per-element cost at n=1 (ideal engine => flat us, speedup n)
+            base_us = us if base_us is None else base_us
+            speedup = (base_us * n) / us if us else float("inf")
+            out["measured"][(op, n_bits, n)] = us
+            print(f"measured/{op}/{n_bits}b/sub{n},{us:.0f},{speedup:.2f}")
+    return out
+
+
+if __name__ == "__main__":
+    table_bank_scaling()

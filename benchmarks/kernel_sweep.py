@@ -86,11 +86,36 @@ def sweep_transpose(lanes: int = 1 << 15):
         print(f"transpose/bb{bb}{star},{us:.0f},{vmem/1024:.0f}")
 
 
+def sweep_bank(op: str = "addition", n_bits: int = 8, lanes: int = 4096):
+    """Batched-interpreter working set vs subarray count: the bank engine
+    stacks (n_sub, n_rows, n_words) states, so VMEM/instance grows
+    linearly with n_sub while the command table is shared (read once)."""
+    from repro.core.bank import (ROW_BUCKET, Bank, cached_table,
+                                 random_operand_sets)
+
+    spec, uprog, table = cached_table(op, n_bits)
+    rows_alloc = -(-uprog.n_rows_total // ROW_BUCKET) * ROW_BUCKET
+    print(f"# kernel_sweep/bank/{op}/{n_bits}b: name,us_per_call,"
+          "derived(state_kb)")
+    for n_sub in (1, 4, 16):
+        bank = Bank(n_subarrays=n_sub)
+        sets = random_operand_sets(spec, n_sub, lanes, seed=3)
+        bank.execute_batch(op, n_bits, sets)      # compile + warm
+        t0 = time.perf_counter()
+        bank.execute_batch(op, n_bits, sets)
+        us = (time.perf_counter() - t0) * 1e6
+        state_kb = n_sub * rows_alloc * (lanes // 32) * 4 / 1024
+        table_kb = table.size * 4 / 1024
+        print(f"bank/{op}/sub{n_sub},{us:.0f},{state_kb:.0f}"
+              f"  # shared_table_kb={table_kb:.1f}")
+
+
 def main():
     sweep_bbop("addition", 8)
     sweep_bbop("multiplication", 8, lanes=1 << 14)
     sweep_bitserial()
     sweep_transpose()
+    sweep_bank("addition", 8)
     print("# note: wall times are interpret-mode proxies; selection is by "
           "VMEM working set + 128-lane alignment (see module docstring)")
 

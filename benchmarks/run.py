@@ -16,10 +16,14 @@ import argparse
 import sys
 import time
 
+from . import bank_scaling as B
 from . import paper_tables as T
 
 TABLES = {
     "throughput": lambda full: T.table_throughput(widths=(8, 16, 32) if full else (8, 16, 32)),
+    "bank_scaling": lambda full: B.table_bank_scaling(
+        widths=(8, 16, 32) if full else (8, 16),
+        lanes=65536 if full else 4096),
     "energy": lambda full: T.table_energy(),
     "synthesis": lambda full: T.table_synthesis(widths=(8, 16) if not full else (8, 16, 32)),
     "area": lambda full: T.table_area(),

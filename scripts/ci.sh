@@ -1,0 +1,27 @@
+#!/usr/bin/env bash
+# Tier-1 CI gate: full collection + tests + μProgram validation.
+#
+# Run from the repo root:  bash scripts/ci.sh
+#
+# Guards against the two classes of regression that can land silently:
+#   1. collection errors (a module failing to import still exits 0 with
+#      plain `pytest path/to/test`) — `--co -q` over the whole tree fails
+#      the build on any import error;
+#   2. semantic drift in the compiled μPrograms — check_uprograms.py
+#      executes all 16 ops (MIG + AIG) on the DRAM-faithful oracle.
+
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== collection (all modules must import) =="
+python -m pytest --collect-only -q >/dev/null
+
+echo "== tier-1 tests =="
+python -m pytest -x -q
+
+echo "== μProgram validation (16 ops, MIG + AIG, DRAM oracle) =="
+python scripts/check_uprograms.py
+
+echo "CI OK"

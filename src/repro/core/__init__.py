@@ -1,3 +1,10 @@
 # The paper's primary contribution — implement the SYSTEM here
 # (scheduler, optimizer, data path, serving loop, etc.) in the
 # host framework. Add sibling subpackages for substrates.
+#
+# Execution stack, bottom-up:
+#   subarray.py      row-granular DRAM oracle (numpy, exact)
+#   control_unit.py  μProgram scan interpreter (one subarray)
+#   bank.py          bank-level batched engine (N subarrays, one vmap)
+#   bitplane.py      TPU-native fused circuits (fast path)
+#   isa.py           bbop ISA surface + backend dispatch

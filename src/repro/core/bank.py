@@ -1,0 +1,304 @@
+"""Bank-level batched μProgram execution engine (SIMDRAM's scaling layer).
+
+SIMDRAM's headline throughput comes from *parallel replay*: the memory
+controller broadcasts one μProgram command stream and every
+compute-enabled subarray (one per bank in the paper's 1/4/16-bank
+sweeps) executes it simultaneously on its own 65 536 bit-columns.  This
+module reproduces that layer on top of the Step-3 scan interpreter:
+
+  - a bank is a batched ``(n_subarrays, n_rows, n_words)`` uint32 state —
+    subarray *s*'s D/B/C rows are slab ``states[s]``;
+  - one :func:`repro.core.control_unit.batched_interpreter` call (a
+    ``jax.vmap``-ed ``lax.scan``) replays the shared command table on all
+    slabs at once; programs stay data, so one compiled executable serves
+    every op whose bucketed (rows, cmds) shape matches (NOP padding +
+    row bucketing make add/sub/cmp/... at one width share a slot);
+  - :meth:`Bank.dispatch` is the ``bbop`` queue front-end: ISA-level
+    instructions are allocated round-robin across subarrays, command
+    tables are replayed from the per-(op, width, style) cache, and
+    aggregate latency/energy/throughput are modeled with
+    :mod:`repro.core.timing` / :mod:`repro.core.energy` (latency counts
+    one μProgram replay per *batch* — subarrays run concurrently).
+
+Backends (all bit-exact, cross-checked in tests/test_bank_engine.py):
+
+  engine="interp"    vmapped control-unit scan (default; models hardware)
+  engine="bitplane"  vmapped fused bit-plane circuits (TPU fast path)
+  engine="pallas"    Pallas-tiled bit-plane kernels (repro.kernels)
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import bitplane
+from .control_unit import (batched_interpreter, encode_uprogram, load_state,
+                           pad_command_table, read_outputs, table_bucket)
+from .energy import uprogram_energy_nj
+from .isa import _round_up, compile_op
+from .timing import DDR4, DramConfig, uprogram_latency_s
+
+ROW_BUCKET = 16     # state-row granularity shared across ops of one width
+
+
+@functools.lru_cache(maxsize=512)
+def cached_table(name: str, n_bits: int, style: str = "mig"):
+    """μProgram-memory lookup: (spec, μProgram, encoded+bucketed table).
+
+    The table is NOP-padded to its :func:`table_bucket` slot so distinct
+    ops of similar size share one (n_cmds, 13) shape — and therefore one
+    compiled interpreter executable per state shape.
+    """
+    spec, uprog = compile_op(name, n_bits, style)
+    raw = encode_uprogram(uprog)
+    table = pad_command_table(raw, table_bucket(raw.shape[0]))
+    return spec, uprog, table
+
+
+def random_operand_sets(spec, n_sets: int, lanes: int, seed: int = 0):
+    """Uniform random operand sets (shared by benchmarks and tests so
+    they exercise identical inputs): one list of (lanes,) uint64 arrays
+    per subarray, widths from ``spec.operand_bits``."""
+    rng = np.random.default_rng(seed)
+    return [
+        [rng.integers(0, 1 << w, size=lanes).astype(np.uint64)
+         for w in spec.operand_bits]
+        for _ in range(n_sets)
+    ]
+
+
+@dataclass
+class BankStats:
+    """Aggregate cost model for everything a :class:`Bank` executed."""
+
+    n_subarrays: int
+    bbops: int = 0            # ISA instructions dispatched
+    batches: int = 0          # batched-interpreter replays (≤ bbops)
+    aap: int = 0              # per-subarray command counts, summed
+    ap: int = 0
+    elements: int = 0         # result elements produced
+    latency_s: float = 0.0    # modeled wall-clock (subarrays concurrent)
+    energy_nj: float = 0.0    # summed over all active subarrays
+    subarray_programs: np.ndarray = field(default=None)  # type: ignore
+
+    def __post_init__(self):
+        if self.subarray_programs is None:
+            self.subarray_programs = np.zeros(self.n_subarrays, np.int64)
+
+    @property
+    def throughput_gops(self) -> float:
+        return self.elements / self.latency_s / 1e9 if self.latency_s else 0.0
+
+    def as_dict(self) -> Dict[str, float]:
+        return {
+            "n_subarrays": self.n_subarrays,
+            "bbops": self.bbops,
+            "batches": self.batches,
+            "aap": self.aap,
+            "ap": self.ap,
+            "elements": self.elements,
+            "latency_s": self.latency_s,
+            "energy_nj": self.energy_nj,
+            "throughput_gops": self.throughput_gops,
+        }
+
+
+@dataclass(frozen=True)
+class BbopInstr:
+    """One queued ISA-level ``bbop``: op name + flat integer operands."""
+
+    op: str
+    operands: Tuple[np.ndarray, ...]
+    n_bits: int
+    signed_out: bool = False
+
+    @property
+    def elements(self) -> int:
+        return int(np.asarray(self.operands[0]).shape[-1])
+
+
+class Bank:
+    """N concurrently-computing subarrays executing one command stream.
+
+    ``n_subarrays`` models the paper's bank-level parallelism knob (the
+    1/4/16-bank sweep uses one compute subarray per bank).  All execution
+    funnels through :meth:`execute_batch`; :meth:`bbop` spreads one large
+    instruction's lanes across the bank, :meth:`dispatch` spreads a queue
+    of instructions round-robin.
+    """
+
+    def __init__(self, n_subarrays: int = 4, cfg: DramConfig = DDR4,
+                 style: str = "mig", engine: str = "interp"):
+        if engine not in ("interp", "bitplane", "pallas"):
+            raise ValueError(f"unknown engine {engine!r}")
+        self.n_subarrays = n_subarrays
+        self.cfg = cfg
+        self.style = style
+        self.engine = engine
+        self.stats = BankStats(n_subarrays)
+        self._rr_next = 0     # round-robin allocation cursor
+
+    # -- core: one op, up to n_subarrays operand sets, one replay ----------
+    def execute_batch(
+        self,
+        name: str,
+        n_bits: int,
+        operand_sets: Sequence[Sequence[np.ndarray]],
+        signed_out: bool = False,
+        subarray_ids: Optional[Sequence[int]] = None,
+    ) -> List:
+        """Execute ``name`` on each operand set, one set per subarray.
+
+        All sets replay the *same* cached command table concurrently —
+        the vmapped interpreter is invoked once.  Returns one result per
+        set (array, or tuple of arrays for multi-output ops).
+        """
+        if len(operand_sets) > self.n_subarrays:
+            raise ValueError(
+                f"{len(operand_sets)} operand sets > {self.n_subarrays} "
+                "subarrays; chunk the batch (see dispatch())")
+        if not operand_sets:
+            return []
+        spec, uprog, table = cached_table(name, n_bits, self.style)
+        lanes = [int(np.asarray(ops[0]).shape[-1]) for ops in operand_sets]
+        cols = _round_up(max(max(lanes), 1), 32)
+
+        if self.engine == "interp":
+            results = self._run_interp(
+                spec, uprog, table, operand_sets, lanes, cols, signed_out)
+        elif self.engine == "bitplane":
+            results = self._run_bitplane(
+                spec, name, n_bits, operand_sets, lanes, cols, signed_out)
+        else:
+            results = self._run_pallas(
+                spec, name, n_bits, operand_sets, signed_out)
+
+        self._account(uprog, operand_sets, lanes, subarray_ids)
+        return results
+
+    # -- backends ----------------------------------------------------------
+    def _run_interp(self, spec, uprog, table, operand_sets, lanes, cols,
+                    signed_out):
+        # always stack the full bank: a partial batch replays on all
+        # subarrays (the controller broadcasts regardless), so it reuses
+        # the full-width compiled executable instead of compiling per
+        # batch size
+        n_rows = _round_up(uprog.n_rows_total, ROW_BUCKET)
+        states = np.zeros((self.n_subarrays, n_rows, cols // 32), np.uint32)
+        for s, operands in enumerate(operand_sets):
+            states[s] = load_state(uprog, operands, cols, n_rows=n_rows)
+        run = batched_interpreter()
+        out = np.asarray(run(jnp.asarray(states), jnp.asarray(table)))
+        results = []
+        for s in range(len(operand_sets)):
+            outs = read_outputs(
+                spec.out_bits, uprog, out[s], lanes[s], signed_out)
+            results.append(outs[0] if len(outs) == 1 else tuple(outs))
+        return results
+
+    def _run_bitplane(self, spec, name, n_bits, operand_sets, lanes, cols,
+                      signed_out):
+        packed = []     # one (n_sets, width_i, cols//32) stack per operand
+        for op_idx, w in enumerate(spec.operand_bits):
+            vals = np.zeros((len(operand_sets), cols), np.int64)
+            for s, operands in enumerate(operand_sets):
+                v = np.asarray(operands[op_idx]).astype(np.int64)
+                vals[s, : v.shape[-1]] = v
+            packed.append(bitplane.pack(jnp.asarray(vals), w))
+        outs = bitplane.op_on_planes_batch(name, n_bits, *packed)
+        results = []
+        for s in range(len(operand_sets)):
+            per = [np.asarray(bitplane.unpack(o[s], signed=signed_out)
+                              ).astype(np.int64)[: lanes[s]]
+                   for o in outs]
+            results.append(per[0] if len(per) == 1 else tuple(per))
+        return results
+
+    def _run_pallas(self, spec, name, n_bits, operand_sets, signed_out):
+        from repro.kernels import ops as kops
+        results = []
+        for operands in operand_sets:
+            r = kops.bbop_pallas(
+                name, n_bits,
+                *[jnp.asarray(np.asarray(o)) for o in operands],
+                signed_out=signed_out)
+            results.append(
+                tuple(np.asarray(x) for x in r) if isinstance(r, tuple)
+                else np.asarray(r))
+        return results
+
+    def _account(self, uprog, operand_sets, lanes, subarray_ids):
+        k = len(operand_sets)
+        if subarray_ids is None:
+            subarray_ids = range(k)
+        st = self.stats
+        st.batches += 1
+        st.elements += sum(lanes)
+        # a physical subarray holds cfg.columns_per_subarray lanes; a set
+        # wider than that serializes extra replays on its subarray (the
+        # simulation still runs them in one vmapped state — only the cost
+        # model quantizes)
+        cap = self.cfg.columns_per_subarray
+        invs = [max(1, -(-n // cap)) for n in lanes]
+        st.aap += uprog.n_aap * sum(invs)
+        st.ap += uprog.n_ap * sum(invs)
+        # subarrays replay concurrently; the widest set's serialized
+        # invocations bound the batch's wall-clock
+        st.latency_s += max(invs) * uprogram_latency_s(uprog, self.cfg)
+        st.energy_nj += uprogram_energy_nj(uprog, self.cfg) * sum(invs)
+        for sid in subarray_ids:
+            st.subarray_programs[sid % self.n_subarrays] += 1
+
+    # -- ISA front-ends ----------------------------------------------------
+    def bbop(self, name: str, *operands, n_bits: int,
+             signed_out: bool = False):
+        """One bbop whose lanes span the whole bank: elements are split
+        into contiguous per-subarray chunks and executed in one replay."""
+        self.stats.bbops += 1
+        arrs = [np.asarray(o) for o in operands]
+        n = arrs[0].shape[-1]
+        if n == 0:
+            spec, _, _ = cached_table(name, n_bits, self.style)
+            outs = [np.zeros(0, np.int64) for _ in spec.out_bits]
+            return outs[0] if len(outs) == 1 else tuple(outs)
+        per = max(1, -(-n // self.n_subarrays))
+        sets = [
+            [a[..., s: s + per] for a in arrs] for s in range(0, n, per)
+        ]
+        results = self.execute_batch(name, n_bits, sets, signed_out)
+        if isinstance(results[0], tuple):
+            return tuple(np.concatenate([r[i] for r in results], axis=-1)
+                         for i in range(len(results[0])))
+        return np.concatenate(results, axis=-1)
+
+    def dispatch(self, queue: Sequence[BbopInstr]) -> List:
+        """Drain a queue of bbops: instructions with the same (op, width,
+        signedness) are allocated round-robin across subarrays and each
+        full batch replays its cached command table once.  Results come
+        back in queue order; costs accumulate in :attr:`stats`."""
+        results: List = [None] * len(queue)
+        groups: Dict[Tuple[str, int, bool], List[int]] = {}
+        for i, ins in enumerate(queue):
+            groups.setdefault(
+                (ins.op, ins.n_bits, ins.signed_out), []).append(i)
+        for (op, n_bits, signed_out), idxs in groups.items():
+            for c in range(0, len(idxs), self.n_subarrays):
+                chunk = idxs[c: c + self.n_subarrays]
+                sids = [(self._rr_next + j) % self.n_subarrays
+                        for j in range(len(chunk))]
+                self._rr_next = (self._rr_next + len(chunk)) % self.n_subarrays
+                outs = self.execute_batch(
+                    op, n_bits, [list(queue[i].operands) for i in chunk],
+                    signed_out, subarray_ids=sids)
+                for i, out in zip(chunk, outs):
+                    results[i] = out
+        self.stats.bbops += len(queue)
+        return results
+
+    def reset_stats(self):
+        self.stats = BankStats(self.n_subarrays)

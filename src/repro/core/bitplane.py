@@ -137,6 +137,29 @@ def op_on_planes(name: str, n_bits: int, *operand_planes: jax.Array) -> List[jax
     return outs
 
 
+@functools.lru_cache(maxsize=256)
+def _batched_op(name: str, n_bits: int):
+    """vmap of :func:`op_on_planes` over a leading subarray axis (eager —
+    see the jit NOTE below; XLA-CPU chokes on wide unrolled circuits)."""
+
+    def one(*operand_planes):
+        return op_on_planes(name, n_bits, *operand_planes)
+
+    return jax.vmap(one)
+
+
+def op_on_planes_batch(
+    name: str, n_bits: int, *operand_planes: jax.Array
+) -> List[jax.Array]:
+    """Bank-level fast path: execute one op on a batch of subarrays.
+
+    ``operand_planes[i]`` has shape (n_subarrays, width_i, W); returns one
+    (n_subarrays, out_width_o, W) stack per output.  This is the bit-plane
+    cross-check backend for :class:`repro.core.bank.Bank`.
+    """
+    return _batched_op(name, n_bits)(*operand_planes)
+
+
 # Horizontal-in/horizontal-out convenience (pack → op → unpack).
 #
 # NOTE on jit: the unrolled circuit for wide multiply/divide is hundreds of

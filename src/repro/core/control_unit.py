@@ -33,10 +33,54 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .uprogram import TRIPLES, Command, UProgram
+from .uprogram import C1, TRIPLES, Command, UProgram
 
 CMD_WIDTH = 13
 _FULL = np.uint32(0xFFFFFFFF)
+
+
+# ---------------------------------------------------------------------------
+# state layout helpers (shared by the isa "interp" backend and the bank
+# engine — one definition of operand loading / output readout)
+# ---------------------------------------------------------------------------
+
+def load_state(
+    uprog: UProgram, operands: Sequence[np.ndarray], n_columns: int,
+    n_rows: int | None = None,
+) -> np.ndarray:
+    """(n_rows, n_words) uint32 subarray state: C1 pinned, operand *i*'s
+    bits packed vertically into ``uprog.in_rows[i]``."""
+    from .subarray import pack_bits
+
+    state = np.zeros(
+        (n_rows or uprog.n_rows_total, n_columns // 32), dtype=np.uint32)
+    state[C1] = np.uint32(0xFFFFFFFF)
+    for op_idx, rows in enumerate(uprog.in_rows):
+        planes = pack_bits(
+            np.asarray(operands[op_idx]).astype(np.uint64), len(rows),
+            n_columns)
+        state[list(rows)] = planes
+    return state
+
+
+def read_outputs(
+    out_bits: Sequence[int], uprog: UProgram, state: np.ndarray,
+    lanes: int, signed: bool = False,
+):
+    """Extract the op's outputs from an executed state: one int64 array
+    per declared output width (two's-complement narrowed if ``signed``)."""
+    from .subarray import unpack_bits
+
+    outs, pos = [], 0
+    for w in out_bits:
+        rows = [uprog.out_rows[pos + j][0] for j in range(w)]
+        vals = unpack_bits(state[rows], lanes).astype(np.int64)
+        if signed:
+            vals = vals & ((1 << w) - 1)
+            vals = np.where(vals >= (1 << (w - 1)), vals - (1 << w), vals)
+        outs.append(vals)
+        pos += w
+    return outs
 
 
 def encode_uprogram(uprog: UProgram) -> np.ndarray:
@@ -102,5 +146,59 @@ def make_interpreter():
     def run(state, table):
         state, _ = jax.lax.scan(_step, state, table)
         return state
+
+    return run
+
+
+# ---------------------------------------------------------------------------
+# bank-level batched execution (N subarrays, one compiled interpreter)
+# ---------------------------------------------------------------------------
+#
+# A command row of all zeros decodes to AAP(T0 -> T0): read row 0 through
+# its d-port and write the same value back — a true NOP.  Padding every
+# encoded table to a bucketed command count therefore lets μPrograms of
+# *different* lengths share one (n_cmds, 13) table shape, so one compiled
+# scan executable serves many ops (the JAX analogue of the paper's fixed
+# μProgram-memory slot size).
+
+def pad_command_table(table: np.ndarray, n_cmds: int) -> np.ndarray:
+    """Pad an encoded table with NOP rows up to ``n_cmds`` commands."""
+    if table.shape[0] > n_cmds:
+        raise ValueError(f"table has {table.shape[0]} cmds > bucket {n_cmds}")
+    out = np.zeros((n_cmds, CMD_WIDTH), dtype=np.int32)
+    out[: table.shape[0]] = table
+    return out
+
+
+def table_bucket(n_cmds: int, min_bucket: int = 64) -> int:
+    """Slot size for a μProgram of ``n_cmds`` commands: next power of two
+    ≥ ``min_bucket`` (bounds distinct compiled interpreter shapes to
+    O(log max-program-length))."""
+    b = min_bucket
+    while b < n_cmds:
+        b *= 2
+    return b
+
+
+@functools.lru_cache(maxsize=1)
+def batched_interpreter():
+    """One jitted vmapped interpreter: (n_subarrays, n_rows, n_words)
+    states × one shared (n_cmds, 13) command table.
+
+    Every subarray in the bank replays the same μProgram over its own
+    rows — exactly the paper's bank-level parallelism, where the memory
+    controller broadcasts one command stream to all compute-enabled
+    subarrays.  jit caches per shape: same (state, table) shapes — even
+    for different ops, thanks to NOP bucketing — reuse one executable.
+    Use ``batched_interpreter()._cache_size()`` to observe compilations.
+    """
+
+    @jax.jit
+    def run(states: jnp.ndarray, table: jnp.ndarray) -> jnp.ndarray:
+        def one(state):
+            out, _ = jax.lax.scan(_step, state, table)
+            return out
+
+        return jax.vmap(one)(states)
 
     return run

@@ -13,7 +13,7 @@ own (monotonicity properties in tests/test_costmodel.py).
 
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, replace
 from typing import Dict, Optional
 
 from .isa import compile_op
@@ -48,7 +48,16 @@ def decide(
     result_stays_vertical: bool = False,
     cfg: DramConfig = DDR4,
     host: HostConfig = CPU_BASELINE,
+    n_subarrays: Optional[int] = None,
 ) -> OffloadPlan:
+    """``n_subarrays`` is the TOTAL concurrently-computing subarray
+    count — the same knob as ``Bank(n_subarrays=...)`` and
+    ``bank_throughput_gops`` (it replaces the cfg's ``n_banks ×
+    subarrays_per_bank`` product).  More subarrays means more SIMD
+    lanes, fewer serialized invocations, and offload winning at
+    smaller N."""
+    if n_subarrays is not None:
+        cfg = replace(cfg, n_banks=1, subarrays_per_bank=n_subarrays)
     spec, uprog = compile_op(op, n_bits)
     n_inv = max(1, -(-n_elems // cfg.simd_lanes))  # ceil-div
     pum_compute = uprogram_latency_s(uprog, cfg) * n_inv

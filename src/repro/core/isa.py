@@ -10,6 +10,9 @@ equivalent: a registry of operations, a per-(op, width) compilation cache
   backend="interp"     JAX scan/switch control-unit interpreter (Step 3)
   backend="bitplane"   TPU-native fused bit-plane execution (fast path)
   backend="pallas"     Pallas-tiled bit-plane kernels (see repro.kernels)
+  backend="bank"       bank-level batched engine: lanes split across all
+                       compute subarrays, one vmapped replay
+                       (see repro.core.bank)
 
 All backends implement identical semantics; tests cross-check them.
 :class:`SimdramDevice` carries the DRAM config and accumulates per-call
@@ -29,10 +32,11 @@ import numpy as np
 
 from . import bitplane
 from .allocation import compile_circuit
-from .control_unit import encode_uprogram, make_interpreter
+from .control_unit import (encode_uprogram, load_state, make_interpreter,
+                           read_outputs)
 from .energy import energy_per_elem_pj, uprogram_energy_nj
 from .ops_library import OpSpec, get_op
-from .subarray import pack_bits, run_op, unpack_bits
+from .subarray import run_op
 from .synthesis import synthesize, to_mig
 from .timing import DDR4, DramConfig, throughput_gops, uprogram_latency_s
 from .uprogram import UProgram
@@ -93,6 +97,17 @@ class SimdramDevice:
     backend: str = "bitplane"
     style: str = "mig"
     calls: List[CallStats] = field(default_factory=list)
+    _bank: Optional[object] = field(default=None, repr=False)
+
+    def bank(self):
+        """The device's bank-level engine (one compute subarray per bank,
+        per the paper's evaluation setup); created lazily."""
+        if self._bank is None:
+            from .bank import Bank
+            self._bank = Bank(
+                n_subarrays=self.cfg.n_banks * self.cfg.subarrays_per_bank,
+                cfg=self.cfg, style=self.style)
+        return self._bank
 
     def _account(self, name: str, n_bits: int, uprog: UProgram, elements: int):
         n_invocations = int(np.ceil(elements / self.cfg.simd_lanes)) or 1
@@ -140,6 +155,10 @@ class SimdramDevice:
         if self.backend == "interp":
             return self._run_interp(spec, uprog, operands, signed_out)
 
+        if self.backend == "bank":
+            return self.bank().bbop(
+                name, *operands, n_bits=n_bits, signed_out=signed_out)
+
         # bitplane / pallas: fused circuit execution (pallas swaps the
         # elementwise executor for the tiled kernel in repro.kernels.ops)
         if self.backend == "pallas":
@@ -150,27 +169,12 @@ class SimdramDevice:
     def _run_interp(self, spec, uprog, operands, signed_out):
         elements = int(np.asarray(operands[0]).shape[-1])
         cols = _round_up(elements, 32)
-        state = np.zeros((uprog.n_rows_total, cols // 32), dtype=np.uint32)
-        state[7] = 0xFFFFFFFF  # C1
-        for op_idx, rows in enumerate(uprog.in_rows):
-            planes = pack_bits(
-                np.asarray(operands[op_idx]).astype(np.uint64), len(rows), cols
-            )
-            for j, r in enumerate(rows):
-                state[r] = planes[j]
+        state = load_state(uprog, operands, cols)
         table = encode_uprogram(uprog)
         run = _cached_interpreter()
         out_state = np.asarray(run(jnp.asarray(state), jnp.asarray(table)))
-        outs = []
-        pos = 0
-        for w in spec.out_bits:
-            rows = [uprog.out_rows[pos + j][0] for j in range(w)]
-            planes = np.stack([out_state[r] for r in rows])
-            vals = unpack_bits(planes, elements).astype(np.int64)
-            if signed_out:
-                vals = _np_signed(vals, w)
-            outs.append(vals)
-            pos += w
+        outs = read_outputs(spec.out_bits, uprog, out_state, elements,
+                            signed_out)
         return outs[0] if len(outs) == 1 else tuple(outs)
 
     # -- reporting -------------------------------------------------------------

@@ -62,6 +62,30 @@ def throughput_gops(up: UProgram, cfg: DramConfig = DDR4) -> float:
     return cfg.simd_lanes / lat / 1e9
 
 
+# --- bank-level parallel replay (repro.core.bank engine) ---------------------
+
+def bank_latency_s(
+    up: UProgram, n_programs: int, n_subarrays: int, cfg: DramConfig = DDR4
+) -> float:
+    """Wall-clock to drain ``n_programs`` replays of one μProgram over
+    ``n_subarrays`` concurrently-computing subarrays: the controller
+    broadcasts one command stream per round-robin batch, so batches
+    serialize while subarrays within a batch run in parallel."""
+    batches = -(-n_programs // max(1, n_subarrays))
+    return batches * uprogram_latency_s(up, cfg)
+
+
+def bank_throughput_gops(
+    up: UProgram, cfg: DramConfig = DDR4, n_subarrays: int = 1
+) -> float:
+    """Throughput with ``n_subarrays`` parallel engines, one subarray's
+    lane count each — the paper's 1/4/16-bank scaling knob.  Linear in
+    ``n_subarrays`` because replay is concurrent and command broadcast
+    is shared."""
+    lanes = cfg.columns_per_subarray * n_subarrays
+    return lanes / uprogram_latency_s(up, cfg) / 1e9
+
+
 # --- CPU / GPU analytic comparison points ------------------------------------
 # Bulk bitwise/elementwise kernels on CPU/GPU are DRAM-bandwidth-bound; the
 # paper's baselines follow the same logic.  An n-bit binary op streams

@@ -35,6 +35,22 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 Axis = Union[None, str, Tuple[str, ...]]
 
 
+def abstract_mesh(axis_sizes: Sequence[int], axis_names: Sequence[str]):
+    """Construct a ``jax.sharding.AbstractMesh`` across JAX API versions.
+
+    Newer JAX takes ``(axis_sizes, axis_names)``; the 0.4.x line takes a
+    single ``((name, size), ...)`` shape tuple.  All sharding rules here
+    only consume ``mesh.shape`` / ``mesh.axis_names``, which both forms
+    provide.
+    """
+    from jax.sharding import AbstractMesh
+
+    try:
+        return AbstractMesh(tuple(axis_sizes), tuple(axis_names))
+    except TypeError:
+        return AbstractMesh(tuple(zip(axis_names, axis_sizes)))
+
+
 def data_axes(mesh: Mesh) -> Tuple[str, ...]:
     return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
 

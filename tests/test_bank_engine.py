@@ -1,0 +1,253 @@
+"""Bank-level batched execution engine vs the Subarray oracle.
+
+Proves the tentpole claims:
+  - vmapped multi-subarray execution is bit-exact against the numpy
+    ``Subarray`` oracle and the bit-plane fast path for every op in
+    ``ops_library``, both ``mig`` and ``aig`` styles, N ∈ {1, 4, 16};
+  - same-shape (bucketed) command tables share ONE compiled interpreter
+    executable — swapping programs never recompiles;
+  - the bbop dispatcher preserves queue order, allocates round-robin,
+    and its cost accounting matches the timing/energy models.
+"""
+
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro.core.bank import (Bank, BankStats, BbopInstr, cached_table,
+                             random_operand_sets)
+from repro.core.control_unit import (batched_interpreter, pad_command_table,
+                                     table_bucket)
+from repro.core.energy import uprogram_energy_nj
+from repro.core.isa import SimdramDevice, compile_op
+from repro.core.ops_library import ALL_OPS, get_op
+from repro.core.timing import (DDR4, DramConfig, bank_latency_s,
+                               bank_throughput_gops, uprogram_latency_s)
+
+N_BITS = 8
+LANES = 96
+
+
+def _operand_sets(spec, n_sets, lanes=LANES, seed=0):
+    return random_operand_sets(spec, n_sets, lanes, seed)
+
+
+def _check_against_oracle(spec, results, sets):
+    for got, operands in zip(results, sets):
+        want = spec.oracle(*operands)
+        got = got if isinstance(got, tuple) else (got,)
+        for gi, (g, e) in enumerate(zip(got, want)):
+            mask = (1 << spec.out_bits[gi]) - 1
+            np.testing.assert_array_equal(
+                np.asarray(g).astype(np.int64) & mask,
+                e.astype(np.int64) & mask)
+
+
+@pytest.mark.parametrize("n_subarrays", [1, 4, 16])
+@pytest.mark.parametrize("style", ["mig", "aig"])
+@pytest.mark.parametrize("op", ALL_OPS)
+def test_engine_matches_oracle_all_ops(op, style, n_subarrays):
+    """Every op × style × bank width: engine == oracle on all lanes."""
+    import zlib
+    bank = Bank(n_subarrays=n_subarrays, style=style)
+    spec = get_op(op, N_BITS)
+    sets = _operand_sets(spec, n_subarrays,
+                         seed=zlib.crc32(f"{op}/{style}".encode()))
+    _check_against_oracle(
+        spec, bank.execute_batch(op, N_BITS, sets), sets)
+
+
+@pytest.mark.parametrize("op", ["addition", "multiplication", "division",
+                                "greater", "min", "max", "subtraction"])
+def test_engine_matches_bitplane_fast_path(op):
+    """interp engine == bit-plane fast path == pallas kernels, lane-exact."""
+    spec = get_op(op, N_BITS)
+    sets = _operand_sets(spec, 4, seed=7)
+    outs = {}
+    for engine in ("interp", "bitplane", "pallas"):
+        bank = Bank(n_subarrays=4, engine=engine)
+        outs[engine] = bank.execute_batch(op, N_BITS, sets)
+    for engine in ("bitplane", "pallas"):
+        for a, b in zip(outs["interp"], outs[engine]):
+            a = a if isinstance(a, tuple) else (a,)
+            b = b if isinstance(b, tuple) else (b,)
+            for gi, (x, y) in enumerate(zip(a, b)):
+                mask = (1 << spec.out_bits[gi]) - 1
+                np.testing.assert_array_equal(
+                    np.asarray(x).astype(np.int64) & mask,
+                    np.asarray(y).astype(np.int64) & mask, err_msg=engine)
+
+
+def test_shared_executable_across_ops():
+    """Ops whose bucketed (rows, cmds) shapes coincide replay through ONE
+    compiled interpreter — programs are data, not logic."""
+    run = batched_interpreter()
+    bank = Bank(n_subarrays=4)
+    shapes = set()
+    for op in ("addition", "subtraction", "greater", "greater_equal",
+               "equal", "min", "max"):
+        _, uprog, table = cached_table(op, N_BITS)
+        rows = -(-uprog.n_rows_total // 16) * 16
+        shapes.add((rows, table.shape[0]))
+        spec = get_op(op, N_BITS)
+        bank.execute_batch(op, N_BITS, _operand_sets(spec, 4))
+    before = run._cache_size()
+    # replay all of them again: zero new compilations
+    for op in ("addition", "subtraction", "greater", "greater_equal",
+               "equal", "min", "max"):
+        spec = get_op(op, N_BITS)
+        bank.execute_batch(op, N_BITS, _operand_sets(spec, 4, seed=9))
+    assert run._cache_size() == before
+    # compiled executables ≤ distinct bucketed shapes < number of ops
+    assert len(shapes) < 7
+
+
+def test_partial_batch_reuses_full_width_executable():
+    """A 2-set batch on a 4-subarray bank must not compile a second
+    executable: the state is padded to the full bank width."""
+    run = batched_interpreter()
+    bank = Bank(n_subarrays=4)
+    spec = get_op("addition", N_BITS)
+    bank.execute_batch("addition", N_BITS, _operand_sets(spec, 4))
+    before = run._cache_size()
+    bank.execute_batch("addition", N_BITS, _operand_sets(spec, 2))
+    assert run._cache_size() == before
+
+
+@given(st.sampled_from(["addition", "subtraction", "min", "max", "greater"]),
+       st.integers(2, 10), st.integers(1, 5), st.integers(0, 10_000))
+@settings(max_examples=25, deadline=None)
+def test_engine_property_random_width_and_batch(op, n_bits, n_sets, seed):
+    """Random widths/batch sizes/operands: engine == oracle (property)."""
+    bank = Bank(n_subarrays=n_sets)
+    spec = get_op(op, n_bits)
+    rng = np.random.default_rng(seed)
+    # per-set lane counts may differ; engine pads to the widest
+    lanes = [int(rng.integers(1, 80)) for _ in range(n_sets)]
+    sets = [
+        [rng.integers(0, 1 << w, size=n).astype(np.uint64)
+         for w in spec.operand_bits]
+        for n in lanes
+    ]
+    _check_against_oracle(spec, bank.execute_batch(op, n_bits, sets), sets)
+    assert bank.stats.elements == sum(lanes)
+
+
+def test_bbop_splits_lanes_across_bank():
+    """Bank.bbop splits one large instruction across subarrays and
+    reassembles in lane order."""
+    rng = np.random.default_rng(3)
+    x = rng.integers(0, 256, size=1000)
+    y = rng.integers(0, 256, size=1000)
+    for n_sub in (1, 4, 16):
+        bank = Bank(n_subarrays=n_sub)
+        got = bank.bbop("addition", x, y, n_bits=8)
+        want = get_op("addition", 8).oracle(
+            x.astype(np.uint64), y.astype(np.uint64))[0]
+        np.testing.assert_array_equal(
+            got.astype(np.int64) & 0xFF, want.astype(np.int64) & 0xFF)
+        assert bank.stats.batches == 1    # one concurrent replay
+
+
+def test_dispatch_round_robin_and_order():
+    rng = np.random.default_rng(4)
+    queue = []
+    for i in range(11):
+        op = ("addition", "subtraction", "min")[i % 3]
+        x = rng.integers(0, 256, 64)
+        y = rng.integers(0, 256, 64)
+        queue.append(BbopInstr(op, (x, y), 8))
+    bank = Bank(n_subarrays=4)
+    results = bank.dispatch(queue)
+    for ins, got in zip(queue, results):
+        want = get_op(ins.op, 8).oracle(
+            *[o.astype(np.uint64) for o in ins.operands])[0]
+        np.testing.assert_array_equal(
+            np.asarray(got).astype(np.int64) & 0xFF,
+            want.astype(np.int64) & 0xFF)
+    st_ = bank.stats
+    assert st_.bbops == 11
+    assert st_.subarray_programs.sum() == 11
+    # round-robin: no subarray more than one program ahead within a group
+    assert st_.subarray_programs.max() - st_.subarray_programs.min() <= 2
+
+
+def test_stats_match_timing_and_energy_models():
+    bank = Bank(n_subarrays=4)
+    spec = get_op("addition", N_BITS)
+    _, uprog = compile_op("addition", N_BITS)
+    sets = _operand_sets(spec, 4)
+    bank.execute_batch("addition", N_BITS, sets)
+    bank.execute_batch("addition", N_BITS, sets)
+    st_ = bank.stats
+    assert st_.latency_s == pytest.approx(
+        bank_latency_s(uprog, 8, 4))           # 8 programs, 4 subarrays
+    assert st_.energy_nj == pytest.approx(uprogram_energy_nj(uprog) * 8)
+    assert st_.aap == uprog.n_aap * 8 and st_.ap == uprog.n_ap * 8
+
+
+def test_stats_respect_column_capacity():
+    """Lanes beyond cfg.columns_per_subarray serialize extra replays —
+    stats cannot report throughput above the physical ceiling."""
+    cfg = DramConfig(columns_per_subarray=64)
+    bank = Bank(n_subarrays=2, cfg=cfg)
+    _, uprog = compile_op("addition", N_BITS)
+    spec = get_op("addition", N_BITS)
+    sets = _operand_sets(spec, 2, lanes=200)    # 200 lanes on 64 columns
+    _check_against_oracle(
+        spec, bank.execute_batch("addition", N_BITS, sets), sets)
+    st_ = bank.stats
+    invs = -(-200 // 64)                         # 4 serialized replays
+    assert st_.latency_s == pytest.approx(
+        invs * uprogram_latency_s(uprog, cfg))
+    assert st_.energy_nj == pytest.approx(
+        uprogram_energy_nj(uprog, cfg) * invs * 2)
+    assert st_.aap == uprog.n_aap * invs * 2
+
+
+def test_bank_throughput_scales_linearly():
+    _, up = compile_op("addition", 16)
+    t1 = bank_throughput_gops(up, DDR4, n_subarrays=1)
+    t4 = bank_throughput_gops(up, DDR4, n_subarrays=4)
+    t16 = bank_throughput_gops(up, DDR4, n_subarrays=16)
+    assert t4 / t1 == pytest.approx(4.0)
+    assert t16 / t1 == pytest.approx(16.0)
+
+
+def test_device_bank_backend():
+    """SimdramDevice(backend="bank") routes bbops through the engine."""
+    dev = SimdramDevice(cfg=DramConfig(n_banks=4), backend="bank")
+    rng = np.random.default_rng(5)
+    x = rng.integers(0, 256, 200)
+    y = rng.integers(0, 256, 200)
+    got = dev.bbop("addition", x, y, n_bits=8)
+    want = get_op("addition", 8).oracle(
+        x.astype(np.uint64), y.astype(np.uint64))[0]
+    np.testing.assert_array_equal(
+        np.asarray(got).astype(np.int64) & 0xFF, want.astype(np.int64) & 0xFF)
+    assert dev.bank().n_subarrays == 4
+    assert dev.totals()["calls"] == 1
+
+
+def test_nop_padding_is_inert():
+    """NOP rows appended by table bucketing leave the state untouched."""
+    import jax.numpy as jnp
+    _, uprog, table = cached_table("addition", N_BITS)
+    raw_cmds = len(uprog.commands)
+    assert table.shape[0] == table_bucket(raw_cmds)
+    assert (table[raw_cmds:] == 0).all()
+    run = batched_interpreter()
+    rng = np.random.default_rng(6)
+    state = rng.integers(0, 2**32, size=(2, 32, 4), dtype=np.uint32)
+    nops = np.zeros((8, table.shape[1]), np.int32)
+    out = np.asarray(run(jnp.asarray(state), jnp.asarray(nops)))
+    np.testing.assert_array_equal(out, state)
+
+
+def test_table_bucket_monotone_bounded():
+    assert table_bucket(1) == 64
+    assert table_bucket(64) == 64
+    assert table_bucket(65) == 128
+    assert table_bucket(1048) == 2048
+    with pytest.raises(ValueError):
+        pad_command_table(np.zeros((10, 13), np.int32), 8)

@@ -76,11 +76,10 @@ def test_hint_noop_without_mesh():
 
 
 def test_fit_spec_never_violates_divisibility():
-    from hypothesis import given, settings, strategies as st
-    from jax.sharding import AbstractMesh
+    from _hypothesis_compat import given, settings, st
     from repro.distributed import sharding as shd
 
-    mesh = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+    mesh = shd.abstract_mesh((2, 16, 16), ("pod", "data", "model"))
 
     @given(st.integers(1, 4096), st.sampled_from(
         [None, "model", ("pod", "data"), ("pod", "data", "model")]))

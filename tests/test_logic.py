@@ -2,7 +2,7 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.logic import AND, MAJ, NOT, OR, XOR, Circuit
 from repro.core.synthesis import maj_full_adder, optimize_mig, synthesize, to_mig

@@ -6,7 +6,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from jax.sharding import AbstractMesh
 
 from repro.configs import ARCHS, get_config
 from repro.distributed import sharding as shd
@@ -14,8 +13,8 @@ from repro.models.config import SHAPES_BY_NAME
 from repro.models.transformer import init_caches, init_lm
 
 MESHES = {
-    "16x16": AbstractMesh((16, 16), ("data", "model")),
-    "2x16x16": AbstractMesh((2, 16, 16), ("pod", "data", "model")),
+    "16x16": shd.abstract_mesh((16, 16), ("data", "model")),
+    "2x16x16": shd.abstract_mesh((2, 16, 16), ("pod", "data", "model")),
 }
 
 
