@@ -22,16 +22,22 @@ vs the 1-subarray measured wall time (measured rows).
 
 from __future__ import annotations
 
+import json
 import time
-from typing import Dict, Sequence
+from typing import Dict, List, Sequence
 
-from repro.core.bank import Bank, random_operand_sets
+import numpy as np
+
+from repro.core.bank import Bank, BbopInstr, Ref, random_operand_sets
 from repro.core.isa import compile_op
 from repro.core.ops_library import get_op
 from repro.core.timing import DDR4, bank_throughput_gops, uprogram_latency_s
 
 SUBARRAY_COUNTS = (1, 2, 4, 8, 16)
 OPS = ("addition", "multiplication", "greater", "xor_red")
+
+# heterogeneous mix: 25% add / 25% mul / 25% cmp / 25% and at mixed widths
+MIX_OPS = ("addition", "multiplication", "greater", "and_red")
 
 
 def table_bank_scaling(
@@ -80,5 +86,146 @@ def table_bank_scaling(
     return out
 
 
+def _mix_queue(lanes: int, n_instrs: int, widths: Sequence[int],
+               seed: int = 0) -> List[BbopInstr]:
+    """25% of each MIX_OPS op, cycling through ``widths`` — with default
+    widths (8, 16) and ≥8 instructions the queue spans ≥8 distinct
+    (op, width) groups, so the grouped baseline pays one replay per
+    group while the fused dispatcher packs full waves."""
+    rng = np.random.default_rng(seed)
+    queue = []
+    for i in range(n_instrs):
+        op = MIX_OPS[i % len(MIX_OPS)]
+        w = widths[(i // len(MIX_OPS)) % len(widths)]
+        spec = get_op(op, w)
+        ops = tuple(rng.integers(0, 1 << b, lanes).astype(np.uint64)
+                    for b in spec.operand_bits)
+        queue.append(BbopInstr(op, ops, w))
+    return queue
+
+
+def _chain_queue(lanes: int, seed: int = 1) -> List[BbopInstr]:
+    """Producer→consumer chains (mul8 → add16 → relu16): the fused path
+    forwards the intermediates vertically, the grouped path round-trips
+    them through pack/unpack."""
+    rng = np.random.default_rng(seed)
+    queue = []
+    for _ in range(4):
+        x, y = (rng.integers(0, 256, lanes).astype(np.uint64)
+                for _ in range(2))
+        z = rng.integers(0, 1 << 16, lanes).astype(np.uint64)
+        base = len(queue)
+        queue.append(BbopInstr("multiplication", (x, y), 8))
+        queue.append(BbopInstr("addition", (Ref(base), z), 16))
+        queue.append(BbopInstr("relu", (Ref(base + 1),), 16,
+                               keep_vertical=True))
+    return queue
+
+
+def _run_queue(queue: List[BbopInstr], n_subarrays: int, fuse: bool):
+    bank = Bank(n_subarrays=n_subarrays, fuse=fuse)
+    bank.dispatch(queue)                      # warm the executables
+    bank.reset_stats()
+    bank._rr_next = 0
+    t0 = time.perf_counter()
+    results = bank.dispatch(queue)
+    wall_us = (time.perf_counter() - t0) * 1e6
+    return results, bank.stats, wall_us
+
+
+def _assert_bit_exact(fused_results, grouped_results) -> None:
+    from repro.core.bank import VerticalOperand
+
+    def flat(r):
+        outs = r if isinstance(r, tuple) else (r,)
+        return [o.to_values() if isinstance(o, VerticalOperand)
+                else np.asarray(o) for o in outs]
+
+    for i, (a, b) in enumerate(zip(fused_results, grouped_results)):
+        for x, y in zip(flat(a), flat(b)):
+            if not np.array_equal(x, y):
+                raise SystemExit(
+                    f"FUSED DISPATCH DIVERGES from grouped path at "
+                    f"instruction {i}")
+
+
+def table_hetero_dispatch(
+    n_subarrays: int = 4,
+    lanes: int = 4096,
+    n_instrs: int = 16,
+    widths: Sequence[int] = (8, 16),
+    out_json: str | None = "BENCH_dispatch.json",
+) -> Dict:
+    """Fused heterogeneous dispatch vs the grouped baseline.
+
+    Prints ``name,us_per_call,derived`` CSV rows (derived = fused/grouped
+    improvement ratio), verifies the two paths are bit-exact (exits
+    non-zero on divergence — the CI gate), and writes the perf trajectory
+    to ``out_json``.
+    """
+    print("# hetero_dispatch: name,us_per_call,derived(ratio_vs_grouped)")
+    report: Dict = {
+        "config": {"n_subarrays": n_subarrays, "lanes": lanes,
+                   "n_instrs": n_instrs, "widths": list(widths)},
+        "scenarios": {},
+    }
+    scenarios = {
+        "mix": lambda seed: _mix_queue(lanes, n_instrs, widths, seed),
+        "chain": lambda seed: _chain_queue(lanes, seed),
+    }
+    for name, mk in scenarios.items():
+        queue = mk(0)
+        rf, sf, us_f = _run_queue(queue, n_subarrays, fuse=True)
+        rg, sg, us_g = _run_queue(mk(0), n_subarrays, fuse=False)
+        _assert_bit_exact(rf, rg)
+        n_q = len(queue)
+        row = {
+            "fused": {"replays": sf.batches,
+                      "fused_batches": sf.fused_batches,
+                      "modeled_latency_s": sf.latency_s,
+                      "measured_queue_us": us_f,
+                      "transpositions_skipped": sf.transpositions_skipped,
+                      "transpose_s_saved": sf.transpose_s_saved},
+            "grouped": {"replays": sg.batches,
+                        "modeled_latency_s": sg.latency_s,
+                        "measured_queue_us": us_g},
+            "queue_len": n_q,
+            "replay_ratio": sg.batches / max(sf.batches, 1),
+            "modeled_speedup": sg.latency_s / max(sf.latency_s, 1e-30),
+        }
+        report["scenarios"][name] = row
+        print(f"hetero/{name}/fused,{us_f / n_q:.0f},{row['replay_ratio']:.2f}"
+              f"  # {sf.batches} vs {sg.batches} replays, modeled "
+              f"{sf.latency_s * 1e6:.1f} vs {sg.latency_s * 1e6:.1f} us, "
+              f"{sf.transpositions_skipped} transpositions skipped")
+        print(f"hetero/{name}/grouped,{us_g / n_q:.0f},1.00")
+    if out_json:
+        with open(out_json, "w") as f:
+            json.dump(report, f, indent=2, sort_keys=True)
+        print(f"# wrote {out_json}")
+    return report
+
+
 if __name__ == "__main__":
-    table_bank_scaling()
+    import argparse
+
+    p = argparse.ArgumentParser()
+    p.add_argument("--hetero", action="store_true",
+                   help="run only the heterogeneous-dispatch comparison")
+    p.add_argument("--smoke", action="store_true",
+                   help="fast CI configuration (2 subarrays, 64 lanes)")
+    p.add_argument("--json", default="BENCH_dispatch.json",
+                   help="output path for the dispatch bench report")
+    args = p.parse_args()
+    if args.hetero or args.smoke:
+        if args.smoke:
+            table_hetero_dispatch(n_subarrays=2, lanes=64, n_instrs=8,
+                                  out_json=args.json)
+        else:
+            table_hetero_dispatch(out_json=args.json)
+    else:
+        # bare run: print-only, like the other benchmark tables (the
+        # JSON artifact is emitted by the explicit --hetero/--smoke
+        # paths, which ci.sh uses)
+        table_bank_scaling()
+        table_hetero_dispatch(out_json=None)

@@ -24,6 +24,10 @@ TABLES = {
     "bank_scaling": lambda full: B.table_bank_scaling(
         widths=(8, 16, 32) if full else (8, 16),
         lanes=65536 if full else 4096),
+    "hetero_dispatch": lambda full: B.table_hetero_dispatch(
+        lanes=65536 if full else 4096,
+        n_instrs=32 if full else 16,
+        out_json=None),
     "energy": lambda full: T.table_energy(),
     "synthesis": lambda full: T.table_synthesis(widths=(8, 16) if not full else (8, 16, 32)),
     "area": lambda full: T.table_area(),

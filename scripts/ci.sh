@@ -24,4 +24,9 @@ python -m pytest -x -q
 echo "== μProgram validation (16 ops, MIG + AIG, DRAM oracle) =="
 python scripts/check_uprograms.py
 
+echo "== fused-dispatch smoke bench (2 subarrays, 64 lanes) =="
+# exits non-zero if the fused heterogeneous path diverges from the
+# grouped baseline; BENCH_dispatch.json is uploaded as a CI artifact
+python -m benchmarks.bank_scaling --smoke --json BENCH_dispatch.json
+
 echo "CI OK"

@@ -13,35 +13,51 @@ module reproduces that layer on top of the Step-3 scan interpreter:
     slabs at once; programs stay data, so one compiled executable serves
     every op whose bucketed (rows, cmds) shape matches (NOP padding +
     row bucketing make add/sub/cmp/... at one width share a slot);
-  - :meth:`Bank.dispatch` is the ``bbop`` queue front-end: ISA-level
-    instructions are allocated round-robin across subarrays, command
-    tables are replayed from the per-(op, width, style) cache, and
-    aggregate latency/energy/throughput are modeled with
-    :mod:`repro.core.timing` / :mod:`repro.core.energy` (latency counts
-    one μProgram replay per *batch* — subarrays run concurrently).
+  - :meth:`Bank.dispatch` is the ``bbop`` queue front-end, a **fused
+    dataflow dispatcher**: command tables are data, so per-subarray
+    tables stack into one ``(n_subarrays, n_cmds, 13)`` array and a
+    single :func:`~repro.core.control_unit.hetero_batched_interpreter`
+    replay executes *different* ops on different subarrays (PULSAR-style
+    multi-op simultaneous activation); producer→consumer chains
+    (:class:`Ref` operands) forward intermediate results as bit-planes
+    that never leave the state (the end-to-end SIMDRAM paper's
+    transposition-unit discipline: only PuM-resident data is vertical);
+    host packing of wave *k+1* overlaps device replay of wave *k*
+    (double buffering, ``jax.block_until_ready`` only at drain).
+    Aggregate latency/energy/throughput are modeled with
+    :mod:`repro.core.timing` / :mod:`repro.core.energy` — a fused wave
+    charges the latency of its *longest* constituent μProgram.
 
-Backends (all bit-exact, cross-checked in tests/test_bank_engine.py):
+Backends (all bit-exact, cross-checked in tests/test_bank_engine.py and
+tests/test_fused_dispatch.py):
 
   engine="interp"    vmapped control-unit scan (default; models hardware)
   engine="bitplane"  vmapped fused bit-plane circuits (TPU fast path)
   engine="pallas"    Pallas-tiled bit-plane kernels (repro.kernels)
+
+``Bank(fuse=False)`` keeps the per-(op, width, signedness) grouped replay
+path — the baseline the fused dispatcher is property-tested against.
 """
 
 from __future__ import annotations
 
 import functools
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
 from . import bitplane
-from .control_unit import (batched_interpreter, encode_uprogram, load_state,
-                           pad_command_table, read_outputs, table_bucket)
+from .control_unit import (CMD_WIDTH, batched_interpreter, encode_uprogram,
+                           hetero_batched_interpreter, load_state,
+                           output_plane_rows, pad_command_table, read_outputs,
+                           table_bucket)
+from .costmodel import forwarding_saving_s
 from .energy import uprogram_energy_nj
 from .isa import _round_up, compile_op
-from .timing import DDR4, DramConfig, uprogram_latency_s
+from .timing import DDR4, DramConfig, fused_replay_latency_s, uprogram_latency_s
 
 ROW_BUCKET = 16     # state-row granularity shared across ops of one width
 
@@ -79,6 +95,9 @@ class BankStats:
     n_subarrays: int
     bbops: int = 0            # ISA instructions dispatched
     batches: int = 0          # batched-interpreter replays (≤ bbops)
+    fused_batches: int = 0    # replays mixing ≥2 distinct (op, width) tables
+    transpositions_skipped: int = 0   # h2v/v2h conversions forwarding avoided
+    transpose_s_saved: float = 0.0    # modeled seconds those skips saved
     aap: int = 0              # per-subarray command counts, summed
     ap: int = 0
     elements: int = 0         # result elements produced
@@ -99,6 +118,9 @@ class BankStats:
             "n_subarrays": self.n_subarrays,
             "bbops": self.bbops,
             "batches": self.batches,
+            "fused_batches": self.fused_batches,
+            "transpositions_skipped": self.transpositions_skipped,
+            "transpose_s_saved": self.transpose_s_saved,
             "aap": self.aap,
             "ap": self.ap,
             "elements": self.elements,
@@ -109,17 +131,112 @@ class BankStats:
 
 
 @dataclass(frozen=True)
+class Ref:
+    """Operand placeholder inside a dispatch queue: output ``out`` of
+    ``queue[producer]`` feeds this instruction *vertically* — the
+    producer's result bit-planes are copied straight from its executed
+    state into the consumer's operand rows, skipping the v2h→h2v round
+    trip the grouped path pays (the paper's transposition-unit policy:
+    PuM-resident intermediates stay vertical)."""
+
+    producer: int
+    out: int = 0
+
+
+@dataclass(frozen=True)
+class VerticalOperand:
+    """A vertical-layout (bit-plane) operand or result.
+
+    ``planes[j]`` holds bit *j* of every lane, 32 lanes per uint32 word
+    (lane *l* ↦ bit ``l % 32`` of word ``l // 32`` — the layout of
+    :func:`repro.core.bitplane.pack` and the Pallas transposition unit).
+    Plane bits beyond ``lanes`` are unspecified; :meth:`to_values`
+    truncates them.  Queue an instruction with ``keep_vertical=True`` to
+    receive its results in this form (no v2h), or pass a
+    ``VerticalOperand`` operand to skip the h2v on entry.
+    """
+
+    planes: np.ndarray
+    lanes: int
+
+    @classmethod
+    def from_values(cls, values, n_bits: int) -> "VerticalOperand":
+        """Pack horizontal integers through the transposition unit
+        (:func:`repro.kernels.ops.h2v` for widths ≤ 32)."""
+        vals = np.asarray(values)
+        lanes = int(vals.shape[-1])
+        if lanes == 0:
+            return cls(np.zeros((n_bits, 0), np.uint32), 0)
+        if n_bits <= 32:
+            from repro.kernels import ops as kops
+            planes = np.asarray(kops.h2v(jnp.asarray(vals), n_bits))
+        else:
+            from .subarray import pack_bits
+            planes = pack_bits(vals.astype(np.uint64), n_bits,
+                               _round_up(max(lanes, 1), 32))
+        return cls(planes, lanes)
+
+    def to_values(self, signed: bool = False) -> np.ndarray:
+        """Unpack through the transposition unit
+        (:func:`repro.kernels.ops.v2h` for widths ≤ 32) to (lanes,) int64."""
+        n_bits = int(self.planes.shape[0])
+        if self.lanes == 0:
+            return np.zeros(0, np.int64)
+        if n_bits <= 32:
+            from repro.kernels import ops as kops
+            vals = np.asarray(
+                kops.v2h(jnp.asarray(self.planes), signed=signed)
+            ).astype(np.int64)[: self.lanes]
+            if not signed and n_bits == 32:
+                vals = vals & 0xFFFFFFFF
+            return vals
+        from .subarray import unpack_bits
+        vals = unpack_bits(
+            np.ascontiguousarray(self.planes), self.lanes).astype(np.int64)
+        if signed and n_bits < 64:
+            vals = np.where(vals >= (1 << (n_bits - 1)),
+                            vals - (1 << n_bits), vals)
+        return vals
+
+
+Operand = Union[np.ndarray, VerticalOperand, Ref]
+
+
+@dataclass(frozen=True)
 class BbopInstr:
-    """One queued ISA-level ``bbop``: op name + flat integer operands."""
+    """One queued ISA-level ``bbop``: op name + operands.
+
+    Operands may be flat integer arrays (horizontal), pre-packed
+    :class:`VerticalOperand` planes, or :class:`Ref` links to an earlier
+    instruction's output.  ``keep_vertical=True`` returns the result(s)
+    as :class:`VerticalOperand` (the v2h unpack is skipped)."""
 
     op: str
-    operands: Tuple[np.ndarray, ...]
+    operands: Tuple[Operand, ...]
     n_bits: int
     signed_out: bool = False
+    keep_vertical: bool = False
 
     @property
     def elements(self) -> int:
-        return int(np.asarray(self.operands[0]).shape[-1])
+        o = self.operands[0]
+        if isinstance(o, VerticalOperand):
+            return o.lanes
+        if isinstance(o, Ref):
+            raise ValueError(
+                "lead operand is a Ref; lane count is resolved at dispatch")
+        return int(np.asarray(o).shape[-1])
+
+
+@dataclass
+class _Slot:
+    """One occupied subarray in a fused wave."""
+
+    qi: int          # queue index
+    sid: int         # subarray id
+    spec: object
+    uprog: object
+    lanes: int
 
 
 class Bank:
@@ -127,19 +244,30 @@ class Bank:
 
     ``n_subarrays`` models the paper's bank-level parallelism knob (the
     1/4/16-bank sweep uses one compute subarray per bank).  All execution
-    funnels through :meth:`execute_batch`; :meth:`bbop` spreads one large
-    instruction's lanes across the bank, :meth:`dispatch` spreads a queue
-    of instructions round-robin.
+    funnels through :meth:`execute_batch` or the fused wave executor;
+    :meth:`bbop` spreads one large instruction's lanes across the bank,
+    :meth:`dispatch` drains a queue of instructions.
+
+    ``fuse_ratio`` bounds heterogeneous fusion: instructions join one
+    wave only while the wave's largest/smallest bucketed command count
+    and row count stay within the ratio (beyond it, padding a tiny
+    program to a huge slot buys nothing — the dispatcher falls back to
+    separate, effectively per-group, replays).
     """
 
     def __init__(self, n_subarrays: int = 4, cfg: DramConfig = DDR4,
-                 style: str = "mig", engine: str = "interp"):
+                 style: str = "mig", engine: str = "interp",
+                 fuse: bool = True, fuse_ratio: int = 32):
         if engine not in ("interp", "bitplane", "pallas"):
             raise ValueError(f"unknown engine {engine!r}")
+        if fuse_ratio < 1:
+            raise ValueError("fuse_ratio must be >= 1")
         self.n_subarrays = n_subarrays
         self.cfg = cfg
         self.style = style
         self.engine = engine
+        self.fuse = fuse
+        self.fuse_ratio = fuse_ratio
         self.stats = BankStats(n_subarrays)
         self._rr_next = 0     # round-robin allocation cursor
 
@@ -232,26 +360,40 @@ class Bank:
                 else np.asarray(r))
         return results
 
+    # -- cost accounting ---------------------------------------------------
     def _account(self, uprog, operand_sets, lanes, subarray_ids):
         k = len(operand_sets)
         if subarray_ids is None:
             subarray_ids = range(k)
+        self._account_wave(
+            [(uprog, n, sid) for n, sid in zip(lanes, subarray_ids)],
+            fused=False)
+
+    def _account_wave(self, entries, fused: bool):
+        """Charge one replay of ``entries`` = [(uprog, lanes, sid), ...].
+
+        A physical subarray holds cfg.columns_per_subarray lanes; a slot
+        wider than that serializes extra replays on its subarray (the
+        simulation still runs them in one vmapped state — only the cost
+        model quantizes).  Subarrays replay concurrently, so the wave's
+        wall-clock is its longest constituent's serialized invocations —
+        for a fused heterogeneous wave that is the longest μProgram, NOT
+        the per-group sum the grouped path pays.
+        """
         st = self.stats
         st.batches += 1
-        st.elements += sum(lanes)
-        # a physical subarray holds cfg.columns_per_subarray lanes; a set
-        # wider than that serializes extra replays on its subarray (the
-        # simulation still runs them in one vmapped state — only the cost
-        # model quantizes)
+        if fused:
+            st.fused_batches += 1
         cap = self.cfg.columns_per_subarray
-        invs = [max(1, -(-n // cap)) for n in lanes]
-        st.aap += uprog.n_aap * sum(invs)
-        st.ap += uprog.n_ap * sum(invs)
-        # subarrays replay concurrently; the widest set's serialized
-        # invocations bound the batch's wall-clock
-        st.latency_s += max(invs) * uprogram_latency_s(uprog, self.cfg)
-        st.energy_nj += uprogram_energy_nj(uprog, self.cfg) * sum(invs)
-        for sid in subarray_ids:
+        ups = [e[0] for e in entries]
+        invs = [max(1, -(-e[1] // cap)) for e in entries]
+        st.elements += sum(e[1] for e in entries)
+        st.aap += sum(up.n_aap * i for up, i in zip(ups, invs))
+        st.ap += sum(up.n_ap * i for up, i in zip(ups, invs))
+        st.latency_s += fused_replay_latency_s(ups, invs, self.cfg)
+        st.energy_nj += sum(
+            uprogram_energy_nj(up, self.cfg) * i for up, i in zip(ups, invs))
+        for _, _, sid in entries:
             st.subarray_programs[sid % self.n_subarrays] += 1
 
     # -- ISA front-ends ----------------------------------------------------
@@ -277,28 +419,342 @@ class Bank:
         return np.concatenate(results, axis=-1)
 
     def dispatch(self, queue: Sequence[BbopInstr]) -> List:
-        """Drain a queue of bbops: instructions with the same (op, width,
-        signedness) are allocated round-robin across subarrays and each
-        full batch replays its cached command table once.  Results come
-        back in queue order; costs accumulate in :attr:`stats`."""
+        """Drain a queue of bbops; results come back in queue order and
+        costs accumulate in :attr:`stats`.
+
+        With ``fuse=True`` on the ``interp`` engine (the default), the
+        queue compiles to a sequence of *waves*: up to ``n_subarrays``
+        instructions — different ops, widths, and signedness — stack
+        their command tables and replay in ONE fused heterogeneous
+        interpreter call; ``Ref`` operands forward producer bit-planes
+        without leaving the vertical layout; host packing of wave *k+1*
+        overlaps device replay of wave *k*.  Otherwise instructions with
+        the same (op, width, signedness) are allocated round-robin
+        across subarrays and each full batch replays its cached command
+        table once (the grouped baseline).
+        """
+        queue = list(queue)
         results: List = [None] * len(queue)
-        groups: Dict[Tuple[str, int, bool], List[int]] = {}
-        for i, ins in enumerate(queue):
-            groups.setdefault(
-                (ins.op, ins.n_bits, ins.signed_out), []).append(i)
-        for (op, n_bits, signed_out), idxs in groups.items():
-            for c in range(0, len(idxs), self.n_subarrays):
-                chunk = idxs[c: c + self.n_subarrays]
-                sids = [(self._rr_next + j) % self.n_subarrays
-                        for j in range(len(chunk))]
-                self._rr_next = (self._rr_next + len(chunk)) % self.n_subarrays
-                outs = self.execute_batch(
-                    op, n_bits, [list(queue[i].operands) for i in chunk],
-                    signed_out, subarray_ids=sids)
-                for i, out in zip(chunk, outs):
-                    results[i] = out
+        if not queue:
+            return results
+        plan = self._plan(queue)
         self.stats.bbops += len(queue)
+        if self.fuse and self.engine == "interp":
+            self._dispatch_fused(queue, plan, results)
+        else:
+            self._dispatch_grouped(queue, plan, results)
         return results
+
+    # -- dispatch planning -------------------------------------------------
+    def _plan(self, queue):
+        """Resolve the queue's dataflow: per-instruction lane counts,
+        dependency stages (a consumer runs strictly after its producers),
+        and the set of (producer, out) results needed vertically.
+
+        Every vertical operand (Ref or VerticalOperand) must carry
+        exactly the instruction's lane count: forwarded planes beyond the
+        producer's lanes are unspecified bits, so a lane-mismatched
+        forward has no meaning the grouped path could agree with —
+        rejected here rather than silently diverging.
+        """
+        n = len(queue)
+        lanes, stage, needed = [0] * n, [0] * n, set()
+        for i, ins in enumerate(queue):
+            for o in ins.operands:
+                if not isinstance(o, Ref):
+                    continue
+                if not 0 <= o.producer < i:
+                    raise ValueError(
+                        f"instr {i}: Ref producer {o.producer} must precede "
+                        "it in the queue")
+                pspec, _, _ = cached_table(
+                    queue[o.producer].op, queue[o.producer].n_bits, self.style)
+                if not 0 <= o.out < len(pspec.out_bits):
+                    raise ValueError(
+                        f"instr {i}: Ref output {o.out} out of range for "
+                        f"{queue[o.producer].op}")
+                needed.add((o.producer, o.out))
+                stage[i] = max(stage[i], stage[o.producer] + 1)
+            lead = ins.operands[0]
+            if isinstance(lead, Ref):
+                lanes[i] = lanes[lead.producer]
+            elif isinstance(lead, VerticalOperand):
+                lanes[i] = lead.lanes
+            else:
+                lanes[i] = int(np.asarray(lead).shape[-1])
+            for k, o in enumerate(ins.operands):
+                got = (lanes[o.producer] if isinstance(o, Ref)
+                       else o.lanes if isinstance(o, VerticalOperand)
+                       else None)
+                if got is not None and got != lanes[i]:
+                    raise ValueError(
+                        f"instr {i}: vertical operand {k} carries {got} "
+                        f"lanes but the instruction has {lanes[i]}")
+        return lanes, stage, needed
+
+    def plan_lanes(self, queue: Sequence[BbopInstr]) -> List[int]:
+        """Resolved per-instruction lane counts for a dispatch queue
+        (Ref/VerticalOperand operands included) — the single source of
+        truth :meth:`SimdramDevice.dispatch` accounting consumes."""
+        return self._plan(list(queue))[0]
+
+    def _empty_result(self, ins: BbopInstr):
+        spec, _, _ = cached_table(ins.op, ins.n_bits, self.style)
+        outs = [
+            VerticalOperand(np.zeros((w, 0), np.uint32), 0)
+            if ins.keep_vertical else np.zeros(0, np.int64)
+            for w in spec.out_bits
+        ]
+        return outs[0] if len(outs) == 1 else tuple(outs)
+
+    def _skip_zero_lane(self, queue, i, needed, planes_cache, results):
+        """Zero-lane instructions produce empty results without a replay
+        slot (and publish empty planes if a consumer references them)."""
+        results[i] = self._empty_result(queue[i])
+        spec, _, _ = cached_table(queue[i].op, queue[i].n_bits, self.style)
+        for o, w in enumerate(spec.out_bits):
+            if (i, o) in needed:
+                planes_cache[(i, o)] = np.zeros((w, 0), np.uint32)
+
+    # -- fused dataflow dispatcher -----------------------------------------
+    def _dispatch_fused(self, queue, plan, results):
+        lanes, stage, needed = plan
+        planes_cache: Dict[Tuple[int, int], np.ndarray] = {}
+        active = []
+        for i in range(len(queue)):
+            if lanes[i] == 0:
+                self._skip_zero_lane(queue, i, needed, planes_cache, results)
+            else:
+                active.append(i)
+
+        waves = self._build_waves(queue, active, stage)
+        run = hetero_batched_interpreter()
+        pending: Optional[Tuple[List[_Slot], jnp.ndarray]] = None
+        for wave in waves:
+            if pending is not None:
+                # stage barrier: if this wave forwards planes from the
+                # still-in-flight wave, drain it before packing
+                in_flight = {s.qi for s in pending[0]}
+                if any(isinstance(o, Ref) and o.producer in in_flight
+                       for i in wave for o in queue[i].operands):
+                    self._harvest_wave(queue, pending, planes_cache,
+                                       needed, results)
+                    pending = None
+            states, tables, entries = self._pack_wave(
+                queue, wave, lanes, planes_cache)
+            fut = run(jnp.asarray(states), jnp.asarray(tables))  # async
+            self._account_wave(
+                [(e.uprog, e.lanes, e.sid) for e in entries],
+                fused=len({(queue[i].op, queue[i].n_bits,
+                            queue[i].signed_out) for i in wave}) > 1)
+            if pending is not None:
+                # double buffering: wave k is harvested only after wave
+                # k+1 was packed and submitted, so host pack overlapped
+                # device replay
+                self._harvest_wave(queue, pending, planes_cache, needed,
+                                   results)
+            pending = (entries, fut)
+        if pending is not None:
+            jax.block_until_ready(pending[1])     # drain the pipeline
+            self._harvest_wave(queue, pending, planes_cache, needed, results)
+
+    def _build_waves(self, queue, active, stage) -> List[List[int]]:
+        """Chunk instructions into fused waves: stages execute in order;
+        within a stage, instructions sort by descending program size so
+        heavy μPrograms fuse with heavy ones (a wave costs its longest
+        constituent), then fill up to ``n_subarrays`` slots while the
+        wave's bucketed command/row spans stay within ``fuse_ratio``."""
+
+        def buckets(i):
+            _, uprog, table = cached_table(
+                queue[i].op, queue[i].n_bits, self.style)
+            return (table.shape[0], _round_up(uprog.n_rows_total, ROW_BUCKET))
+
+        waves: List[List[int]] = []
+        for s in sorted({stage[i] for i in active}):
+            idxs = sorted((i for i in active if stage[i] == s),
+                          key=lambda i: (-buckets(i)[0], -buckets(i)[1], i))
+            wave: List[int] = []
+            c_max = r_min = r_max = 0
+            for i in idxs:
+                c, r = buckets(i)
+                if wave:
+                    # sorted by cmds desc, so c_max is the wave head's;
+                    # the row span needs running min/max (rows do not
+                    # follow the command-count order)
+                    if (len(wave) == self.n_subarrays
+                            or c_max > c * self.fuse_ratio
+                            or max(r_max, r) > min(r_min, r)
+                            * self.fuse_ratio):
+                        waves.append(wave)
+                        wave = []
+                if not wave:
+                    c_max, r_min, r_max = c, r, r
+                else:
+                    r_min, r_max = min(r_min, r), max(r_max, r)
+                wave.append(i)
+            if wave:
+                waves.append(wave)
+        return waves
+
+    def _pack_wave(self, queue, wave, lanes, planes_cache):
+        """Build the stacked (states, tables) arrays for one fused wave.
+
+        Idle subarrays keep all-zero tables (pure NOPs) and zero states;
+        shorter constituent tables are NOP-padded to the wave's shared
+        command bucket, shallower state slabs zero-padded to its row
+        bucket.  Vertical operands (``Ref`` forwards and user-supplied
+        ``VerticalOperand``) write their planes straight into the state —
+        the skipped h2v conversions are credited to the stats at the
+        :func:`repro.core.costmodel.forwarding_saving_s` price.
+        """
+        metas = [cached_table(queue[i].op, queue[i].n_bits, self.style)
+                 for i in wave]
+        n_rows = _round_up(
+            max(m[1].n_rows_total for m in metas), ROW_BUCKET)
+        n_cmds = max(m[2].shape[0] for m in metas)
+        cols = _round_up(max(lanes[i] for i in wave), 32)
+        words = cols // 32
+        states = np.zeros((self.n_subarrays, n_rows, words), np.uint32)
+        tables = np.zeros((self.n_subarrays, n_cmds, CMD_WIDTH), np.int32)
+        entries: List[_Slot] = []
+        for j, (i, (spec, uprog, table)) in enumerate(zip(wave, metas)):
+            sid = (self._rr_next + j) % self.n_subarrays
+            ins = queue[i]
+            horiz: List[Optional[np.ndarray]] = []
+            vert: Dict[int, np.ndarray] = {}
+            for k, o in enumerate(ins.operands):
+                if isinstance(o, Ref):
+                    vert[k] = _adapt_planes(
+                        planes_cache[(o.producer, o.out)],
+                        len(uprog.in_rows[k]), words,
+                        sign_extend=queue[o.producer].signed_out)
+                    horiz.append(None)
+                    self.stats.transpositions_skipped += 1
+                    self.stats.transpose_s_saved += forwarding_saving_s(
+                        lanes[i], spec.operand_bits[k], self.cfg)
+                elif isinstance(o, VerticalOperand):
+                    vert[k] = _adapt_planes(
+                        o.planes, len(uprog.in_rows[k]), words,
+                        sign_extend=False)
+                    horiz.append(None)
+                    self.stats.transpositions_skipped += 1
+                    self.stats.transpose_s_saved += forwarding_saving_s(
+                        o.lanes, spec.operand_bits[k], self.cfg)
+                else:
+                    horiz.append(np.asarray(o))
+            st = load_state(uprog, horiz, cols, n_rows=n_rows)
+            for k, planes in vert.items():
+                st[list(uprog.in_rows[k])] = planes
+            states[sid] = st
+            tables[sid, : table.shape[0]] = table
+            entries.append(_Slot(i, sid, spec, uprog, lanes[i]))
+        self._rr_next = (self._rr_next + len(wave)) % self.n_subarrays
+        return states, tables, entries
+
+    def _harvest_wave(self, queue, pending, planes_cache, needed, results):
+        """Materialize one completed wave: publish forwarded planes for
+        downstream consumers, and produce user-facing results — vertical
+        (``keep_vertical``, v2h skipped) or horizontal via
+        :func:`read_outputs`."""
+        entries, fut = pending
+        out = np.asarray(fut)
+        for e in entries:
+            ins = queue[e.qi]
+            sub = out[e.sid]
+            per_out_rows = output_plane_rows(e.spec.out_bits, e.uprog)
+            for o, rows in enumerate(per_out_rows):
+                if (e.qi, o) in needed:
+                    planes_cache[(e.qi, o)] = sub[rows].copy()
+            if ins.keep_vertical:
+                words = -(-e.lanes // 32)
+                outs = [VerticalOperand(sub[rows][:, :words].copy(), e.lanes)
+                        for rows in per_out_rows]
+                self.stats.transpositions_skipped += len(outs)
+                self.stats.transpose_s_saved += sum(
+                    forwarding_saving_s(e.lanes, w, self.cfg)
+                    for w in e.spec.out_bits)
+                results[e.qi] = outs[0] if len(outs) == 1 else tuple(outs)
+            else:
+                outs = read_outputs(
+                    e.spec.out_bits, e.uprog, sub, e.lanes, ins.signed_out)
+                results[e.qi] = outs[0] if len(outs) == 1 else tuple(outs)
+
+    # -- grouped baseline dispatcher ---------------------------------------
+    def _dispatch_grouped(self, queue, plan, results):
+        """Per-(op, width, signedness) grouped replay (the pre-fusion
+        path, kept as the bit-exactness baseline and for the bitplane /
+        pallas engines).  Ref and VerticalOperand operands are
+        materialized horizontally — every producer→consumer hop pays the
+        v2h→h2v round trip the fused path skips."""
+        lanes, stage, needed = plan
+        planes_cache: Dict[Tuple[int, int], np.ndarray] = {}
+        for s in sorted(set(stage)):
+            groups: Dict[Tuple[str, int, bool], List[int]] = {}
+            for i in (i for i in range(len(queue)) if stage[i] == s):
+                if lanes[i] == 0:
+                    self._skip_zero_lane(
+                        queue, i, needed, planes_cache, results)
+                    continue
+                ins = queue[i]
+                groups.setdefault(
+                    (ins.op, ins.n_bits, ins.signed_out), []).append(i)
+            for (op, n_bits, signed_out), idxs in groups.items():
+                for c in range(0, len(idxs), self.n_subarrays):
+                    chunk = idxs[c: c + self.n_subarrays]
+                    sids = [(self._rr_next + j) % self.n_subarrays
+                            for j in range(len(chunk))]
+                    self._rr_next = (
+                        self._rr_next + len(chunk)) % self.n_subarrays
+                    sets = [self._materialize_operands(queue, queue[i],
+                                                       results)
+                            for i in chunk]
+                    outs = self.execute_batch(
+                        op, n_bits, sets, signed_out, subarray_ids=sids)
+                    for i, o in zip(chunk, outs):
+                        if queue[i].keep_vertical:
+                            o = self._pack_result(queue[i], o)
+                        results[i] = o
+
+    def _materialize_operands(self, queue, ins, results) -> List[np.ndarray]:
+        ops: List[np.ndarray] = []
+        for o in ins.operands:
+            if isinstance(o, Ref):
+                prod = queue[o.producer]
+                r = results[o.producer]
+                vals = r[o.out] if isinstance(r, tuple) else r
+                if isinstance(vals, VerticalOperand):
+                    vals = vals.to_values(signed=prod.signed_out)
+                ops.append(np.asarray(vals))
+            elif isinstance(o, VerticalOperand):
+                ops.append(o.to_values())
+            else:
+                ops.append(np.asarray(o))
+        return ops
+
+    def _pack_result(self, ins: BbopInstr, result):
+        spec, _, _ = cached_table(ins.op, ins.n_bits, self.style)
+        outs = result if isinstance(result, tuple) else (result,)
+        vos = [VerticalOperand.from_values(np.asarray(v), w)
+               for v, w in zip(outs, spec.out_bits)]
+        return vos[0] if len(vos) == 1 else tuple(vos)
 
     def reset_stats(self):
         self.stats = BankStats(self.n_subarrays)
+
+
+def _adapt_planes(planes: np.ndarray, n_rows: int, n_words: int,
+                  sign_extend: bool) -> np.ndarray:
+    """Width-adapt forwarded (w, W) bit-planes to a consumer expecting
+    ``n_rows`` planes of ``n_words`` words: high planes truncate (packing
+    a horizontal value keeps only the low bits), missing planes extend
+    with the producer's sign plane (a signed producer's horizontal value
+    is two's-complement, so its high bits replicate the sign bit) or
+    zeros (unsigned)."""
+    out = np.zeros((n_rows, n_words), np.uint32)
+    w = min(planes.shape[0], n_rows)
+    cw = min(planes.shape[1], n_words)
+    out[:w, :cw] = planes[:w, :cw]
+    if sign_extend and 0 < planes.shape[0] < n_rows:
+        out[planes.shape[0]:, :cw] = planes[planes.shape[0] - 1, :cw]
+    return out

@@ -49,18 +49,36 @@ def load_state(
     n_rows: int | None = None,
 ) -> np.ndarray:
     """(n_rows, n_words) uint32 subarray state: C1 pinned, operand *i*'s
-    bits packed vertically into ``uprog.in_rows[i]``."""
+    bits packed vertically into ``uprog.in_rows[i]``.
+
+    An operand entry of ``None`` is skipped — the caller supplies those
+    rows already vertical (the bank dispatcher's operand-forwarding path
+    writes producer bit-planes straight into the consumer state).
+    """
     from .subarray import pack_bits
 
     state = np.zeros(
         (n_rows or uprog.n_rows_total, n_columns // 32), dtype=np.uint32)
     state[C1] = np.uint32(0xFFFFFFFF)
     for op_idx, rows in enumerate(uprog.in_rows):
+        if operands[op_idx] is None:
+            continue
         planes = pack_bits(
             np.asarray(operands[op_idx]).astype(np.uint64), len(rows),
             n_columns)
         state[list(rows)] = planes
     return state
+
+
+def output_plane_rows(out_bits: Sequence[int], uprog: UProgram):
+    """Physical state rows holding each output, LSB-first: one row list
+    per declared output width (the rows whose planes ARE the vertical
+    result — what the dispatcher forwards without unpacking)."""
+    rows, pos = [], 0
+    for w in out_bits:
+        rows.append([uprog.out_rows[pos + j][0] for j in range(w)])
+        pos += w
+    return rows
 
 
 def read_outputs(
@@ -71,15 +89,13 @@ def read_outputs(
     per declared output width (two's-complement narrowed if ``signed``)."""
     from .subarray import unpack_bits
 
-    outs, pos = [], 0
-    for w in out_bits:
-        rows = [uprog.out_rows[pos + j][0] for j in range(w)]
+    outs = []
+    for w, rows in zip(out_bits, output_plane_rows(out_bits, uprog)):
         vals = unpack_bits(state[rows], lanes).astype(np.int64)
         if signed:
             vals = vals & ((1 << w) - 1)
             vals = np.where(vals >= (1 << (w - 1)), vals - (1 << w), vals)
         outs.append(vals)
-        pos += w
     return outs
 
 
@@ -200,5 +216,30 @@ def batched_interpreter():
             return out
 
         return jax.vmap(one)(states)
+
+    return run
+
+
+@functools.lru_cache(maxsize=1)
+def hetero_batched_interpreter():
+    """Fused heterogeneous replay: (n_subarrays, n_rows, n_words) states ×
+    (n_subarrays, n_cmds, 13) *per-subarray* command tables.
+
+    Command tables are data, so stacking them adds one more vmapped axis:
+    one replay executes a DIFFERENT μProgram on every subarray — the
+    PULSAR-style multi-op simultaneous activation that amortizes a single
+    controller broadcast across heterogeneous work.  Shorter constituent
+    programs are NOP-padded to the wave's shared command bucket (a
+    zero command word is AAP(T0→T0), a true no-op), so the executable is
+    cached per (state, table) *shape* exactly like the homogeneous path.
+    """
+
+    @jax.jit
+    def run(states: jnp.ndarray, tables: jnp.ndarray) -> jnp.ndarray:
+        def one(state, table):
+            out, _ = jax.lax.scan(_step, state, table)
+            return out
+
+        return jax.vmap(one)(states, tables)
 
     return run

@@ -40,6 +40,17 @@ class OffloadPlan:
         return self.host_s / max(self.pum_total_s, 1e-30)
 
 
+def forwarding_saving_s(
+    n_elems: int, n_bits: int, cfg: DramConfig = DDR4
+) -> float:
+    """Modeled seconds saved when the bank dispatcher keeps one operand or
+    result vertical (operand forwarding / ``keep_vertical``): exactly the
+    ``pum_transpose_s`` term of :func:`decide` that the skipped
+    horizontal↔vertical conversion would otherwise contribute.  The bank
+    engine accumulates this into ``BankStats.transpose_s_saved``."""
+    return transpose_cost_s(n_elems, n_bits, cfg)
+
+
 def decide(
     op: str,
     n_bits: int,

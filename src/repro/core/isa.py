@@ -177,6 +177,19 @@ class SimdramDevice:
                             signed_out)
         return outs[0] if len(outs) == 1 else tuple(outs)
 
+    def dispatch(self, queue) -> List:
+        """Drain a :class:`repro.core.bank.BbopInstr` queue through the
+        bank engine's fused dataflow dispatcher (heterogeneous ops fuse
+        into one replay per wave; ``Ref`` operands forward vertically).
+        Per-instruction costs are appended to :attr:`calls`."""
+        queue = list(queue)     # tolerate iterator queues
+        bank = self.bank()
+        results = bank.dispatch(queue)
+        for ins, n in zip(queue, bank.plan_lanes(queue)):
+            _, uprog = compile_op(ins.op, ins.n_bits, self.style)
+            self._account(ins.op, ins.n_bits, uprog, n)
+        return results
+
     # -- reporting -------------------------------------------------------------
     def totals(self) -> Dict[str, float]:
         return {

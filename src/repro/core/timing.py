@@ -75,6 +75,21 @@ def bank_latency_s(
     return batches * uprogram_latency_s(up, cfg)
 
 
+def fused_replay_latency_s(
+    uprogs, invocations=None, cfg: DramConfig = DDR4
+) -> float:
+    """Wall-clock of ONE fused heterogeneous replay: every subarray
+    executes its own μProgram concurrently off a single broadcast, so the
+    wave takes as long as its longest constituent (shorter programs pad
+    with NOP command slots).  ``invocations[i]`` serializes extra replays
+    for constituent *i* (lanes beyond the per-subarray column capacity)."""
+    ups = list(uprogs)
+    if not ups:
+        return 0.0
+    invs = list(invocations) if invocations is not None else [1] * len(ups)
+    return max(n * uprogram_latency_s(up, cfg) for up, n in zip(ups, invs))
+
+
 def bank_throughput_gops(
     up: UProgram, cfg: DramConfig = DDR4, n_subarrays: int = 1
 ) -> float:

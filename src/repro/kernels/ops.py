@@ -65,14 +65,22 @@ def bbop_pallas(
 
 
 def h2v(values: jax.Array, n_bits: int = 32, *, interpret: bool = True) -> jax.Array:
-    """Transposition unit, horizontal→vertical; returns (n_bits, N/32)."""
+    """Transposition unit, horizontal→vertical; returns (n_bits, N/32).
+
+    Any lane count N is accepted (lanes pad to a multiple of 32, the
+    kernel pads partial tiles internally).  This is the conversion the
+    bank dispatcher's ``VerticalOperand.from_values`` routes through —
+    and the one its operand forwarding *skips* for chained bbops.
+    """
+    assert n_bits <= 32, "h2v packs machine words; use core.subarray for wider"
     v, n = _pad_axis(values.astype(jnp.uint32).reshape(-1), 0, 32)
     planes = h2v_pallas(v, interpret=interpret)
     return planes[:n_bits]
 
 
 def v2h(planes: jax.Array, *, signed: bool = False, interpret: bool = True) -> jax.Array:
-    """Transposition unit, vertical→horizontal; accepts (k≤32, W) planes."""
+    """Transposition unit, vertical→horizontal; accepts (k≤32, W) planes
+    for any word count W (the kernel pads partial tiles internally)."""
     k, w = planes.shape
     if k < 32:
         planes = jnp.concatenate(

@@ -74,35 +74,55 @@ def _kernel_v2h(in_ref, out_ref):
 
 def h2v_pallas(values: jax.Array, *, block_b: int = DEFAULT_BLOCK_B,
                interpret: bool = True) -> jax.Array:
-    """(N,) uint32 -> (32, N/32) uint32 planes."""
+    """(N,) uint32 -> (32, N/32) uint32 planes.
+
+    N must be a multiple of 32; any word count is accepted — a partial
+    tail tile is zero-padded up to the block so the grid always divides
+    evenly, and the pad is sliced off the result.
+    """
     n = values.shape[0]
     assert n % 32 == 0
     nb = n // 32
+    if nb == 0:
+        return jnp.zeros((32, 0), jnp.uint32)
     bb = min(block_b, nb)
-    assert nb % bb == 0, (nb, bb)
+    x = values.astype(jnp.uint32).reshape(nb, 32)
+    rem = nb % bb
+    if rem:
+        x = jnp.pad(x, ((0, bb - rem), (0, 0)))
+    nbp = x.shape[0]
     fn = pl.pallas_call(
         _kernel_h2v,
-        grid=(nb // bb,),
+        grid=(nbp // bb,),
         in_specs=[pl.BlockSpec((bb, 32), lambda i: (i, 0))],
         out_specs=pl.BlockSpec((32, bb), lambda i: (0, i)),
-        out_shape=jax.ShapeDtypeStruct((32, nb), jnp.uint32),
+        out_shape=jax.ShapeDtypeStruct((32, nbp), jnp.uint32),
         interpret=interpret,
     )
-    return fn(values.astype(jnp.uint32).reshape(nb, 32))
+    return fn(x)[:, :nb]
 
 
 def v2h_pallas(planes: jax.Array, *, block_b: int = DEFAULT_BLOCK_B,
                interpret: bool = True) -> jax.Array:
-    """(32, N/32) uint32 planes -> (N,) uint32 lane values."""
+    """(32, N/32) uint32 planes -> (N,) uint32 lane values.
+
+    Accepts any word count (partial tail tiles zero-pad to the block and
+    the pad is sliced off the result)."""
     nb = planes.shape[1]
+    if nb == 0:
+        return jnp.zeros((0,), jnp.uint32)
     bb = min(block_b, nb)
-    assert nb % bb == 0
+    x = planes.astype(jnp.uint32)
+    rem = nb % bb
+    if rem:
+        x = jnp.pad(x, ((0, 0), (0, bb - rem)))
+    nbp = x.shape[1]
     fn = pl.pallas_call(
         _kernel_v2h,
-        grid=(nb // bb,),
+        grid=(nbp // bb,),
         in_specs=[pl.BlockSpec((32, bb), lambda i: (0, i))],
         out_specs=pl.BlockSpec((bb, 32), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((nb, 32), jnp.uint32),
+        out_shape=jax.ShapeDtypeStruct((nbp, 32), jnp.uint32),
         interpret=interpret,
     )
-    return fn(planes.astype(jnp.uint32)).reshape(nb * 32)
+    return fn(x).reshape(nbp * 32)[: nb * 32]

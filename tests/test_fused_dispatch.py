@@ -1,0 +1,386 @@
+"""The fused dataflow dispatcher vs the grouped baseline.
+
+Proves the PR-2 tentpole claims:
+  - one heterogeneous replay executes DIFFERENT ops on different
+    subarrays, bit-exact against the per-group path for all 16 ops in
+    both MIG and AIG styles (property-tested over ops/widths/batches);
+  - with ≥4 distinct (op, width) groups on a 4-subarray bank the fused
+    path uses ≥2× fewer interpreter replays and models less latency;
+  - producer→consumer chains forward operands vertically (bit-planes
+    never round-trip through pack/unpack), including width-mismatched
+    and signed chains, and the skipped transpositions are priced into
+    the stats;
+  - dispatcher edge cases: empty queue, zero-lane instructions inside a
+    mixed queue, round-robin cursor wraparound on queues much larger
+    than n_subarrays × groups, and fallback splitting when bucketed
+    shapes are incompatible (fuse_ratio).
+"""
+
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro.core.bank import (Bank, BbopInstr, Ref, VerticalOperand,
+                             cached_table)
+from repro.core.control_unit import hetero_batched_interpreter
+from repro.core.costmodel import forwarding_saving_s
+from repro.core.isa import compile_op
+from repro.core.ops_library import ALL_OPS, get_op
+from repro.core.timing import fused_replay_latency_s, uprogram_latency_s
+
+LANES = 64
+
+
+def _rand_instr(rng, op, n_bits, lanes=LANES, **kw):
+    spec = get_op(op, n_bits)
+    ops = tuple(rng.integers(0, 1 << w, lanes).astype(np.uint64)
+                for w in spec.operand_bits)
+    return BbopInstr(op, ops, n_bits, **kw)
+
+
+def _flat(result):
+    outs = result if isinstance(result, tuple) else (result,)
+    return [o.to_values() if isinstance(o, VerticalOperand)
+            else np.asarray(o) for o in outs]
+
+
+def _assert_same(fused_results, grouped_results):
+    for i, (a, b) in enumerate(zip(fused_results, grouped_results)):
+        fa, fb = _flat(a), _flat(b)
+        assert len(fa) == len(fb)
+        for x, y in zip(fa, fb):
+            np.testing.assert_array_equal(x, y, err_msg=f"instr {i}")
+
+
+def _both(queue, n_subarrays=4, style="mig", **bank_kw):
+    fused = Bank(n_subarrays=n_subarrays, style=style, fuse=True, **bank_kw)
+    grouped = Bank(n_subarrays=n_subarrays, style=style, fuse=False)
+    rf = fused.dispatch(queue)
+    rg = grouped.dispatch(queue)
+    _assert_same(rf, rg)
+    return fused, grouped, rf
+
+
+# --- bit-exactness --------------------------------------------------------
+
+@pytest.mark.parametrize("style", ["mig", "aig"])
+def test_fused_matches_grouped_all_ops(style):
+    """One mixed queue touching all 16 ops: fused == grouped, both
+    styles (division/multiplication excluded at aig for runtime — they
+    are covered at mig)."""
+    ops = [op for op in ALL_OPS
+           if style == "mig" or op not in ("division", "multiplication")]
+    rng = np.random.default_rng({"mig": 0, "aig": 1}[style])
+    queue = [_rand_instr(rng, op, 8) for op in ops]
+    fused, grouped, _ = _both(queue, style=style)
+    assert fused.stats.bbops == grouped.stats.bbops == len(queue)
+    assert fused.stats.batches < grouped.stats.batches
+
+
+@given(st.integers(2, 6), st.integers(1, 4), st.integers(0, 10_000))
+@settings(max_examples=15, deadline=None)
+def test_fused_property_random_queues(n_bits, n_subarrays, seed):
+    """Random op mixes, widths, lane counts, signedness: fused == grouped."""
+    rng = np.random.default_rng(seed)
+    ops = ("addition", "subtraction", "min", "max", "greater", "relu")
+    queue = []
+    for _ in range(int(rng.integers(1, 10))):
+        op = ops[int(rng.integers(0, len(ops)))]
+        lanes = int(rng.integers(1, 70))
+        signed = bool(rng.integers(0, 2)) and op != "greater"
+        queue.append(_rand_instr(rng, op, n_bits, lanes=lanes,
+                                 signed_out=signed))
+    _both(queue, n_subarrays=n_subarrays)
+
+
+# --- replay-count and latency acceptance ----------------------------------
+
+def test_fused_halves_replays_on_hetero_mix():
+    """≥4 distinct (op, width) groups on 4 subarrays: ≥2× fewer replays
+    AND strictly less modeled latency, bit-exact (the PR acceptance
+    criterion)."""
+    rng = np.random.default_rng(0)
+    queue = []
+    for i in range(16):
+        op = ("addition", "multiplication", "greater", "and_red")[i % 4]
+        n_bits = (8, 16)[(i // 4) % 2]
+        queue.append(_rand_instr(rng, op, n_bits))
+    fused, grouped, _ = _both(queue)
+    assert len({(q.op, q.n_bits) for q in queue}) >= 4
+    assert fused.stats.batches * 2 <= grouped.stats.batches
+    assert fused.stats.latency_s < grouped.stats.latency_s
+    assert fused.stats.fused_batches > 0
+    # invariant totals: same per-subarray command work either way
+    assert fused.stats.aap == grouped.stats.aap
+    assert fused.stats.ap == grouped.stats.ap
+    assert fused.stats.elements == grouped.stats.elements
+
+
+def test_fused_wave_charges_longest_constituent():
+    """One wave mixing a long μProgram (multiplication) with a short one
+    (greater) costs exactly the longer program — not the sum."""
+    rng = np.random.default_rng(1)
+    queue = [_rand_instr(rng, "multiplication", 8),
+             _rand_instr(rng, "greater", 8)]
+    bank = Bank(n_subarrays=4)
+    bank.dispatch(queue)
+    _, up_mul = compile_op("multiplication", 8)
+    _, up_gt = compile_op("greater", 8)
+    assert bank.stats.batches == 1
+    assert bank.stats.latency_s == pytest.approx(
+        uprogram_latency_s(up_mul))
+    assert bank.stats.latency_s == pytest.approx(
+        fused_replay_latency_s([up_mul, up_gt]))
+    assert bank.stats.aap == up_mul.n_aap + up_gt.n_aap
+
+
+def test_fuse_ratio_falls_back_to_separate_replays():
+    """Incompatible bucketed shapes (tiny fuse_ratio) split the wave —
+    the fallback is the per-group behavior, still bit-exact."""
+    rng = np.random.default_rng(2)
+    queue = [_rand_instr(rng, "multiplication", 16),   # cmd bucket 8192
+             _rand_instr(rng, "greater", 8)]           # cmd bucket 64
+    fused, _, _ = _both(queue, fuse_ratio=2)
+    assert fused.stats.batches == 2          # ratio 128 > 2: no fusion
+    assert fused.stats.fused_batches == 0
+    fused2 = Bank(n_subarrays=4, fuse_ratio=128)
+    fused2.dispatch(queue)
+    assert fused2.stats.batches == 1         # generous ratio: one wave
+    with pytest.raises(ValueError):
+        Bank(fuse_ratio=0)
+
+
+def test_hetero_interpreter_shared_executable():
+    """Same bucketed (states, tables) shapes reuse ONE compiled fused
+    executable across different op mixes — tables are data."""
+    run = hetero_batched_interpreter()
+    rng = np.random.default_rng(3)
+    mixes = [("addition", "subtraction"), ("min", "max"),
+             ("subtraction", "addition")]
+    bank = Bank(n_subarrays=2)
+    for mix in mixes:
+        bank.dispatch([_rand_instr(rng, op, 8) for op in mix])
+    before = run._cache_size()
+    for mix in mixes + [("max", "min"), ("subtraction", "min")]:
+        bank.dispatch([_rand_instr(rng, op, 8) for op in mix])
+    assert run._cache_size() == before       # zero new compilations
+
+
+# --- vertical operand forwarding ------------------------------------------
+
+def test_chain_forwards_vertically_and_prices_skips():
+    """mul8 → add16 → relu16 chain: fused == grouped == numpy, with the
+    two forwarded hops counted and priced into the stats."""
+    rng = np.random.default_rng(4)
+    x, y = (rng.integers(0, 256, LANES).astype(np.uint64) for _ in range(2))
+    z = rng.integers(0, 1 << 16, LANES).astype(np.uint64)
+    queue = [
+        BbopInstr("multiplication", (x, y), 8),
+        BbopInstr("addition", (Ref(0), z), 16),
+        BbopInstr("relu", (Ref(1),), 16),
+    ]
+    fused, grouped, rf = _both(queue)
+    want = (x * y + z) & 0xFFFF
+    want_relu = np.where(want >= 1 << 15, 0, want)
+    np.testing.assert_array_equal(np.asarray(rf[2]) & 0xFFFF, want_relu)
+    assert fused.stats.transpositions_skipped == 2
+    assert fused.stats.transpose_s_saved == pytest.approx(
+        forwarding_saving_s(LANES, 16) * 2)
+    assert grouped.stats.transpositions_skipped == 0
+
+
+def test_chain_width_mismatch_narrow_and_wide():
+    """Forwarded widths ≠ consumer n_bits: a 16-bit product feeding an
+    8-bit add truncates, a 1-bit predicate feeding if_else stays 1 bit,
+    and a signed 8-bit result sign-extends into a 16-bit consumer."""
+    rng = np.random.default_rng(5)
+    x, y = (rng.integers(0, 256, LANES).astype(np.uint64) for _ in range(2))
+    z8 = rng.integers(0, 256, LANES).astype(np.uint64)
+    z16 = rng.integers(0, 1 << 16, LANES).astype(np.uint64)
+    queue = [
+        # 16-bit product -> 8-bit consumer (truncate high planes)
+        BbopInstr("multiplication", (x, y), 8),
+        BbopInstr("addition", (Ref(0), z8), 8),
+        # 1-bit predicate -> if_else select input
+        BbopInstr("greater", (x, y), 8),
+        BbopInstr("if_else", (Ref(2), x, y), 8),
+        # signed 8-bit result -> 16-bit consumer (sign-extend planes)
+        BbopInstr("subtraction", (x, y), 8, signed_out=True),
+        BbopInstr("addition", (Ref(4), z16), 16),
+    ]
+    _, _, rf = _both(queue)
+    np.testing.assert_array_equal(
+        np.asarray(rf[1]) & 0xFF, (x * y + z8) & 0xFF)
+    np.testing.assert_array_equal(
+        np.asarray(rf[3]) & 0xFF, np.where(x > y, x, y))
+    diff = (x.astype(np.int64) - y.astype(np.int64))
+    signed8 = ((diff & 0xFF) ^ 0x80) - 0x80          # two's-complement int8
+    np.testing.assert_array_equal(
+        np.asarray(rf[5]) & 0xFFFF, (signed8 + z16.astype(np.int64)) & 0xFFFF)
+
+
+def test_multi_output_ref_selects_component():
+    """division has two outputs; Ref(out=1) forwards the remainder."""
+    rng = np.random.default_rng(6)
+    x = rng.integers(0, 256, LANES).astype(np.uint64)
+    y = rng.integers(1, 256, LANES).astype(np.uint64)
+    queue = [
+        BbopInstr("division", (x, y), 8),
+        BbopInstr("addition", (Ref(0, out=1), y), 8),
+    ]
+    _, _, rf = _both(queue)
+    np.testing.assert_array_equal(
+        np.asarray(rf[1]) & 0xFF, (x % y + y) & 0xFF)
+
+
+def test_vertical_operand_in_and_out():
+    """User-supplied VerticalOperand inputs skip h2v; keep_vertical
+    results skip v2h; both round-trip through the transposition-unit
+    kernels bit-exactly."""
+    rng = np.random.default_rng(7)
+    x = rng.integers(0, 256, 100).astype(np.uint64)
+    y = rng.integers(0, 256, 100).astype(np.uint64)
+    vo = VerticalOperand.from_values(x, 8)
+    np.testing.assert_array_equal(vo.to_values() & 0xFF, x)
+    queue = [BbopInstr("addition", (vo, y), 8, keep_vertical=True)]
+    fused, _, rf = _both(queue, n_subarrays=2)
+    assert isinstance(rf[0], VerticalOperand)
+    np.testing.assert_array_equal(
+        rf[0].to_values() & 0xFF, (x + y) & 0xFF)
+    # one h2v skipped on entry + one v2h skipped on exit
+    assert fused.stats.transpositions_skipped == 2
+    assert fused.stats.transpose_s_saved > 0
+    d = fused.stats.as_dict()
+    assert {"fused_batches", "transpositions_skipped",
+            "transpose_s_saved"} <= set(d)
+
+
+def test_signed_keep_vertical_roundtrip():
+    rng = np.random.default_rng(8)
+    x, y = (rng.integers(0, 256, LANES).astype(np.uint64) for _ in range(2))
+    queue = [BbopInstr("subtraction", (x, y), 8, signed_out=True,
+                       keep_vertical=True)]
+    _, _, rf = _both(queue)
+    want = ((x.astype(np.int64) - y.astype(np.int64)) & 0xFF)
+    want = np.where(want >= 128, want - 256, want)
+    np.testing.assert_array_equal(rf[0].to_values(signed=True), want)
+
+
+# --- dispatcher edge cases ------------------------------------------------
+
+def test_empty_queue():
+    bank = Bank(n_subarrays=4)
+    assert bank.dispatch([]) == []
+    assert bank.stats.batches == 0 and bank.stats.bbops == 0
+
+
+def test_zero_lane_instruction_in_mixed_queue():
+    """A zero-lane instruction inside a mixed queue yields empty results
+    without occupying a replay slot — even as a chain producer."""
+    rng = np.random.default_rng(9)
+    e = np.zeros(0, np.uint64)
+    queue = [
+        _rand_instr(rng, "addition", 8),
+        BbopInstr("addition", (e, e), 8),
+        BbopInstr("relu", (Ref(1),), 8),          # chained off empty
+        BbopInstr("division", (e, e), 8),          # multi-output empty
+        BbopInstr("abs", (e,), 8, keep_vertical=True),
+        _rand_instr(rng, "greater", 8),
+    ]
+    fused, grouped, rf = _both(queue)
+    assert np.asarray(rf[1]).shape == (0,)
+    assert np.asarray(rf[2]).shape == (0,)
+    assert all(np.asarray(o).shape == (0,) for o in rf[3])
+    assert isinstance(rf[4], VerticalOperand) and rf[4].lanes == 0
+    assert fused.stats.bbops == len(queue)
+    # only the two non-empty instructions occupied subarray slots
+    assert fused.stats.subarray_programs.sum() == 2
+
+
+def test_round_robin_wraparound_large_queue():
+    """A queue much larger than n_subarrays × groups wraps the cursor
+    evenly: no subarray starves, order is preserved."""
+    rng = np.random.default_rng(10)
+    queue = []
+    for i in range(23):
+        op = ("addition", "subtraction", "min")[i % 3]
+        queue.append(_rand_instr(rng, op, 8, lanes=32))
+    fused, grouped, rf = _both(queue, n_subarrays=4)
+    for ins, got in zip(queue, rf):
+        want = get_op(ins.op, 8).oracle(
+            *[np.asarray(o).astype(np.uint64) for o in ins.operands])[0]
+        np.testing.assert_array_equal(
+            np.asarray(got).astype(np.int64) & 0xFF,
+            want.astype(np.int64) & 0xFF)
+    progs = fused.stats.subarray_programs
+    assert progs.sum() == 23
+    assert progs.max() - progs.min() <= 2     # round-robin balance
+
+
+def test_ref_validation():
+    x = np.ones(4, np.uint64)
+    with pytest.raises(ValueError, match="must precede"):
+        Bank().dispatch([BbopInstr("addition", (Ref(0), x), 8)])
+    with pytest.raises(ValueError, match="out of range"):
+        Bank().dispatch([BbopInstr("addition", (x, x), 8),
+                         BbopInstr("addition", (Ref(0, out=1), x), 8)])
+    with pytest.raises(ValueError):
+        BbopInstr("addition", (Ref(0), x), 8).elements
+
+
+def test_lane_mismatched_vertical_operands_rejected():
+    """Forwarded planes beyond the producer's lanes are unspecified, so
+    a lane-mismatched Ref/VerticalOperand has no meaning both paths can
+    agree on — _plan rejects it instead of silently diverging."""
+    small = np.ones(8, np.uint64)
+    big = np.ones(64, np.uint64)
+    queue = [BbopInstr("equal", (small, small), 8),
+             BbopInstr("addition", (big, Ref(0)), 8)]
+    for fuse in (True, False):
+        with pytest.raises(ValueError, match="8 lanes"):
+            Bank(fuse=fuse).dispatch(queue)
+    vo = VerticalOperand.from_values(small, 8)
+    with pytest.raises(ValueError, match="8 lanes"):
+        Bank().dispatch([BbopInstr("addition", (big, vo), 8)])
+
+
+def test_vertical_operand_empty_roundtrip():
+    vo = VerticalOperand.from_values(np.zeros(0, np.uint64), 8)
+    assert vo.lanes == 0 and vo.planes.shape == (8, 0)
+    assert vo.to_values().shape == (0,)
+
+
+def test_device_dispatch_routes_through_fused_bank():
+    """SimdramDevice.dispatch drains a queue through the fused engine
+    and accounts per-instruction call stats."""
+    from repro.core.isa import SimdramDevice
+    from repro.core.timing import DramConfig
+
+    dev = SimdramDevice(cfg=DramConfig(n_banks=4), backend="bank")
+    rng = np.random.default_rng(12)
+    x, y = (rng.integers(0, 256, LANES).astype(np.uint64) for _ in range(2))
+    queue = [BbopInstr("addition", (x, y), 8),
+             BbopInstr("relu", (Ref(0),), 8)]
+    out = dev.dispatch(queue)
+    want = (x + y) & 0xFF
+    np.testing.assert_array_equal(
+        np.asarray(out[1]) & 0xFF, np.where(want >= 128, 0, want))
+    assert dev.totals()["calls"] == 2
+    assert dev.bank().stats.batches == 2        # two stages, one wave each
+    assert dev.bank().stats.transpositions_skipped == 1
+    # Ref-lead instructions account their resolved lane count, not 0
+    assert all(c.elements == LANES for c in dev.calls)
+
+
+def test_grouped_engines_support_refs_too():
+    """The bitplane engine (grouped path) resolves Refs by materializing
+    horizontally — same results, no skipped transpositions."""
+    rng = np.random.default_rng(11)
+    x, y = (rng.integers(0, 256, LANES).astype(np.uint64) for _ in range(2))
+    queue = [BbopInstr("addition", (x, y), 8),
+             BbopInstr("subtraction", (Ref(0), y), 8)]
+    bank = Bank(n_subarrays=2, engine="bitplane")
+    out = bank.dispatch(queue)
+    np.testing.assert_array_equal(
+        np.asarray(out[1]) & 0xFF, x & 0xFF)
+    assert bank.stats.transpositions_skipped == 0
