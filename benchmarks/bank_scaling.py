@@ -122,11 +122,11 @@ def _chain_queue(lanes: int, seed: int = 1) -> List[BbopInstr]:
     return queue
 
 
-def _run_queue(queue: List[BbopInstr], n_subarrays: int, fuse: bool):
-    bank = Bank(n_subarrays=n_subarrays, fuse=fuse)
+def _run_queue(queue: List[BbopInstr], n_subarrays: int, fuse: bool,
+               packing: str = "ffd"):
+    bank = Bank(n_subarrays=n_subarrays, fuse=fuse, packing=packing)
     bank.dispatch(queue)                      # warm the executables
     bank.reset_stats()
-    bank._rr_next = 0
     t0 = time.perf_counter()
     results = bank.dispatch(queue)
     wall_us = (time.perf_counter() - t0) * 1e6
@@ -134,15 +134,10 @@ def _run_queue(queue: List[BbopInstr], n_subarrays: int, fuse: bool):
 
 
 def _assert_bit_exact(fused_results, grouped_results) -> None:
-    from repro.core.bank import VerticalOperand
-
-    def flat(r):
-        outs = r if isinstance(r, tuple) else (r,)
-        return [o.to_values() if isinstance(o, VerticalOperand)
-                else np.asarray(o) for o in outs]
+    from repro.core.bank import flatten_result
 
     for i, (a, b) in enumerate(zip(fused_results, grouped_results)):
-        for x, y in zip(flat(a), flat(b)):
+        for x, y in zip(flatten_result(a), flatten_result(b)):
             if not np.array_equal(x, y):
                 raise SystemExit(
                     f"FUSED DISPATCH DIVERGES from grouped path at "
@@ -178,17 +173,33 @@ def table_hetero_dispatch(
         rf, sf, us_f = _run_queue(queue, n_subarrays, fuse=True)
         rg, sg, us_g = _run_queue(mk(0), n_subarrays, fuse=False)
         _assert_bit_exact(rf, rg)
+        # greedy wave-packing baseline: the FFD packer must never model
+        # MORE latency than the PR 2 greedy close (the CI gate for the
+        # bin-packing scheduler), and must stay bit-exact
+        rp, sp, us_p = _run_queue(mk(0), n_subarrays, fuse=True,
+                                  packing="greedy")
+        _assert_bit_exact(rf, rp)
+        if sf.latency_s > sp.latency_s * (1 + 1e-9):
+            raise SystemExit(
+                f"FFD WAVE PACKING REGRESSES modeled latency on "
+                f"'{name}': {sf.latency_s} > greedy {sp.latency_s}")
         n_q = len(queue)
         row = {
             "fused": {"replays": sf.batches,
                       "fused_batches": sf.fused_batches,
                       "modeled_latency_s": sf.latency_s,
                       "measured_queue_us": us_f,
+                      "measured_pack_us": sf.pack_wall_s * 1e6,
+                      "measured_wall_us": sf.wall_s * 1e6,
                       "transpositions_skipped": sf.transpositions_skipped,
                       "transpose_s_saved": sf.transpose_s_saved},
+            "fused_greedy_packing": {"replays": sp.batches,
+                                     "modeled_latency_s": sp.latency_s,
+                                     "measured_queue_us": us_p},
             "grouped": {"replays": sg.batches,
                         "modeled_latency_s": sg.latency_s,
-                        "measured_queue_us": us_g},
+                        "measured_queue_us": us_g,
+                        "measured_wall_us": sg.wall_s * 1e6},
             "queue_len": n_q,
             "replay_ratio": sg.batches / max(sf.batches, 1),
             "modeled_speedup": sg.latency_s / max(sf.latency_s, 1e-30),

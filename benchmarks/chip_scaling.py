@@ -1,0 +1,177 @@
+"""Chip-level throughput scaling (the paper's 1/4/16-bank sweep, end to end).
+
+SIMDRAM's end-to-end evaluation scales compute-enabled banks from 1 to 16
+and reaches 88× CPU throughput because banks replay concurrently.  This
+benchmark drives that curve through the chip subsystem
+(:class:`repro.core.chip.SimdramChip`) and emits ``BENCH_chip.json``:
+
+  - **modeled curve**: :func:`repro.core.timing.chip_throughput_gops` per
+    op × width × bank count — the paper-style 1/4/16-bank scaling line
+    (exactly linear: banks share nothing);
+  - **measured vs modeled**: for each bank count, one heterogeneous mix
+    queue drains through ``SimdramChip.dispatch`` and the report records
+    the modeled chip latency (max-per-round over concurrent banks), the
+    serialized per-bank baseline latency (sum over banks), and the host
+    wall/pack times — the calibration pair that lets accelerator runs
+    assert *measured* scaling, not just modeled;
+  - **bit-exact gate**: chip dispatch == sequential per-bank
+    ``Bank.dispatch`` across ALL 16 ops in both MIG and AIG styles
+    (exits non-zero on divergence — the CI acceptance gate).
+
+Output follows the harness contract: ``name,us_per_call,derived`` CSV
+rows.
+
+  python -m benchmarks.chip_scaling            # full sweep
+  python -m benchmarks.chip_scaling --smoke    # CI configuration
+"""
+
+from __future__ import annotations
+
+import json
+import time
+from typing import Dict, Sequence
+
+import numpy as np
+
+from repro.core.bank import BbopInstr, flatten_result
+from repro.core.chip import SimdramChip, sequential_dispatch
+from repro.core.isa import compile_op
+from repro.core.ops_library import ALL_OPS, get_op
+from repro.core.timing import DDR4, chip_throughput_gops
+
+from .bank_scaling import _mix_queue
+
+BANK_COUNTS = (1, 4, 16)
+OPS = ("addition", "multiplication", "greater", "xor_red")
+
+
+def _assert_bit_exact(chip_results, seq_results, what: str) -> None:
+    for i, (a, b) in enumerate(zip(chip_results, seq_results)):
+        for x, y in zip(flatten_result(a), flatten_result(b)):
+            if not np.array_equal(x, y):
+                raise SystemExit(
+                    f"CHIP DISPATCH DIVERGES from sequential per-bank "
+                    f"execution at instruction {i} ({what})")
+
+
+def _gate_queue(style: str, lanes: int):
+    """One instruction per op in the library — the all-16-ops gate
+    (style-specific operands, mirroring tests/test_chip.py)."""
+    rng = np.random.default_rng({"mig": 0, "aig": 1}.get(style, 2))
+    queue = []
+    for op in ALL_OPS:
+        spec = get_op(op, 8)
+        ops = tuple(rng.integers(0, 1 << w, lanes).astype(np.uint64)
+                    for w in spec.operand_bits)
+        queue.append(BbopInstr(op, ops, 8))
+    return queue
+
+
+def table_chip_scaling(
+    bank_counts: Sequence[int] = BANK_COUNTS,
+    n_subarrays: int = 2,
+    lanes: int = 4096,
+    n_instrs: int = 32,
+    widths: Sequence[int] = (8, 16),
+    gate_lanes: int = 64,
+    out_json: str | None = "BENCH_chip.json",
+) -> Dict:
+    """Modeled curve + measured-vs-modeled calibration + bit-exact gate."""
+    report: Dict = {
+        "config": {"bank_counts": list(bank_counts),
+                   "n_subarrays": n_subarrays, "lanes": lanes,
+                   "n_instrs": n_instrs, "widths": list(widths)},
+        "modeled": {},
+        "scaling": {},
+        "gate": {},
+    }
+
+    # -- paper-style modeled throughput curve ------------------------------
+    print("# chip_scaling/modeled: name,us_per_call,derived(gops)")
+    for op in OPS:
+        for n_bits in widths:
+            _, up = compile_op(op, n_bits)
+            base = chip_throughput_gops(up, DDR4, n_banks=bank_counts[0],
+                                        n_subarrays=n_subarrays)
+            for nb in bank_counts:
+                gops = chip_throughput_gops(up, DDR4, n_banks=nb,
+                                            n_subarrays=n_subarrays)
+                report["modeled"][f"{op}/{n_bits}b/bank{nb}"] = gops
+                print(f"model/{op}/{n_bits}b/bank{nb},0.00,{gops:.2f}"
+                      f"  # x{gops / base:.1f} vs bank{bank_counts[0]}")
+
+    # -- measured vs modeled on a heterogeneous mix ------------------------
+    print("# chip_scaling/dispatch: name,us_per_call,derived"
+          "(modeled_speedup_vs_sequential)")
+    for nb in bank_counts:
+        queue = _mix_queue(lanes, n_instrs, widths, seed=0)
+        chip = SimdramChip(n_banks=nb, n_subarrays=n_subarrays)
+        chip.dispatch(_mix_queue(lanes, n_instrs, widths, seed=0))  # warm
+        chip.reset_stats()
+        t0 = time.perf_counter()
+        chip_results = chip.dispatch(queue)
+        wall_us = (time.perf_counter() - t0) * 1e6
+        seq_results, banks = sequential_dispatch(
+            _mix_queue(lanes, n_instrs, widths, seed=0),
+            n_banks=nb, n_subarrays=n_subarrays)
+        _assert_bit_exact(chip_results, seq_results, f"mix/bank{nb}")
+        st = chip.stats
+        seq_latency_s = sum(b.stats.latency_s for b in banks)
+        row = {
+            "modeled_latency_s": st.latency_s,
+            "sequential_latency_s": seq_latency_s,
+            "modeled_speedup": seq_latency_s / max(st.latency_s, 1e-30),
+            "measured_wall_us": wall_us,
+            "measured_pack_us": st.pack_wall_s * 1e6,
+            "rounds": st.rounds,
+            "bank_waves": st.batches,
+            "imbalance": st.imbalance,
+            "utilization": [float(u) for u in st.utilization],
+            "throughput_gops": st.throughput_gops,
+            "sharded": chip.executor.sharded,
+            "devices": (chip.executor.mesh.shape["data"]
+                        if chip.executor.sharded else 1),
+        }
+        report["scaling"][str(nb)] = row
+        print(f"chip/mix/bank{nb},{wall_us / len(queue):.0f},"
+              f"{row['modeled_speedup']:.2f}"
+              f"  # modeled {st.latency_s * 1e6:.1f} vs sequential "
+              f"{seq_latency_s * 1e6:.1f} us, imbalance "
+              f"{st.imbalance:.2f}, sharded={row['sharded']}")
+
+    # -- all-16-ops bit-exact gate, both styles ----------------------------
+    for style in ("mig", "aig"):
+        queue = _gate_queue(style, gate_lanes)
+        chip = SimdramChip(n_banks=4, n_subarrays=n_subarrays, style=style)
+        t0 = time.perf_counter()
+        chip_results = chip.dispatch(queue)
+        gate_us = (time.perf_counter() - t0) * 1e6   # chip dispatch only
+        seq_results, _ = sequential_dispatch(
+            _gate_queue(style, gate_lanes), n_banks=4,
+            n_subarrays=n_subarrays, style=style)
+        _assert_bit_exact(chip_results, seq_results, f"gate/{style}")
+        report["gate"][style] = {"ops": len(ALL_OPS), "bit_exact": True}
+        print(f"chip/gate/{style},{gate_us / len(queue):.0f},1.00"
+              f"  # {len(ALL_OPS)} ops bit-exact vs sequential banks")
+
+    if out_json:
+        with open(out_json, "w") as f:
+            json.dump(report, f, indent=2, sort_keys=True)
+        print(f"# wrote {out_json}")
+    return report
+
+
+if __name__ == "__main__":
+    import argparse
+
+    p = argparse.ArgumentParser()
+    p.add_argument("--smoke", action="store_true",
+                   help="fast CI configuration (1/2/4 banks, 64 lanes)")
+    p.add_argument("--json", default="BENCH_chip.json",
+                   help="output path for the chip bench report")
+    args = p.parse_args()
+    if args.smoke:
+        table_chip_scaling(bank_counts=(1, 2, 4), n_subarrays=2, lanes=64,
+                           n_instrs=8, gate_lanes=32, out_json=args.json)
+    else:
+        table_chip_scaling(out_json=args.json)

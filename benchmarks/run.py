@@ -17,9 +17,14 @@ import sys
 import time
 
 from . import bank_scaling as B
+from . import chip_scaling as C
 from . import paper_tables as T
 
 TABLES = {
+    "chip_scaling": lambda full: C.table_chip_scaling(
+        lanes=65536 if full else 4096,
+        n_instrs=32 if full else 16,
+        out_json=None),
     "throughput": lambda full: T.table_throughput(widths=(8, 16, 32) if full else (8, 16, 32)),
     "bank_scaling": lambda full: B.table_bank_scaling(
         widths=(8, 16, 32) if full else (8, 16),

@@ -26,7 +26,18 @@ python scripts/check_uprograms.py
 
 echo "== fused-dispatch smoke bench (2 subarrays, 64 lanes) =="
 # exits non-zero if the fused heterogeneous path diverges from the
-# grouped baseline; BENCH_dispatch.json is uploaded as a CI artifact
+# grouped baseline, or if FFD wave packing models more latency than the
+# greedy baseline; BENCH_dispatch.json is uploaded as a CI artifact
 python -m benchmarks.bank_scaling --smoke --json BENCH_dispatch.json
+
+echo "== chip tests under real shard_map partitioning (4 forced devices) =="
+XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+    python -m pytest tests/test_chip.py -q
+
+echo "== chip-scaling smoke bench (4 forced host devices) =="
+# exits non-zero if chip dispatch diverges from sequential per-bank
+# execution (all 16 ops, MIG + AIG); BENCH_chip.json is a CI artifact
+XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+    python -m benchmarks.chip_scaling --smoke --json BENCH_chip.json
 
 echo "CI OK"

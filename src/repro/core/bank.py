@@ -42,6 +42,7 @@ path — the baseline the fused dispatcher is property-tested against.
 from __future__ import annotations
 
 import functools
+import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple, Union
 
@@ -103,11 +104,27 @@ class BankStats:
     elements: int = 0         # result elements produced
     latency_s: float = 0.0    # modeled wall-clock (subarrays concurrent)
     energy_nj: float = 0.0    # summed over all active subarrays
+    pack_wall_s: float = 0.0  # measured host seconds spent packing waves
+    wall_s: float = 0.0       # measured host seconds spent in dispatch()
     subarray_programs: np.ndarray = field(default=None)  # type: ignore
 
     def __post_init__(self):
         if self.subarray_programs is None:
             self.subarray_programs = np.zeros(self.n_subarrays, np.int64)
+
+    def add_wave(self, cost, fused: bool, concurrent: bool = False):
+        """Accumulate one wave's :class:`WaveCost`.  ``concurrent=True``
+        skips ``latency_s`` — the chip charges each round at the max
+        across its concurrently-replaying banks instead of the sum."""
+        self.batches += 1
+        if fused:
+            self.fused_batches += 1
+        self.elements += cost.elements
+        self.aap += cost.aap
+        self.ap += cost.ap
+        self.energy_nj += cost.energy_nj
+        if not concurrent:
+            self.latency_s += cost.latency_s
 
     @property
     def throughput_gops(self) -> float:
@@ -126,6 +143,8 @@ class BankStats:
             "elements": self.elements,
             "latency_s": self.latency_s,
             "energy_nj": self.energy_nj,
+            "pack_wall_s": self.pack_wall_s,
+            "wall_s": self.wall_s,
             "throughput_gops": self.throughput_gops,
         }
 
@@ -239,6 +258,105 @@ class _Slot:
     lanes: int
 
 
+@dataclass(frozen=True)
+class WaveCost:
+    """Modeled cost of ONE fused-wave replay — the single place the
+    per-slot serialization (lanes beyond the column capacity) and the
+    longest-constituent latency rule are computed; consumed by both
+    :meth:`Bank._account_wave` and the chip-level round accounting."""
+
+    uprogs: Tuple
+    invocations: Tuple[int, ...]
+    elements: int
+    aap: int
+    ap: int
+    energy_nj: float
+    latency_s: float
+
+
+def wave_cost(entries, cfg: DramConfig) -> WaveCost:
+    """Cost one replay of ``entries`` = [(uprog, lanes, sid), ...].
+
+    A physical subarray holds cfg.columns_per_subarray lanes; a slot
+    wider than that serializes extra replays on its subarray (the
+    simulation still runs them in one vmapped state — only the cost
+    model quantizes).  Subarrays replay concurrently, so the wave's
+    wall-clock is its longest constituent's serialized invocations —
+    for a fused heterogeneous wave that is the longest μProgram, NOT
+    the per-group sum the grouped path pays.
+    """
+    cap = cfg.columns_per_subarray
+    ups = tuple(e[0] for e in entries)
+    invs = tuple(max(1, -(-e[1] // cap)) for e in entries)
+    return WaveCost(
+        uprogs=ups,
+        invocations=invs,
+        elements=sum(e[1] for e in entries),
+        aap=sum(up.n_aap * i for up, i in zip(ups, invs)),
+        ap=sum(up.n_ap * i for up, i in zip(ups, invs)),
+        energy_nj=sum(uprogram_energy_nj(up, cfg) * i
+                      for up, i in zip(ups, invs)),
+        latency_s=fused_replay_latency_s(ups, invs, cfg),
+    )
+
+
+def flatten_result(result) -> List[np.ndarray]:
+    """One horizontal array per output, :class:`VerticalOperand` results
+    unpacked — the canonical form every dispatch-path cross-check
+    (tests, benchmark bit-exactness gates) compares in."""
+    outs = result if isinstance(result, tuple) else (result,)
+    return [o.to_values() if isinstance(o, VerticalOperand)
+            else np.asarray(o) for o in outs]
+
+
+def plan_queue(queue: Sequence[BbopInstr], style: str = "mig"):
+    """Resolve a queue's dataflow: per-instruction lane counts, dependency
+    stages (a consumer runs strictly after its producers), and the set of
+    (producer, out) results needed vertically.
+
+    Every vertical operand (Ref or VerticalOperand) must carry exactly
+    the instruction's lane count: forwarded planes beyond the producer's
+    lanes are unspecified bits, so a lane-mismatched forward has no
+    meaning the grouped path could agree with — rejected here rather
+    than silently diverging.  Shared by :meth:`Bank.dispatch` and the
+    chip-level partitioned dispatcher (:mod:`repro.core.chip`).
+    """
+    n = len(queue)
+    lanes, stage, needed = [0] * n, [0] * n, set()
+    for i, ins in enumerate(queue):
+        for o in ins.operands:
+            if not isinstance(o, Ref):
+                continue
+            if not 0 <= o.producer < i:
+                raise ValueError(
+                    f"instr {i}: Ref producer {o.producer} must precede "
+                    "it in the queue")
+            pspec, _, _ = cached_table(
+                queue[o.producer].op, queue[o.producer].n_bits, style)
+            if not 0 <= o.out < len(pspec.out_bits):
+                raise ValueError(
+                    f"instr {i}: Ref output {o.out} out of range for "
+                    f"{queue[o.producer].op}")
+            needed.add((o.producer, o.out))
+            stage[i] = max(stage[i], stage[o.producer] + 1)
+        lead = ins.operands[0]
+        if isinstance(lead, Ref):
+            lanes[i] = lanes[lead.producer]
+        elif isinstance(lead, VerticalOperand):
+            lanes[i] = lead.lanes
+        else:
+            lanes[i] = int(np.asarray(lead).shape[-1])
+        for k, o in enumerate(ins.operands):
+            got = (lanes[o.producer] if isinstance(o, Ref)
+                   else o.lanes if isinstance(o, VerticalOperand)
+                   else None)
+            if got is not None and got != lanes[i]:
+                raise ValueError(
+                    f"instr {i}: vertical operand {k} carries {got} "
+                    f"lanes but the instruction has {lanes[i]}")
+    return lanes, stage, needed
+
+
 class Bank:
     """N concurrently-computing subarrays executing one command stream.
 
@@ -257,19 +375,24 @@ class Bank:
 
     def __init__(self, n_subarrays: int = 4, cfg: DramConfig = DDR4,
                  style: str = "mig", engine: str = "interp",
-                 fuse: bool = True, fuse_ratio: int = 32):
+                 fuse: bool = True, fuse_ratio: int = 32,
+                 packing: str = "ffd"):
         if engine not in ("interp", "bitplane", "pallas"):
             raise ValueError(f"unknown engine {engine!r}")
         if fuse_ratio < 1:
             raise ValueError("fuse_ratio must be >= 1")
+        if packing not in ("ffd", "greedy"):
+            raise ValueError(f"unknown packing {packing!r}")
         self.n_subarrays = n_subarrays
         self.cfg = cfg
         self.style = style
         self.engine = engine
         self.fuse = fuse
         self.fuse_ratio = fuse_ratio
+        self.packing = packing
         self.stats = BankStats(n_subarrays)
-        self._rr_next = 0     # round-robin allocation cursor
+        self._rr_next = 0     # round-robin allocation cursor (grouped path)
+        self._lane_load = np.zeros(n_subarrays, np.int64)  # fused-slot loads
 
     # -- core: one op, up to n_subarrays operand sets, one replay ----------
     def execute_batch(
@@ -369,32 +492,15 @@ class Bank:
             [(uprog, n, sid) for n, sid in zip(lanes, subarray_ids)],
             fused=False)
 
-    def _account_wave(self, entries, fused: bool):
-        """Charge one replay of ``entries`` = [(uprog, lanes, sid), ...].
-
-        A physical subarray holds cfg.columns_per_subarray lanes; a slot
-        wider than that serializes extra replays on its subarray (the
-        simulation still runs them in one vmapped state — only the cost
-        model quantizes).  Subarrays replay concurrently, so the wave's
-        wall-clock is its longest constituent's serialized invocations —
-        for a fused heterogeneous wave that is the longest μProgram, NOT
-        the per-group sum the grouped path pays.
-        """
-        st = self.stats
-        st.batches += 1
-        if fused:
-            st.fused_batches += 1
-        cap = self.cfg.columns_per_subarray
-        ups = [e[0] for e in entries]
-        invs = [max(1, -(-e[1] // cap)) for e in entries]
-        st.elements += sum(e[1] for e in entries)
-        st.aap += sum(up.n_aap * i for up, i in zip(ups, invs))
-        st.ap += sum(up.n_ap * i for up, i in zip(ups, invs))
-        st.latency_s += fused_replay_latency_s(ups, invs, self.cfg)
-        st.energy_nj += sum(
-            uprogram_energy_nj(up, self.cfg) * i for up, i in zip(ups, invs))
+    def _account_wave(self, entries, fused: bool) -> WaveCost:
+        """Charge one replay of ``entries`` = [(uprog, lanes, sid), ...]
+        at the :func:`wave_cost` price; returns the cost so the chip
+        accounting reuses it instead of recomputing."""
+        c = wave_cost(entries, self.cfg)
+        self.stats.add_wave(c, fused)
         for _, _, sid in entries:
-            st.subarray_programs[sid % self.n_subarrays] += 1
+            self.stats.subarray_programs[sid % self.n_subarrays] += 1
+        return c
 
     # -- ISA front-ends ----------------------------------------------------
     def bbop(self, name: str, *operands, n_bits: int,
@@ -436,67 +542,20 @@ class Bank:
         queue = list(queue)
         results: List = [None] * len(queue)
         if not queue:
-            return results
+            return results           # clean no-op: stats stay zeroed
+        t0 = time.perf_counter()
         plan = self._plan(queue)
         self.stats.bbops += len(queue)
         if self.fuse and self.engine == "interp":
             self._dispatch_fused(queue, plan, results)
         else:
             self._dispatch_grouped(queue, plan, results)
+        self.stats.wall_s += time.perf_counter() - t0
         return results
 
     # -- dispatch planning -------------------------------------------------
     def _plan(self, queue):
-        """Resolve the queue's dataflow: per-instruction lane counts,
-        dependency stages (a consumer runs strictly after its producers),
-        and the set of (producer, out) results needed vertically.
-
-        Every vertical operand (Ref or VerticalOperand) must carry
-        exactly the instruction's lane count: forwarded planes beyond the
-        producer's lanes are unspecified bits, so a lane-mismatched
-        forward has no meaning the grouped path could agree with —
-        rejected here rather than silently diverging.
-        """
-        n = len(queue)
-        lanes, stage, needed = [0] * n, [0] * n, set()
-        for i, ins in enumerate(queue):
-            for o in ins.operands:
-                if not isinstance(o, Ref):
-                    continue
-                if not 0 <= o.producer < i:
-                    raise ValueError(
-                        f"instr {i}: Ref producer {o.producer} must precede "
-                        "it in the queue")
-                pspec, _, _ = cached_table(
-                    queue[o.producer].op, queue[o.producer].n_bits, self.style)
-                if not 0 <= o.out < len(pspec.out_bits):
-                    raise ValueError(
-                        f"instr {i}: Ref output {o.out} out of range for "
-                        f"{queue[o.producer].op}")
-                needed.add((o.producer, o.out))
-                stage[i] = max(stage[i], stage[o.producer] + 1)
-            lead = ins.operands[0]
-            if isinstance(lead, Ref):
-                lanes[i] = lanes[lead.producer]
-            elif isinstance(lead, VerticalOperand):
-                lanes[i] = lead.lanes
-            else:
-                lanes[i] = int(np.asarray(lead).shape[-1])
-            for k, o in enumerate(ins.operands):
-                got = (lanes[o.producer] if isinstance(o, Ref)
-                       else o.lanes if isinstance(o, VerticalOperand)
-                       else None)
-                if got is not None and got != lanes[i]:
-                    raise ValueError(
-                        f"instr {i}: vertical operand {k} carries {got} "
-                        f"lanes but the instruction has {lanes[i]}")
-        return lanes, stage, needed
-
-    def plan_lanes(self, queue: Sequence[BbopInstr]) -> List[int]:
-        """Resolved per-instruction lane counts for a dispatch queue
-        (Ref/VerticalOperand operands included) — the single source of
-        truth :meth:`SimdramDevice.dispatch` accounting consumes."""
-        return self._plan(list(queue))[0]
+        return plan_queue(queue, self.style)
 
     def _empty_result(self, ins: BbopInstr):
         spec, _, _ = cached_table(ins.op, ins.n_bits, self.style)
@@ -540,8 +599,10 @@ class Bank:
                     self._harvest_wave(queue, pending, planes_cache,
                                        needed, results)
                     pending = None
+            t_pack = time.perf_counter()
             states, tables, entries = self._pack_wave(
                 queue, wave, lanes, planes_cache)
+            self.stats.pack_wall_s += time.perf_counter() - t_pack
             fut = run(jnp.asarray(states), jnp.asarray(tables))  # async
             self._account_wave(
                 [(e.uprog, e.lanes, e.sid) for e in entries],
@@ -562,8 +623,19 @@ class Bank:
         """Chunk instructions into fused waves: stages execute in order;
         within a stage, instructions sort by descending program size so
         heavy μPrograms fuse with heavy ones (a wave costs its longest
-        constituent), then fill up to ``n_subarrays`` slots while the
-        wave's bucketed command/row spans stay within ``fuse_ratio``."""
+        constituent), then pack up to ``n_subarrays`` slots per wave
+        while the wave's bucketed command/row spans stay within
+        ``fuse_ratio``.
+
+        ``packing="ffd"`` (default) is first-fit-decreasing bin packing:
+        every instruction joins the FIRST open wave with a free slot and
+        compatible buckets, so earlier (largest-head) waves fill up
+        instead of closing on the first misfit — the wave count, and
+        therefore the modeled latency sum, is never worse than the
+        greedy baseline (asserted on the hetero-mix benchmark).
+        ``packing="greedy"`` keeps the PR 2 behavior: one open wave,
+        closed as soon as an instruction doesn't fit.
+        """
 
         def buckets(i):
             _, uprog, table = cached_table(
@@ -574,30 +646,68 @@ class Bank:
         for s in sorted({stage[i] for i in active}):
             idxs = sorted((i for i in active if stage[i] == s),
                           key=lambda i: (-buckets(i)[0], -buckets(i)[1], i))
-            wave: List[int] = []
-            c_max = r_min = r_max = 0
-            for i in idxs:
-                c, r = buckets(i)
-                if wave:
-                    # sorted by cmds desc, so c_max is the wave head's;
-                    # the row span needs running min/max (rows do not
-                    # follow the command-count order)
-                    if (len(wave) == self.n_subarrays
-                            or c_max > c * self.fuse_ratio
-                            or max(r_max, r) > min(r_min, r)
-                            * self.fuse_ratio):
-                        waves.append(wave)
-                        wave = []
-                if not wave:
-                    c_max, r_min, r_max = c, r, r
-                else:
-                    r_min, r_max = min(r_min, r), max(r_max, r)
-                wave.append(i)
-            if wave:
-                waves.append(wave)
+            if self.packing == "ffd":
+                waves.extend(self._ffd_waves(idxs, buckets))
+            else:
+                waves.extend(self._greedy_waves(idxs, buckets))
         return waves
 
-    def _pack_wave(self, queue, wave, lanes, planes_cache):
+    def _ffd_waves(self, idxs, buckets) -> List[List[int]]:
+        open_: List[List[int]] = []
+        spans: List[List[int]] = []    # [c_min, c_max, r_min, r_max]
+        for i in idxs:
+            c, r = buckets(i)
+            for wave, sp in zip(open_, spans):
+                if (len(wave) < self.n_subarrays
+                        and max(sp[1], c) <= min(sp[0], c) * self.fuse_ratio
+                        and max(sp[3], r) <= min(sp[2], r) * self.fuse_ratio):
+                    wave.append(i)
+                    sp[0], sp[1] = min(sp[0], c), max(sp[1], c)
+                    sp[2], sp[3] = min(sp[2], r), max(sp[3], r)
+                    break
+            else:
+                open_.append([i])
+                spans.append([c, c, r, r])
+        return open_
+
+    def _greedy_waves(self, idxs, buckets) -> List[List[int]]:
+        waves: List[List[int]] = []
+        wave: List[int] = []
+        c_max = r_min = r_max = 0
+        for i in idxs:
+            c, r = buckets(i)
+            if wave:
+                # sorted by cmds desc, so c_max is the wave head's; the
+                # row span needs running min/max (rows do not follow the
+                # command-count order)
+                if (len(wave) == self.n_subarrays
+                        or c_max > c * self.fuse_ratio
+                        or max(r_max, r) > min(r_min, r)
+                        * self.fuse_ratio):
+                    waves.append(wave)
+                    wave = []
+            if not wave:
+                c_max, r_min, r_max = c, r, r
+            else:
+                r_min, r_max = min(r_min, r), max(r_max, r)
+            wave.append(i)
+        if wave:
+            waves.append(wave)
+        return waves
+
+    def _wave_dims(self, queue, wave, lanes) -> Tuple[int, int, int]:
+        """(n_rows, n_cmds, cols) one fused wave needs — the chip-level
+        dispatcher maxes these across banks so every bank's slab packs
+        into one stacked (n_banks, n_subarrays, ...) replay."""
+        metas = [cached_table(queue[i].op, queue[i].n_bits, self.style)
+                 for i in wave]
+        return (_round_up(max(m[1].n_rows_total for m in metas), ROW_BUCKET),
+                max(m[2].shape[0] for m in metas),
+                _round_up(max(lanes[i] for i in wave), 32))
+
+    def _pack_wave(self, queue, wave, lanes, planes_cache,
+                   n_rows: Optional[int] = None, n_cmds: Optional[int] = None,
+                   cols: Optional[int] = None):
         """Build the stacked (states, tables) arrays for one fused wave.
 
         Idle subarrays keep all-zero tables (pure NOPs) and zero states;
@@ -607,19 +717,34 @@ class Bank:
         ``VerticalOperand``) write their planes straight into the state —
         the skipped h2v conversions are credited to the stats at the
         :func:`repro.core.costmodel.forwarding_saving_s` price.
+
+        ``n_rows``/``n_cmds``/``cols`` override the wave's own dims with
+        larger ones (NOP rows / zero planes are inert) — the chip
+        dispatcher passes the max over all banks in a round.
+
+        Slots are assigned least-loaded-first: members sorted by
+        descending lane demand take the subarrays with the lightest
+        cumulative lane load (results never depend on slot choice; this
+        only balances the per-subarray load statistics).
         """
         metas = [cached_table(queue[i].op, queue[i].n_bits, self.style)
                  for i in wave]
-        n_rows = _round_up(
-            max(m[1].n_rows_total for m in metas), ROW_BUCKET)
-        n_cmds = max(m[2].shape[0] for m in metas)
-        cols = _round_up(max(lanes[i] for i in wave), 32)
+        own_rows, own_cmds, own_cols = self._wave_dims(queue, wave, lanes)
+        n_rows = max(n_rows or 0, own_rows)
+        n_cmds = max(n_cmds or 0, own_cmds)
+        cols = max(cols or 0, own_cols)
         words = cols // 32
         states = np.zeros((self.n_subarrays, n_rows, words), np.uint32)
         tables = np.zeros((self.n_subarrays, n_cmds, CMD_WIDTH), np.int32)
         entries: List[_Slot] = []
+        order = sorted(range(len(wave)), key=lambda j: -lanes[wave[j]])
+        free = list(np.argsort(self._lane_load, kind="stable"))
+        sids = [0] * len(wave)
+        for j in order:
+            sids[j] = int(free.pop(0))
         for j, (i, (spec, uprog, table)) in enumerate(zip(wave, metas)):
-            sid = (self._rr_next + j) % self.n_subarrays
+            sid = sids[j]
+            self._lane_load[sid] += lanes[i]
             ins = queue[i]
             horiz: List[Optional[np.ndarray]] = []
             vert: Dict[int, np.ndarray] = {}
@@ -649,7 +774,6 @@ class Bank:
             states[sid] = st
             tables[sid, : table.shape[0]] = table
             entries.append(_Slot(i, sid, spec, uprog, lanes[i]))
-        self._rr_next = (self._rr_next + len(wave)) % self.n_subarrays
         return states, tables, entries
 
     def _harvest_wave(self, queue, pending, planes_cache, needed, results):
@@ -658,7 +782,14 @@ class Bank:
         (``keep_vertical``, v2h skipped) or horizontal via
         :func:`read_outputs`."""
         entries, fut = pending
-        out = np.asarray(fut)
+        self._harvest_out(queue, entries, np.asarray(fut), planes_cache,
+                          needed, results)
+
+    def _harvest_out(self, queue, entries, out, planes_cache, needed,
+                     results):
+        """Harvest from an executed (n_subarrays, n_rows, n_words) state
+        array — split from :meth:`_harvest_wave` so the chip dispatcher
+        can harvest each bank's slab of a stacked chip replay."""
         for e in entries:
             ins = queue[e.qi]
             sub = out[e.sid]
@@ -740,7 +871,11 @@ class Bank:
         return vos[0] if len(vos) == 1 else tuple(vos)
 
     def reset_stats(self):
+        """Zero the stats AND both allocation cursors (fused lane loads,
+        grouped round-robin) so re-runs allocate deterministically."""
         self.stats = BankStats(self.n_subarrays)
+        self._lane_load = np.zeros(self.n_subarrays, np.int64)
+        self._rr_next = 0
 
 
 def _adapt_planes(planes: np.ndarray, n_rows: int, n_words: int,

@@ -1,0 +1,399 @@
+"""Chip-level partitioned execution: N banks of M subarrays each.
+
+The end-to-end SIMDRAM paper's control unit transparently allocates work
+across *banks* — the 1/4/16-bank sweep that produces the headline 88×
+CPU throughput runs one compute-enabled subarray per bank in lockstep.
+This module reproduces that layer on top of the PR 2 fused bank engine:
+
+  - a :class:`SimdramChip` owns ``n_banks`` :class:`~repro.core.bank.Bank`
+    instances and stacks their wave slabs into one
+    ``(n_banks, n_subarrays, n_rows, n_words)`` array — one *chip round*
+    replays every bank's fused wave in a single
+    :func:`repro.core.control_unit.chip_replay` call, ``shard_map``-ed
+    over the ``data`` mesh axis when the host has multiple devices
+    (:mod:`repro.distributed.pum`), vmapped over banks otherwise;
+  - :meth:`SimdramChip.dispatch` is the partitioned front-end: the queue's
+    Ref-connected producer→consumer chains are indivisible units (operand
+    forwarding stays bank-local — planes never cross banks), and units
+    are bin-packed onto banks longest-processing-time-first so modeled
+    per-bank loads balance; within each bank the PR 3 first-fit-decreasing
+    wave packer takes over;
+  - :class:`ChipStats` extends :class:`~repro.core.bank.BankStats` with
+    per-bank utilization, cross-bank imbalance, and the modeled-vs-
+    measured latency pair (``latency_s`` vs ``wall_s``/``pack_wall_s``):
+    a chip round models the *slowest bank's* wave — banks replay
+    concurrently — while the wall-clock fields record what this host
+    actually paid to pack and drain.
+
+Bit-exactness: chip dispatch == sequential per-bank ``Bank.dispatch`` ==
+the grouped baseline, property-tested in tests/test_chip.py and gated in
+benchmarks/chip_scaling.py across all 16 ops in both MIG and AIG styles.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .bank import Bank, BankStats, BbopInstr, Ref, _Slot, plan_queue
+from .control_unit import CMD_WIDTH
+from .costmodel import instr_cost_s
+from .timing import DDR4, DramConfig, chip_round_latency_s
+
+
+@dataclass
+class ChipStats(BankStats):
+    """Aggregate cost model for everything a :class:`SimdramChip` ran.
+
+    Inherited fields aggregate over all banks (``n_subarrays`` is the
+    chip TOTAL, ``subarray_programs`` is flattened bank-major), with two
+    semantic refinements: ``latency_s`` models banks replaying
+    *concurrently* — each round charges its slowest bank's wave, which
+    itself charges its longest constituent μProgram — and ``batches``
+    counts per-bank waves while :attr:`rounds` counts stacked chip
+    replays (one device round-trip each).  ``wall_s``/``pack_wall_s``
+    are the measured host-side counterparts of ``latency_s`` — the
+    modeled-vs-measured calibration pair benchmarks/chip_scaling.py
+    tracks.
+    """
+
+    n_banks: int = 1
+    rounds: int = 0                              # stacked chip replays
+    bank_busy_s: np.ndarray = field(default=None)  # type: ignore
+
+    def __post_init__(self):
+        super().__post_init__()
+        if self.bank_busy_s is None:
+            self.bank_busy_s = np.zeros(self.n_banks)
+
+    @property
+    def bank_programs(self) -> np.ndarray:
+        """Instructions executed per bank (the scheduler's balance)."""
+        return self.subarray_programs.reshape(self.n_banks, -1).sum(axis=1)
+
+    @property
+    def utilization(self) -> np.ndarray:
+        """Per-bank busy fraction of the chip's modeled wall-clock."""
+        if not self.latency_s:
+            return np.zeros(self.n_banks)
+        return self.bank_busy_s / self.latency_s
+
+    @property
+    def imbalance(self) -> float:
+        """Slowest bank's busy time over the mean — 1.0 is a perfectly
+        balanced schedule, n_banks is all work on one bank."""
+        if not self.bank_busy_s.any():
+            return 0.0
+        return float(self.bank_busy_s.max() / self.bank_busy_s.mean())
+
+    def as_dict(self) -> Dict[str, float]:
+        d = super().as_dict()
+        d.update({
+            "n_banks": self.n_banks,
+            "rounds": self.rounds,
+            "bank_busy_s": [float(x) for x in self.bank_busy_s],
+            "bank_programs": [int(x) for x in self.bank_programs],
+            "utilization": [float(x) for x in self.utilization],
+            "imbalance": self.imbalance,
+        })
+        return d
+
+
+def partition_queue(queue, active, lanes, n_banks: int,
+                    cfg: DramConfig = DDR4, style: str = "mig"
+                    ) -> Dict[int, int]:
+    """Assign instructions to banks: Ref-connected components are
+    indivisible (forwarded planes never cross banks), weighted by
+    :func:`repro.core.costmodel.instr_cost_s`, and bin-packed
+    longest-processing-time-first onto the least-loaded bank."""
+    parent = {i: i for i in active}
+
+    def find(x):
+        while parent[x] != x:
+            parent[x] = parent[parent[x]]
+            x = parent[x]
+        return x
+
+    act = set(active)
+    for i in active:
+        for o in queue[i].operands:
+            if isinstance(o, Ref) and o.producer in act:
+                parent[find(i)] = find(o.producer)
+    comps: Dict[int, List[int]] = {}
+    for i in active:
+        comps.setdefault(find(i), []).append(i)
+    cost = {
+        root: sum(instr_cost_s(queue[i].op, queue[i].n_bits, lanes[i],
+                               cfg, style) for i in members)
+        for root, members in comps.items()
+    }
+    load = np.zeros(n_banks)
+    bank_of: Dict[int, int] = {}
+    for root, members in sorted(
+            comps.items(), key=lambda kv: (-cost[kv[0]], kv[0])):
+        b = int(np.argmin(load))
+        load[b] += cost[root]
+        for i in members:
+            bank_of[i] = b
+    return bank_of
+
+
+def sequential_dispatch(queue: Sequence[BbopInstr], n_banks: int = 4,
+                        n_subarrays: int = 4, cfg: DramConfig = DDR4,
+                        style: str = "mig", fuse: bool = True,
+                        packing: str = "ffd"):
+    """The no-chip baseline: the *same* bank partition a
+    :class:`SimdramChip` would use, executed one bank at a time on
+    separate :class:`~repro.core.bank.Bank` instances.
+
+    Returns ``(results, banks)`` — results in queue order (bit-exactness
+    reference for chip dispatch), and the per-bank ``Bank`` objects whose
+    summed ``stats.latency_s`` is the serialized cost the chip's
+    concurrent-banks model (max per round) improves on.
+    """
+    queue = list(queue)
+    results: List = [None] * len(queue)
+    banks = [Bank(n_subarrays=n_subarrays, cfg=cfg, style=style,
+                  fuse=fuse, packing=packing) for _ in range(n_banks)]
+    if not queue:
+        return results, banks
+    lanes, _, _ = plan_queue(queue, style)
+    active = [i for i in range(len(queue)) if lanes[i] > 0]
+    for i in range(len(queue)):
+        if lanes[i] == 0:
+            results[i] = banks[0]._empty_result(queue[i])
+    bank_of = partition_queue(queue, active, lanes, n_banks, cfg, style)
+    for b, bank in enumerate(banks):
+        idxs = [i for i in active if bank_of[i] == b]
+        if not idxs:
+            continue
+        remap = {qi: j for j, qi in enumerate(idxs)}
+        sub = [
+            dataclasses.replace(
+                queue[qi],
+                operands=tuple(
+                    Ref(remap[o.producer], o.out) if isinstance(o, Ref)
+                    else o
+                    for o in queue[qi].operands))
+            for qi in idxs
+        ]
+        for qi, out in zip(idxs, bank.dispatch(sub)):
+            results[qi] = out
+    return results, banks
+
+
+class SimdramChip:
+    """``n_banks`` banks × ``n_subarrays`` subarrays, one stacked replay.
+
+    All banks run the fused ``interp`` engine (heterogeneous waves,
+    vertical operand forwarding); the chip stacks one wave per bank into
+    each round.  ``mesh``/``use_shard_map`` control the executor (see
+    :func:`repro.distributed.pum.make_chip_executor`): by default bank
+    slabs shard over the ``data`` mesh axis whenever multiple devices
+    fit, and fall back to a single-device vmap over banks otherwise —
+    the two are bit-exact.
+    """
+
+    def __init__(self, n_banks: int = 4, n_subarrays: int = 4,
+                 cfg: DramConfig = DDR4, style: str = "mig",
+                 fuse_ratio: int = 32, packing: str = "ffd",
+                 mesh=None, use_shard_map: Optional[bool] = None):
+        if n_banks < 1:
+            raise ValueError("n_banks must be >= 1")
+        from repro.distributed.pum import make_chip_executor
+        self.n_banks = n_banks
+        self.n_subarrays = n_subarrays
+        self.cfg = cfg
+        self.style = style
+        self.banks = [
+            Bank(n_subarrays=n_subarrays, cfg=cfg, style=style,
+                 engine="interp", fuse=True, fuse_ratio=fuse_ratio,
+                 packing=packing)
+            for _ in range(n_banks)
+        ]
+        self.executor = make_chip_executor(n_banks, mesh=mesh,
+                                           use_shard_map=use_shard_map)
+        self.stats = ChipStats(n_subarrays=n_banks * n_subarrays,
+                               n_banks=n_banks)
+
+    # -- scheduling --------------------------------------------------------
+    def _partition(self, queue, active, lanes) -> Dict[int, int]:
+        return partition_queue(queue, active, lanes, self.n_banks,
+                               self.cfg, self.style)
+
+    # -- dispatch ----------------------------------------------------------
+    def dispatch(self, queue: Sequence[BbopInstr]) -> List:
+        """Drain a bbop queue across all banks; results come back in
+        queue order, costs accumulate in :attr:`stats` (chip-level) and
+        each bank's own stats.  Host packing of round *k+1* overlaps the
+        device replay of round *k*, exactly like the bank dispatcher."""
+        queue = list(queue)
+        results: List = [None] * len(queue)
+        if not queue:
+            return results           # clean no-op: stats stay zeroed
+        t0 = time.perf_counter()
+        self.stats.bbops += len(queue)
+        lanes, stage, needed = plan_queue(queue, self.style)
+        planes_cache: Dict[Tuple[int, int], np.ndarray] = {}
+        active = []
+        for i in range(len(queue)):
+            if lanes[i] == 0:
+                self.banks[0]._skip_zero_lane(
+                    queue, i, needed, planes_cache, results)
+            else:
+                active.append(i)
+        if not active:               # all-zero-lane queue: no replay
+            self.stats.wall_s += time.perf_counter() - t0
+            return results
+
+        bank_of = self._partition(queue, active, lanes)
+        for i in active:
+            self.banks[bank_of[i]].stats.bbops += 1
+        waves_by_bank = [
+            self.banks[b]._build_waves(
+                queue, [i for i in active if bank_of[i] == b], stage)
+            for b in range(self.n_banks)
+        ]
+        n_rounds = max(len(w) for w in waves_by_bank)
+        pending: Optional[Tuple[List[Tuple[int, List[_Slot]]], jnp.ndarray]] = None
+        for r in range(n_rounds):
+            round_waves = [(b, waves_by_bank[b][r])
+                           for b in range(self.n_banks)
+                           if r < len(waves_by_bank[b])]
+            if pending is not None:
+                # stage barrier: a round forwarding planes from the
+                # still-in-flight round drains it before packing
+                in_flight = {e.qi for _, ents in pending[0] for e in ents}
+                if any(isinstance(o, Ref) and o.producer in in_flight
+                       for _, wave in round_waves
+                       for i in wave for o in queue[i].operands):
+                    self._harvest_round(queue, pending, planes_cache,
+                                        needed, results)
+                    pending = None
+            entries_by_bank, fut = self._pack_round(
+                queue, round_waves, lanes, planes_cache)
+            self._account_round(queue, entries_by_bank)
+            if pending is not None:
+                # double buffering: round k harvests only after round
+                # k+1 was packed and submitted
+                self._harvest_round(queue, pending, planes_cache, needed,
+                                    results)
+            pending = (entries_by_bank, fut)
+        if pending is not None:
+            jax.block_until_ready(pending[1])     # drain the pipeline
+            self._harvest_round(queue, pending, planes_cache, needed, results)
+        self.stats.wall_s += time.perf_counter() - t0
+        return results
+
+    def _pack_round(self, queue, round_waves, lanes, planes_cache):
+        """Stack one wave per participating bank into the chip arrays.
+
+        Every bank's slab is padded to the round's max (rows, cmds, cols)
+        — NOP commands and zero rows are inert — so a single executor
+        call replays all banks; idle banks stay all-NOP."""
+        t_pack = time.perf_counter()
+        dims = [self.banks[b]._wave_dims(queue, wave, lanes)
+                for b, wave in round_waves]
+        n_rows = max(d[0] for d in dims)
+        n_cmds = max(d[1] for d in dims)
+        cols = max(d[2] for d in dims)
+        states = np.zeros(
+            (self.n_banks, self.n_subarrays, n_rows, cols // 32), np.uint32)
+        tables = np.zeros(
+            (self.n_banks, self.n_subarrays, n_cmds, CMD_WIDTH), np.int32)
+        entries_by_bank: List[Tuple[int, List[_Slot]]] = []
+        for b, wave in round_waves:
+            bank = self.banks[b]
+            skips0 = bank.stats.transpositions_skipped
+            saved0 = bank.stats.transpose_s_saved
+            st, tb, entries = bank._pack_wave(
+                queue, wave, lanes, planes_cache,
+                n_rows=n_rows, n_cmds=n_cmds, cols=cols)
+            self.stats.transpositions_skipped += (
+                bank.stats.transpositions_skipped - skips0)
+            self.stats.transpose_s_saved += (
+                bank.stats.transpose_s_saved - saved0)
+            states[b], tables[b] = st, tb
+            entries_by_bank.append((b, entries))
+        pack_s = time.perf_counter() - t_pack
+        self.stats.pack_wall_s += pack_s
+        for b, _ in round_waves:
+            self.banks[b].stats.pack_wall_s += pack_s / len(round_waves)
+        fut = self.executor.run(jnp.asarray(states), jnp.asarray(tables))
+        return entries_by_bank, fut
+
+    def _account_round(self, queue, entries_by_bank):
+        """Charge one chip round: each bank's wave accounts on the bank
+        (latency there = that wave), while the chip charges the round's
+        max across banks — banks replay concurrently.  All costs come
+        from :func:`repro.core.bank.wave_cost`, the same single source
+        the bank-level stats use (the calibration pair must never
+        desynchronize)."""
+        st = self.stats
+        st.rounds += 1
+        bank_waves = []
+        for b, entries in entries_by_bank:
+            idxs = [e.qi for e in entries]
+            fused = len({(queue[i].op, queue[i].n_bits, queue[i].signed_out)
+                         for i in idxs}) > 1
+            c = self.banks[b]._account_wave(
+                [(e.uprog, e.lanes, e.sid) for e in entries], fused=fused)
+            st.add_wave(c, fused, concurrent=True)
+            st.bank_busy_s[b] += c.latency_s
+            for e in entries:
+                st.subarray_programs[b * self.n_subarrays + e.sid] += 1
+            bank_waves.append((c.uprogs, c.invocations))
+        st.latency_s += chip_round_latency_s(bank_waves, self.cfg)
+
+    def _harvest_round(self, queue, pending, planes_cache, needed, results):
+        """Materialize one completed chip round, bank slab by bank slab
+        (forwarded planes published per bank — chains are bank-local)."""
+        entries_by_bank, fut = pending
+        out = np.asarray(fut)
+        for b, entries in entries_by_bank:
+            bank = self.banks[b]
+            skips0 = bank.stats.transpositions_skipped
+            saved0 = bank.stats.transpose_s_saved
+            bank._harvest_out(queue, entries, out[b], planes_cache, needed,
+                              results)
+            self.stats.transpositions_skipped += (
+                bank.stats.transpositions_skipped - skips0)
+            self.stats.transpose_s_saved += (
+                bank.stats.transpose_s_saved - saved0)
+
+    # -- ISA front-end -----------------------------------------------------
+    def bbop(self, name: str, *operands, n_bits: int,
+             signed_out: bool = False):
+        """One bbop whose lanes span the whole chip: elements split into
+        contiguous chunks, one per (bank, subarray) slot, and drain in
+        (ideally) one chip round."""
+        arrs = [np.asarray(o) for o in operands]
+        n = arrs[0].shape[-1]
+        if n == 0:
+            return self.dispatch(
+                [BbopInstr(name, tuple(arrs), n_bits,
+                           signed_out=signed_out)])[0]
+        slots = self.n_banks * self.n_subarrays
+        per = max(1, -(-n // slots))
+        queue = [
+            BbopInstr(name, tuple(a[..., s: s + per] for a in arrs), n_bits,
+                      signed_out=signed_out)
+            for s in range(0, n, per)
+        ]
+        results = self.dispatch(queue)
+        if isinstance(results[0], tuple):
+            return tuple(np.concatenate([r[i] for r in results], axis=-1)
+                         for i in range(len(results[0])))
+        return np.concatenate(results, axis=-1)
+
+    def reset_stats(self):
+        self.stats = ChipStats(n_subarrays=self.n_banks * self.n_subarrays,
+                               n_banks=self.n_banks)
+        for bank in self.banks:
+            bank.reset_stats()

@@ -243,3 +243,27 @@ def hetero_batched_interpreter():
         return jax.vmap(one)(states, tables)
 
     return run
+
+
+def chip_replay(states: jnp.ndarray, tables: jnp.ndarray) -> jnp.ndarray:
+    """Un-jitted chip-level replay body: (n_banks, n_subarrays, n_rows,
+    n_words) states × (n_banks, n_subarrays, n_cmds, 13) tables — one
+    more vmapped axis over :func:`hetero_batched_interpreter`'s.  The
+    bank axis is embarrassingly parallel (banks share nothing), which is
+    what lets :mod:`repro.distributed.pum` ``shard_map`` it over the
+    ``data`` mesh axis so bank slabs execute on different devices."""
+
+    def one(state, table):
+        out, _ = jax.lax.scan(_step, state, table)
+        return out
+
+    return jax.vmap(jax.vmap(one))(states, tables)
+
+
+@functools.lru_cache(maxsize=1)
+def chip_batched_interpreter():
+    """Jitted single-device :func:`chip_replay` — the vmap-over-banks
+    fallback the chip dispatcher uses when the host has one device (or
+    the bank count doesn't divide the mesh).  Bit-exact against the
+    sharded executor: both run the same scan per (bank, subarray)."""
+    return jax.jit(chip_replay)

@@ -51,6 +51,20 @@ def forwarding_saving_s(
     return transpose_cost_s(n_elems, n_bits, cfg)
 
 
+def instr_cost_s(
+    op: str, n_bits: int, lanes: int, cfg: DramConfig = DDR4,
+    style: str = "mig",
+) -> float:
+    """Modeled seconds one queued instruction occupies its subarray slot:
+    serialized invocations (lanes beyond the column capacity) × μProgram
+    latency.  This is the bin-packing weight the chip-level scheduler
+    (:meth:`repro.core.chip.SimdramChip.dispatch`) balances across banks
+    — and the lane-load tiebreaker inside a bank's wave packing."""
+    _, uprog = compile_op(op, n_bits, style)
+    invs = max(1, -(-lanes // cfg.columns_per_subarray))
+    return invs * uprogram_latency_s(uprog, cfg)
+
+
 def decide(
     op: str,
     n_bits: int,

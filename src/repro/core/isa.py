@@ -13,6 +13,10 @@ equivalent: a registry of operations, a per-(op, width) compilation cache
   backend="bank"       bank-level batched engine: lanes split across all
                        compute subarrays, one vmapped replay
                        (see repro.core.bank)
+  backend="chip"       chip-level partitioned engine: lanes split across
+                       n_banks × subarrays_per_bank slots, one stacked
+                       replay per round, shard_map-ed over the data mesh
+                       axis on multi-device hosts (see repro.core.chip)
 
 All backends implement identical semantics; tests cross-check them.
 :class:`SimdramDevice` carries the DRAM config and accumulates per-call
@@ -98,6 +102,7 @@ class SimdramDevice:
     style: str = "mig"
     calls: List[CallStats] = field(default_factory=list)
     _bank: Optional[object] = field(default=None, repr=False)
+    _chip: Optional[object] = field(default=None, repr=False)
 
     def bank(self):
         """The device's bank-level engine (one compute subarray per bank,
@@ -109,8 +114,23 @@ class SimdramDevice:
                 cfg=self.cfg, style=self.style)
         return self._bank
 
+    def chip(self):
+        """The device's chip-level engine: ``cfg.n_banks`` banks of
+        ``cfg.subarrays_per_bank`` subarrays, bank slabs sharded over the
+        ``data`` mesh axis on multi-device hosts; created lazily."""
+        if self._chip is None:
+            from .chip import SimdramChip
+            self._chip = SimdramChip(
+                n_banks=self.cfg.n_banks,
+                n_subarrays=self.cfg.subarrays_per_bank,
+                cfg=self.cfg, style=self.style)
+        return self._chip
+
     def _account(self, name: str, n_bits: int, uprog: UProgram, elements: int):
-        n_invocations = int(np.ceil(elements / self.cfg.simd_lanes)) or 1
+        # a zero-element call executes no replay (the engines skip it),
+        # so it must not bill an invocation either
+        n_invocations = (int(np.ceil(elements / self.cfg.simd_lanes)) or 1
+                         if elements else 0)
         per_sub = self.cfg.n_banks * self.cfg.subarrays_per_bank
         self.calls.append(
             CallStats(
@@ -159,6 +179,10 @@ class SimdramDevice:
             return self.bank().bbop(
                 name, *operands, n_bits=n_bits, signed_out=signed_out)
 
+        if self.backend == "chip":
+            return self.chip().bbop(
+                name, *operands, n_bits=n_bits, signed_out=signed_out)
+
         # bitplane / pallas: fused circuit execution (pallas swaps the
         # elementwise executor for the tiled kernel in repro.kernels.ops)
         if self.backend == "pallas":
@@ -179,13 +203,16 @@ class SimdramDevice:
 
     def dispatch(self, queue) -> List:
         """Drain a :class:`repro.core.bank.BbopInstr` queue through the
-        bank engine's fused dataflow dispatcher (heterogeneous ops fuse
-        into one replay per wave; ``Ref`` operands forward vertically).
-        Per-instruction costs are appended to :attr:`calls`."""
+        fused dataflow dispatcher (heterogeneous ops fuse into one
+        replay per wave; ``Ref`` operands forward vertically) — the
+        chip-level partitioned engine when ``backend="chip"``, the bank
+        engine otherwise.  Per-instruction costs are appended to
+        :attr:`calls`."""
+        from .bank import plan_queue
         queue = list(queue)     # tolerate iterator queues
-        bank = self.bank()
-        results = bank.dispatch(queue)
-        for ins, n in zip(queue, bank.plan_lanes(queue)):
+        engine = self.chip() if self.backend == "chip" else self.bank()
+        results = engine.dispatch(queue)
+        for ins, n in zip(queue, plan_queue(queue, self.style)[0]):
             _, uprog = compile_op(ins.op, ins.n_bits, self.style)
             self._account(ins.op, ins.n_bits, uprog, n)
         return results

@@ -101,6 +101,32 @@ def bank_throughput_gops(
     return lanes / uprogram_latency_s(up, cfg) / 1e9
 
 
+# --- chip-level parallel replay (repro.core.chip engine) ---------------------
+
+def chip_round_latency_s(bank_waves, cfg: DramConfig = DDR4) -> float:
+    """Wall-clock of ONE chip round: every bank replays its own fused
+    wave concurrently, so the round costs the *slowest bank's* wave —
+    which itself costs its longest constituent μProgram
+    (:func:`fused_replay_latency_s`).  ``bank_waves`` is a list of
+    (uprogs, invocations) pairs, one per participating bank."""
+    if not bank_waves:
+        return 0.0
+    return max(fused_replay_latency_s(ups, invs, cfg)
+               for ups, invs in bank_waves)
+
+
+def chip_throughput_gops(
+    up: UProgram, cfg: DramConfig = DDR4, n_banks: int = 1,
+    n_subarrays: int = 1,
+) -> float:
+    """Throughput of a chip with ``n_banks`` banks of ``n_subarrays``
+    concurrently-computing subarrays each — the paper's 1/4/16-bank
+    sweep with the bank-internal parallelism knob multiplied in.  Linear
+    in both factors: banks share nothing, subarrays share only the
+    command broadcast."""
+    return bank_throughput_gops(up, cfg, n_subarrays=n_banks * n_subarrays)
+
+
 # --- CPU / GPU analytic comparison points ------------------------------------
 # Bulk bitwise/elementwise kernels on CPU/GPU are DRAM-bandwidth-bound; the
 # paper's baselines follow the same logic.  An n-bit binary op streams

@@ -1,0 +1,106 @@
+"""Multi-device PuM execution: the chip's bank axis on the ``data`` mesh.
+
+SIMDRAM's headline scaling knob is bank count — 16 banks replaying one
+broadcast command stream reach 88× CPU throughput — and banks share
+*nothing*: each owns its subarray states and (since PR 2) its own stacked
+command tables.  That makes the chip-level replay embarrassingly parallel
+along the bank axis, so the stacked
+
+    states: (n_banks, n_subarrays, n_rows, n_words)
+    tables: (n_banks, n_subarrays, n_cmds, 13)
+
+arrays ``shard_map`` over a 1-D ``("data",)`` mesh: every device replays
+its local bank slabs with exactly the same scan interpreter the
+single-device path vmaps (:func:`repro.core.control_unit.chip_replay`),
+so the two executors are bit-exact by construction — the paper's
+multi-bank parallelism mapped onto real accelerator parallelism.
+
+Divisibility follows :mod:`repro.distributed.sharding`'s ``fit_spec``
+discipline: if the bank count doesn't divide the device count the spec
+degrades to replication and the executor falls back to the jitted
+vmap-over-banks path (also used on single-device hosts).
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Callable, Optional, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core.control_unit import chip_batched_interpreter, chip_replay
+
+from .sharding import fit_spec
+
+
+def pum_mesh(n_banks: int, devices: Optional[Sequence] = None) -> Optional[Mesh]:
+    """1-D ``("data",)`` mesh over the largest device prefix whose size
+    divides ``n_banks`` (equal bank slabs per device).  ``None`` when
+    only a single device would participate — the caller should use the
+    vmap fallback instead of paying shard_map overhead for nothing."""
+    devs = list(devices if devices is not None else jax.devices())
+    size = max((d for d in range(1, len(devs) + 1) if n_banks % d == 0),
+               default=1)
+    if size <= 1:
+        return None
+    return Mesh(np.array(devs[:size]), ("data",))
+
+
+@dataclass(frozen=True)
+class ChipExecutor:
+    """A compiled chip-replay callable plus how it partitions.
+
+    ``run(states, tables)`` returns the executed states asynchronously
+    (a jitted call either way); ``sharded`` tells whether bank slabs
+    execute on different devices (shard_map) or one device vmaps them.
+    """
+
+    run: Callable
+    mesh: Optional[Mesh]
+    sharded: bool
+
+
+def make_chip_executor(
+    n_banks: int,
+    mesh: Optional[Mesh] = None,
+    use_shard_map: Optional[bool] = None,
+) -> ChipExecutor:
+    """Build the chip's replay executor.
+
+    ``use_shard_map``: ``None`` auto-selects (shard_map whenever a
+    multi-device mesh fits the bank axis), ``True`` requires it (raises
+    if no mesh fits — the CI forced-device path uses this to guarantee
+    the partitioned executor is actually exercised), ``False`` forces
+    the single-device vmap fallback (the bit-exactness reference).
+    """
+    if use_shard_map is False:
+        return ChipExecutor(chip_batched_interpreter(), None, False)
+    if mesh is None:
+        mesh = pum_mesh(n_banks)
+    has_data = mesh is not None and "data" in tuple(mesh.axis_names)
+    spec = fit_spec(mesh, (n_banks,), "data") if has_data else P(None)
+    fits = has_data and spec[0] == "data" and mesh.shape["data"] > 1
+    if not fits:
+        if use_shard_map:
+            raise ValueError(
+                f"shard_map requested but no multi-device mesh fits "
+                f"n_banks={n_banks} (devices={jax.device_count()})")
+        return ChipExecutor(chip_batched_interpreter(), mesh, False)
+    return ChipExecutor(_sharded_executor(mesh), mesh, True)
+
+
+@functools.lru_cache(maxsize=None)
+def _sharded_executor(mesh: Mesh) -> Callable:
+    """One jitted shard_map executor per mesh — every chip on the same
+    mesh shares it, so jit's shape cache (and the compiled executables)
+    amortize across chips exactly like the vmap fallback's lru_cache."""
+    from jax.experimental.shard_map import shard_map
+
+    bank_spec = P("data", None, None, None)
+    return jax.jit(shard_map(
+        chip_replay, mesh=mesh,
+        in_specs=(bank_spec, bank_spec), out_specs=bank_spec,
+        check_rep=False))

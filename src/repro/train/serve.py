@@ -6,6 +6,13 @@ cells.  ``Server`` is a minimal continuous-batching loop (host-side) used
 by examples/serve_llm.py: fixed batch slots, per-slot positions, greedy
 sampling — enough to demonstrate production serving semantics (slot
 reuse, cache reset, EOS handling) end-to-end on CPU.
+
+``PumServeOffload`` is the serving-path PuM hook: per decode step, every
+batch slot's logits quantize to the SIMDRAM grid and a chain of
+elementwise bbop stages drains through one
+:meth:`repro.core.chip.SimdramChip.dispatch` call — batch traffic is the
+chip scheduler's load: one Ref-linked chain per slot, bin-packed across
+banks, stages forwarded vertically within a bank.
 """
 
 from __future__ import annotations
@@ -45,6 +52,124 @@ def make_serve_step(cfg: ModelConfig, unroll: bool = False):
     return serve_step
 
 
+@dataclasses.dataclass(frozen=True)
+class PumStage:
+    """One quantized elementwise serving stage: a bbop, optionally with a
+    broadcast integer constant as the second operand (``const=None`` for
+    unary ops like ``relu``)."""
+
+    op: str
+    const: Optional[int] = None
+
+
+class PumServeOffload:
+    """Routes quantized elementwise logit stages through a SimdramChip.
+
+    Each call takes one decode step's ``(batch, vocab)`` logits,
+    quantizes every row to the unsigned ``n_bits`` grid (per-row affine
+    scale), queues one Ref-linked chain of ``stages`` per row, drains
+    the whole batch through a single ``chip.dispatch`` (the chip's
+    bin-packing scheduler spreads rows across banks; intermediates stay
+    vertical within a bank), and dequantizes back.
+
+    Rows whose stage chain turns out to be a no-op on the quantized grid
+    pass the ORIGINAL float logits through unchanged (lossless identity
+    — quantization resolution must not perturb a pipeline that computed
+    nothing).  The default stage pipeline — clamp to the grid via
+    ``min``/``max`` with the grid bounds — is such a no-op, so greedy
+    decoding is provably unchanged while the full chip stack runs under
+    real batch traffic.  Stages that DO change values (e.g.
+    ``PumStage("relu")``) return the dequantized result, which carries
+    the n-bit grid's resolution: logits closer than one quantization
+    step can tie-break differently from the float pipeline.
+    ``reference()`` is the numpy oracle of the same pipeline, used by
+    tests to pin the offload bit-exactly.
+    """
+
+    def __init__(self, chip=None, stages: Optional[Tuple[PumStage, ...]] = None,
+                 n_bits: int = 8):
+        if chip is None:
+            from repro.core.chip import SimdramChip
+            chip = SimdramChip(n_banks=4, n_subarrays=2)
+        self.chip = chip
+        self.n_bits = n_bits
+        hi = (1 << n_bits) - 1
+        self.stages = tuple(stages) if stages is not None else (
+            PumStage("min", hi), PumStage("max", 0))
+        if not self.stages:
+            raise ValueError("PumServeOffload needs at least one stage")
+        from repro.core.ops_library import get_op
+        for stage in self.stages:
+            spec = get_op(stage.op, n_bits)
+            if len(spec.out_bits) != 1:
+                raise ValueError(
+                    f"stage op {stage.op!r} has {len(spec.out_bits)} "
+                    "outputs; logit stages must be single-output")
+            want_operands = 1 if stage.const is None else 2
+            if spec.n_operands != want_operands:
+                raise ValueError(
+                    f"stage op {stage.op!r} takes {spec.n_operands} "
+                    f"operands but the stage supplies {want_operands} "
+                    "(set/unset const)")
+
+    def _quantize(self, x: np.ndarray):
+        lo = x.min(axis=-1, keepdims=True)
+        scale = (x.max(axis=-1, keepdims=True) - lo) / ((1 << self.n_bits) - 1)
+        scale = np.where(scale <= 0, 1.0, scale)
+        q = np.rint((x - lo) / scale).astype(np.uint64)
+        return q, lo, scale
+
+    def _chain(self, row: np.ndarray, queue: list) -> int:
+        """Append one row's stage chain to the queue; return its head."""
+        from repro.core.bank import BbopInstr, Ref
+        prev = None
+        for stage in self.stages:
+            lead = row if prev is None else Ref(prev)
+            operands = (lead,) if stage.const is None else (
+                lead, np.full(row.shape[-1], stage.const, np.uint64))
+            queue.append(BbopInstr(stage.op, operands, self.n_bits))
+            prev = len(queue) - 1
+        return prev
+
+    def _dequantize(self, x, q, y, lo, scale) -> np.ndarray:
+        """Per row: the original logits if the stages were a grid no-op
+        (lossless identity), else the dequantized stage output."""
+        noop = (y == q).all(axis=-1, keepdims=True)
+        deq = (lo + scale * y.astype(np.float64)).astype(np.float32)
+        return np.where(noop, x, deq)
+
+    def __call__(self, logits) -> np.ndarray:
+        x = np.asarray(logits, np.float32)
+        if x.size == 0:
+            return x             # no slots / no vocab: nothing to offload
+        q, lo, scale = self._quantize(x)
+        queue: list = []
+        heads = [self._chain(q[b], queue) for b in range(q.shape[0])]
+        out = self.chip.dispatch(queue)
+        y = np.stack([np.asarray(out[h]).astype(np.uint64)
+                      & ((1 << self.n_bits) - 1) for h in heads])
+        return self._dequantize(x, q, y, lo, scale)
+
+    def reference(self, logits) -> np.ndarray:
+        """Numpy oracle of the exact same quantize→stages→dequantize
+        pipeline (no PuM) — what :meth:`__call__` must match bit-exactly."""
+        from repro.core.ops_library import get_op
+        x = np.asarray(logits, np.float32)
+        if x.size == 0:
+            return x
+        q, lo, scale = self._quantize(x)
+        rows = []
+        for b in range(q.shape[0]):
+            v = q[b].astype(np.uint64)
+            for stage in self.stages:
+                args = (v,) if stage.const is None else (
+                    v, np.full(v.shape[-1], stage.const, np.uint64))
+                v = get_op(stage.op, self.n_bits).oracle(*args)[0]
+                v = v.astype(np.uint64) & ((1 << self.n_bits) - 1)
+            rows.append(v)
+        return self._dequantize(x, q, np.stack(rows), lo, scale)
+
+
 @dataclasses.dataclass
 class Request:
     prompt: List[int]
@@ -57,7 +182,8 @@ class Server:
     """Greedy continuous-batching server over fixed cache slots."""
 
     def __init__(self, cfg: ModelConfig, params, batch_slots: int = 4,
-                 max_len: int = 256, eos_id: int = 1):
+                 max_len: int = 256, eos_id: int = 1,
+                 pum_offload: Optional[PumServeOffload] = None):
         self.cfg = cfg
         self.params = params
         self.caches = init_caches(cfg, batch_slots, max_len)
@@ -68,6 +194,7 @@ class Server:
         self.max_len = max_len
         self.eos_id = eos_id
         self.queue: List[Request] = []
+        self.pum_offload = pum_offload
 
     def submit(self, req: Request) -> None:
         self.queue.append(req)
@@ -88,7 +215,15 @@ class Server:
         token = jnp.asarray(self.cur)
         pos = jnp.asarray(self.pos)
         logits, self.caches = self.step_fn(self.params, self.caches, token, pos)
-        nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        if self.pum_offload is not None:
+            # PuM serving offload: the active slots' quantized elementwise
+            # logit stages drain through one chip dispatch (empty slots
+            # hold stale tokens — not real traffic, so not dispatched)
+            logits = np.array(logits)    # writable host copy
+            act = [i for i, s in enumerate(self.slots) if s is not None]
+            if act:
+                logits[act] = self.pum_offload(logits[act])
+        nxt = np.asarray(jnp.argmax(jnp.asarray(logits), axis=-1))
         for i, req in enumerate(self.slots):
             if req is None:
                 continue
