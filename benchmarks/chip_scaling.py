@@ -101,6 +101,8 @@ def table_chip_scaling(
                       f"  # x{gops / base:.1f} vs bank{bank_counts[0]}")
 
     # -- measured vs modeled on a heterogeneous mix ------------------------
+    from repro.core.control_unit import TABLE_CACHE, trace_counts
+
     print("# chip_scaling/dispatch: name,us_per_call,derived"
           "(modeled_speedup_vs_sequential)")
     for nb in bank_counts:
@@ -111,10 +113,27 @@ def table_chip_scaling(
         t0 = time.perf_counter()
         chip_results = chip.dispatch(queue)
         wall_us = (time.perf_counter() - t0) * 1e6
+        t_seq = time.perf_counter()
         seq_results, banks = sequential_dispatch(
             _mix_queue(lanes, n_instrs, widths, seed=0),
             n_banks=nb, n_subarrays=n_subarrays)
+        seq_wall_us = (time.perf_counter() - t_seq) * 1e6
         _assert_bit_exact(chip_results, seq_results, f"mix/bank{nb}")
+        # compile-once replay gate: an identical dispatch must retrace
+        # nothing and resolve every round's tables from the device cache
+        chip.reset_stats()
+        tr0, tc0 = trace_counts(), TABLE_CACHE.stats()
+        chip.dispatch(_mix_queue(lanes, n_instrs, widths, seed=0))
+        tr1, tc1 = trace_counts(), TABLE_CACHE.stats()
+        retraced = {k: tr1[k] - tr0[k] for k in tr1 if tr1[k] != tr0[k]}
+        if retraced:
+            raise SystemExit(
+                f"CHIP REPLAY CACHE MISS (bank{nb}): repeated dispatch "
+                f"retraced {retraced}")
+        if tc1["misses"] != tc0["misses"]:
+            raise SystemExit(
+                f"CHIP TABLE CACHE MISS (bank{nb}): repeated dispatch "
+                f"rebuilt command tables")
         st = chip.stats
         seq_latency_s = sum(b.stats.latency_s for b in banks)
         row = {
@@ -122,7 +141,14 @@ def table_chip_scaling(
             "sequential_latency_s": seq_latency_s,
             "modeled_speedup": seq_latency_s / max(st.latency_s, 1e-30),
             "measured_wall_us": wall_us,
+            "measured_seq_wall_us": seq_wall_us,
+            "measured_speedup": seq_wall_us / max(wall_us, 1e-30),
             "measured_pack_us": st.pack_wall_s * 1e6,
+            "table_cache_hits_per_dispatch": tc1["hits"] - tc0["hits"],
+            "table_cache_misses_per_dispatch": (tc1["misses"]
+                                                - tc0["misses"]),
+            "new_traces_per_dispatch": sum(tr1.values())
+            - sum(tr0.values()),
             "rounds": st.rounds,
             "bank_waves": st.batches,
             "imbalance": st.imbalance,
@@ -136,7 +162,8 @@ def table_chip_scaling(
         print(f"chip/mix/bank{nb},{wall_us / len(queue):.0f},"
               f"{row['modeled_speedup']:.2f}"
               f"  # modeled {st.latency_s * 1e6:.1f} vs sequential "
-              f"{seq_latency_s * 1e6:.1f} us, imbalance "
+              f"{seq_latency_s * 1e6:.1f} us, measured "
+              f"x{row['measured_speedup']:.2f}, imbalance "
               f"{st.imbalance:.2f}, sharded={row['sharded']}")
 
     # -- all-16-ops bit-exact gate, both styles ----------------------------

@@ -24,10 +24,18 @@ python -m pytest -x -q
 echo "== μProgram validation (16 ops, MIG + AIG, DRAM oracle) =="
 python scripts/check_uprograms.py
 
+echo "== μProgram compaction gate (library-wide: ≤ activations, bit-exact) =="
+# exits non-zero if compaction ever increases an op's activation count,
+# diverges from the uncompacted program on the DRAM oracle, or worsens
+# the RowHammer activation-streak bound
+python scripts/check_compaction.py
+
 echo "== fused-dispatch smoke bench (2 subarrays, 64 lanes) =="
 # exits non-zero if the fused heterogeneous path diverges from the
-# grouped baseline, or if FFD wave packing models more latency than the
-# greedy baseline; BENCH_dispatch.json is uploaded as a CI artifact
+# grouped baseline, if a wave scheduler regresses modeled latency
+# (reorder <= ffd <= greedy), or if a repeated identical dispatch
+# retraces XLA / misses the device table cache (compile-once replay);
+# BENCH_dispatch.json is uploaded as a CI artifact
 python -m benchmarks.bank_scaling --smoke --json BENCH_dispatch.json
 
 echo "== chip tests under real shard_map partitioning (4 forced devices) =="

@@ -23,10 +23,17 @@ module reproduces that layer on top of the Step-3 scan interpreter:
     that never leave the state (the end-to-end SIMDRAM paper's
     transposition-unit discipline: only PuM-resident data is vertical);
     host packing of wave *k+1* overlaps device replay of wave *k*
-    (double buffering, ``jax.block_until_ready`` only at drain).
+    (double buffering, ``jax.block_until_ready`` only at drain);
+    waves schedule with cross-stage reordering by default
+    (critical-path-prioritized list scheduling — independent consumers
+    hoist past slow producers), and every wave's stacked command
+    tables resolve from the device-resident compile-once
+    :data:`repro.core.control_unit.TABLE_CACHE` (a repeated dispatch
+    re-encodes nothing and triggers zero new XLA traces).
     Aggregate latency/energy/throughput are modeled with
     :mod:`repro.core.timing` / :mod:`repro.core.energy` — a fused wave
-    charges the latency of its *longest* constituent μProgram.
+    charges the latency of its *longest* constituent μProgram, plus
+    paid horizontal↔vertical conversions (``BankStats.transpose_s``).
 
 Backends (all bit-exact, cross-checked in tests/test_bank_engine.py and
 tests/test_fused_dispatch.py):
@@ -51,11 +58,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import bitplane
-from .control_unit import (CMD_WIDTH, batched_interpreter, encode_uprogram,
-                           hetero_batched_interpreter, load_state,
-                           output_plane_rows, pad_command_table, read_outputs,
-                           table_bucket)
-from .costmodel import forwarding_saving_s
+from .control_unit import (CMD_WIDTH, TABLE_CACHE, batched_interpreter,
+                           encode_uprogram, hetero_batched_interpreter,
+                           load_state, output_plane_rows, pad_command_table,
+                           read_outputs, shape_bucket, table_bucket)
+from .costmodel import critical_path_s, forwarding_saving_s, instr_cost_s
 from .energy import uprogram_energy_nj
 from .isa import _round_up, compile_op
 from .timing import DDR4, DramConfig, fused_replay_latency_s, uprogram_latency_s
@@ -99,6 +106,7 @@ class BankStats:
     fused_batches: int = 0    # replays mixing ≥2 distinct (op, width) tables
     transpositions_skipped: int = 0   # h2v/v2h conversions forwarding avoided
     transpose_s_saved: float = 0.0    # modeled seconds those skips saved
+    transpose_s: float = 0.0          # modeled seconds of conversions PAID
     aap: int = 0              # per-subarray command counts, summed
     ap: int = 0
     elements: int = 0         # result elements produced
@@ -130,6 +138,15 @@ class BankStats:
     def throughput_gops(self) -> float:
         return self.elements / self.latency_s / 1e9 if self.latency_s else 0.0
 
+    @property
+    def total_latency_s(self) -> float:
+        """Replay latency + the horizontal↔vertical conversions this
+        path actually paid — the end-to-end modeled wall-clock.  The
+        fused dispatcher's forwarded hops show up here as savings
+        (``transpose_s`` stays low) where ``latency_s`` alone is blind
+        to them."""
+        return self.latency_s + self.transpose_s
+
     def as_dict(self) -> Dict[str, float]:
         return {
             "n_subarrays": self.n_subarrays,
@@ -138,6 +155,8 @@ class BankStats:
             "fused_batches": self.fused_batches,
             "transpositions_skipped": self.transpositions_skipped,
             "transpose_s_saved": self.transpose_s_saved,
+            "transpose_s": self.transpose_s,
+            "total_latency_s": self.total_latency_s,
             "aap": self.aap,
             "ap": self.ap,
             "elements": self.elements,
@@ -371,17 +390,25 @@ class Bank:
     and row count stay within the ratio (beyond it, padding a tiny
     program to a huge slot buys nothing — the dispatcher falls back to
     separate, effectively per-group, replays).
+
+    ``packing`` selects the wave scheduler: ``"reorder"`` (default) is
+    cross-stage list scheduling — instructions become replay-ready the
+    moment their producers' waves close, so dataflow-independent
+    consumers hoist past slow producers across stage boundaries,
+    prioritized by critical-path cost; ``"ffd"`` is the PR 3
+    stage-bucketed first-fit-decreasing packer (the CI-gated baseline);
+    ``"greedy"`` is the PR 2 single-open-wave close.
     """
 
     def __init__(self, n_subarrays: int = 4, cfg: DramConfig = DDR4,
                  style: str = "mig", engine: str = "interp",
                  fuse: bool = True, fuse_ratio: int = 32,
-                 packing: str = "ffd"):
+                 packing: str = "reorder"):
         if engine not in ("interp", "bitplane", "pallas"):
             raise ValueError(f"unknown engine {engine!r}")
         if fuse_ratio < 1:
             raise ValueError("fuse_ratio must be >= 1")
-        if packing not in ("ffd", "greedy"):
+        if packing not in ("reorder", "ffd", "greedy"):
             raise ValueError(f"unknown packing {packing!r}")
         self.n_subarrays = n_subarrays
         self.cfg = cfg
@@ -429,6 +456,12 @@ class Bank:
             results = self._run_pallas(
                 spec, name, n_bits, operand_sets, signed_out)
 
+        # every operand enters horizontally (h2v) and every output
+        # leaves horizontally (v2h) on this path — charge the
+        # transposition unit for each conversion
+        for n in lanes:
+            for w in (*spec.operand_bits, *spec.out_bits):
+                self.stats.transpose_s += forwarding_saving_s(n, w, self.cfg)
         self._account(uprog, operand_sets, lanes, subarray_ids)
         return results
 
@@ -442,7 +475,7 @@ class Bank:
         n_rows = _round_up(uprog.n_rows_total, ROW_BUCKET)
         states = np.zeros((self.n_subarrays, n_rows, cols // 32), np.uint32)
         for s, operands in enumerate(operand_sets):
-            states[s] = load_state(uprog, operands, cols, n_rows=n_rows)
+            load_state(uprog, operands, cols, n_rows=n_rows, out=states[s])
         run = batched_interpreter()
         out = np.asarray(run(jnp.asarray(states), jnp.asarray(table)))
         results = []
@@ -586,7 +619,7 @@ class Bank:
             else:
                 active.append(i)
 
-        waves = self._build_waves(queue, active, stage)
+        waves = self._build_waves(queue, active, stage, lanes)
         run = hetero_batched_interpreter()
         pending: Optional[Tuple[List[_Slot], jnp.ndarray]] = None
         for wave in waves:
@@ -619,37 +652,118 @@ class Bank:
             jax.block_until_ready(pending[1])     # drain the pipeline
             self._harvest_wave(queue, pending, planes_cache, needed, results)
 
-    def _build_waves(self, queue, active, stage) -> List[List[int]]:
-        """Chunk instructions into fused waves: stages execute in order;
-        within a stage, instructions sort by descending program size so
-        heavy μPrograms fuse with heavy ones (a wave costs its longest
-        constituent), then pack up to ``n_subarrays`` slots per wave
-        while the wave's bucketed command/row spans stay within
-        ``fuse_ratio``.
+    def _build_waves(self, queue, active, stage,
+                     lanes: Optional[Sequence[int]] = None) -> List[List[int]]:
+        """Chunk instructions into fused waves.
 
-        ``packing="ffd"`` (default) is first-fit-decreasing bin packing:
-        every instruction joins the FIRST open wave with a free slot and
-        compatible buckets, so earlier (largest-head) waves fill up
-        instead of closing on the first misfit — the wave count, and
-        therefore the modeled latency sum, is never worse than the
-        greedy baseline (asserted on the hetero-mix benchmark).
+        ``packing="reorder"`` (default) is cross-stage list scheduling:
+        an instruction is *ready* once all its ``Ref`` producers sit in
+        already-closed waves, so dataflow-independent consumers hoist
+        past slow producers across stage boundaries.  Ready instructions
+        are prioritized by critical-path cost
+        (:func:`repro.core.costmodel.critical_path_s`) — the chain that
+        bounds the queue's makespan packs first — then first-fit into
+        the wave under the same ``fuse_ratio`` bucket-span rule as the
+        stage-bucketed packers.  List scheduling alone carries no
+        never-worse guarantee (a high-priority small-bucket seed can
+        exclude a large program FFD would have co-packed), so the
+        reorderer prices BOTH schedules with the wave cost model and
+        keeps the cheaper — reorder ≤ ffd holds by construction, which
+        is what lets CI gate on it.
+
+        ``packing="ffd"`` keeps the PR 3 baseline: stages execute in
+        order; within a stage, instructions sort by descending program
+        size and first-fit-decreasing into open waves, so the wave
+        count is never worse than the greedy close (CI-gated).
         ``packing="greedy"`` keeps the PR 2 behavior: one open wave,
         closed as soon as an instruction doesn't fit.
         """
 
         def buckets(i):
+            # fusion-compatibility spans, NOT table shapes: the command
+            # span keeps the pre-compaction floor of 64 because a wave's
+            # scan length is its longest constituent — padding a tiny
+            # (bucket-16) program into a ≥64-command wave costs nothing
+            # extra, so it shouldn't block fusion the PR 3 packer allowed
             _, uprog, table = cached_table(
                 queue[i].op, queue[i].n_bits, self.style)
-            return (table.shape[0], _round_up(uprog.n_rows_total, ROW_BUCKET))
+            return (max(table.shape[0], 64),
+                    _round_up(uprog.n_rows_total, ROW_BUCKET))
 
+        if self.packing == "reorder" and lanes is None:
+            raise ValueError(
+                "packing='reorder' schedules by critical-path cost and "
+                "needs the per-instruction lane counts from plan_queue")
         waves: List[List[int]] = []
         for s in sorted({stage[i] for i in active}):
             idxs = sorted((i for i in active if stage[i] == s),
                           key=lambda i: (-buckets(i)[0], -buckets(i)[1], i))
-            if self.packing == "ffd":
-                waves.extend(self._ffd_waves(idxs, buckets))
-            else:
+            if self.packing == "greedy":
                 waves.extend(self._greedy_waves(idxs, buckets))
+            else:
+                waves.extend(self._ffd_waves(idxs, buckets))
+        if self.packing == "reorder":
+            reordered = self._reorder_waves(queue, active, lanes, buckets)
+            # never-worse guard: keep the cross-stage schedule only when
+            # the cost model prices it at or below the FFD baseline
+            if (self._waves_latency_s(queue, reordered, lanes)
+                    <= self._waves_latency_s(queue, waves, lanes)):
+                return reordered
+        return waves
+
+    def _waves_latency_s(self, queue, waves, lanes) -> float:
+        """Modeled drain time of a wave schedule: each wave costs its
+        longest constituent (serialized invocations included) — the same
+        rule :func:`wave_cost` charges, without building slot entries."""
+        return sum(
+            max(instr_cost_s(queue[i].op, queue[i].n_bits, lanes[i],
+                             self.cfg, self.style) for i in wave)
+            for wave in waves if wave
+        )
+
+    def _reorder_waves(self, queue, active, lanes, buckets) -> List[List[int]]:
+        act = set(active)
+        deps = {
+            i: {o.producer for o in queue[i].operands
+                if isinstance(o, Ref) and o.producer in act}
+            for i in active
+        }
+        consumers: Dict[int, List[int]] = {i: [] for i in active}
+        for i in active:
+            for p in deps[i]:
+                consumers[p].append(i)
+        pos = {qi: k for k, qi in enumerate(active)}
+        prio = critical_path_s(
+            [(queue[i].op, queue[i].n_bits, lanes[i]) for i in active],
+            [[pos[c] for c in consumers[i]] for i in active],
+            self.cfg, self.style)
+        prio_of = dict(zip(active, prio))
+
+        done: set = set()
+        remaining = list(active)
+        waves: List[List[int]] = []
+        while remaining:
+            ready = sorted(
+                (i for i in remaining if deps[i] <= done),
+                key=lambda i: (-prio_of[i], -buckets(i)[0], -buckets(i)[1], i))
+            wave: List[int] = []
+            span = [0, 0, 0, 0]        # [c_min, c_max, r_min, r_max]
+            for i in ready:
+                c, r = buckets(i)
+                if not wave:
+                    wave, span = [i], [c, c, r, r]
+                elif (len(wave) < self.n_subarrays
+                        and max(span[1], c) <= min(span[0], c)
+                        * self.fuse_ratio
+                        and max(span[3], r) <= min(span[2], r)
+                        * self.fuse_ratio):
+                    wave.append(i)
+                    span[0], span[1] = min(span[0], c), max(span[1], c)
+                    span[2], span[3] = min(span[2], r), max(span[3], r)
+            waves.append(wave)
+            done.update(wave)
+            in_wave = set(wave)
+            remaining = [i for i in remaining if i not in in_wave]
         return waves
 
     def _ffd_waves(self, idxs, buckets) -> List[List[int]]:
@@ -698,17 +812,24 @@ class Bank:
     def _wave_dims(self, queue, wave, lanes) -> Tuple[int, int, int]:
         """(n_rows, n_cmds, cols) one fused wave needs — the chip-level
         dispatcher maxes these across banks so every bank's slab packs
-        into one stacked (n_banks, n_subarrays, ...) replay."""
+        into one stacked (n_banks, n_subarrays, ...) replay.
+
+        Rows and columns are harmonized to power-of-two buckets
+        (:func:`repro.core.control_unit.shape_bucket`): padding is inert
+        (NOP rows / zero planes), and bucketed dims keep the set of
+        distinct replay shapes — and therefore XLA traces — O(log) in
+        the largest wave instead of one per wave composition."""
         metas = [cached_table(queue[i].op, queue[i].n_bits, self.style)
                  for i in wave]
-        return (_round_up(max(m[1].n_rows_total for m in metas), ROW_BUCKET),
+        return (shape_bucket(max(m[1].n_rows_total for m in metas),
+                             ROW_BUCKET),
                 max(m[2].shape[0] for m in metas),
-                _round_up(max(lanes[i] for i in wave), 32))
+                shape_bucket(max(lanes[i] for i in wave), 32))
 
     def _pack_wave(self, queue, wave, lanes, planes_cache,
                    n_rows: Optional[int] = None, n_cmds: Optional[int] = None,
-                   cols: Optional[int] = None):
-        """Build the stacked (states, tables) arrays for one fused wave.
+                   cols: Optional[int] = None, with_tables: bool = True):
+        """Build the stacked states (and cached tables) for one wave.
 
         Idle subarrays keep all-zero tables (pure NOPs) and zero states;
         shorter constituent tables are NOP-padded to the wave's shared
@@ -716,11 +837,20 @@ class Bank:
         bucket.  Vertical operands (``Ref`` forwards and user-supplied
         ``VerticalOperand``) write their planes straight into the state —
         the skipped h2v conversions are credited to the stats at the
-        :func:`repro.core.costmodel.forwarding_saving_s` price.
+        :func:`repro.core.costmodel.forwarding_saving_s` price, while
+        horizontal operands charge the same price as paid transposition
+        time (``transpose_s``).
 
         ``n_rows``/``n_cmds``/``cols`` override the wave's own dims with
         larger ones (NOP rows / zero planes are inert) — the chip
         dispatcher passes the max over all banks in a round.
+
+        Returns ``(states, tables, entries)``; ``tables`` is a
+        **device-resident** stacked array from the compile-once
+        :data:`repro.core.control_unit.TABLE_CACHE` — a repeated wave
+        composition pays no host-side encode/pad/transfer.  The chip
+        dispatcher passes ``with_tables=False`` and gets the per-slot
+        cache key instead, to compose its own chip-level cached stack.
 
         Slots are assigned least-loaded-first: members sorted by
         descending lane demand take the subarrays with the lightest
@@ -735,16 +865,17 @@ class Bank:
         cols = max(cols or 0, own_cols)
         words = cols // 32
         states = np.zeros((self.n_subarrays, n_rows, words), np.uint32)
-        tables = np.zeros((self.n_subarrays, n_cmds, CMD_WIDTH), np.int32)
         entries: List[_Slot] = []
         order = sorted(range(len(wave)), key=lambda j: -lanes[wave[j]])
         free = list(np.argsort(self._lane_load, kind="stable"))
         sids = [0] * len(wave)
         for j in order:
             sids[j] = int(free.pop(0))
+        slot_ops: List = [None] * self.n_subarrays
         for j, (i, (spec, uprog, table)) in enumerate(zip(wave, metas)):
             sid = sids[j]
             self._lane_load[sid] += lanes[i]
+            slot_ops[sid] = (queue[i].op, queue[i].n_bits)
             ins = queue[i]
             horiz: List[Optional[np.ndarray]] = []
             vert: Dict[int, np.ndarray] = {}
@@ -768,13 +899,25 @@ class Bank:
                         o.lanes, spec.operand_bits[k], self.cfg)
                 else:
                     horiz.append(np.asarray(o))
-            st = load_state(uprog, horiz, cols, n_rows=n_rows)
+                    self.stats.transpose_s += forwarding_saving_s(
+                        lanes[i], spec.operand_bits[k], self.cfg)
+            st = load_state(uprog, horiz, cols, n_rows=n_rows,
+                            out=states[sid])
             for k, planes in vert.items():
                 st[list(uprog.in_rows[k])] = planes
-            states[sid] = st
-            tables[sid, : table.shape[0]] = table
             entries.append(_Slot(i, sid, spec, uprog, lanes[i]))
-        return states, tables, entries
+        wave_key = (self.style, n_cmds, tuple(slot_ops))
+        if not with_tables:
+            return states, wave_key, entries
+        return states, self._cached_wave_tables(wave_key), entries
+
+    def _cached_wave_tables(self, wave_key) -> jnp.ndarray:
+        """Device-resident (n_subarrays, n_cmds, 13) stacked tables for
+        one wave composition, built once per distinct key."""
+        return TABLE_CACHE.get(
+            ("bank", self.n_subarrays) + wave_key,
+            lambda: _build_stacked_tables(
+                wave_key, self.n_subarrays))
 
     def _harvest_wave(self, queue, pending, planes_cache, needed, results):
         """Materialize one completed wave: publish forwarded planes for
@@ -809,6 +952,9 @@ class Bank:
             else:
                 outs = read_outputs(
                     e.spec.out_bits, e.uprog, sub, e.lanes, ins.signed_out)
+                self.stats.transpose_s += sum(
+                    forwarding_saving_s(e.lanes, w, self.cfg)
+                    for w in e.spec.out_bits)
                 results[e.qi] = outs[0] if len(outs) == 1 else tuple(outs)
 
     # -- grouped baseline dispatcher ---------------------------------------
@@ -855,9 +1001,15 @@ class Bank:
                 r = results[o.producer]
                 vals = r[o.out] if isinstance(r, tuple) else r
                 if isinstance(vals, VerticalOperand):
+                    # NOT charged: the grouped engine computed this value
+                    # horizontally one step earlier (the wrapper only
+                    # exists because the producer was keep_vertical), so
+                    # unwrapping is bookkeeping, not a modeled conversion
                     vals = vals.to_values(signed=prod.signed_out)
                 ops.append(np.asarray(vals))
             elif isinstance(o, VerticalOperand):
+                self.stats.transpose_s += forwarding_saving_s(
+                    o.lanes, int(o.planes.shape[0]), self.cfg)
                 ops.append(o.to_values())
             else:
                 ops.append(np.asarray(o))
@@ -868,6 +1020,9 @@ class Bank:
         outs = result if isinstance(result, tuple) else (result,)
         vos = [VerticalOperand.from_values(np.asarray(v), w)
                for v, w in zip(outs, spec.out_bits)]
+        self.stats.transpose_s += sum(
+            forwarding_saving_s(vo.lanes, w, self.cfg)
+            for vo, w in zip(vos, spec.out_bits))
         return vos[0] if len(vos) == 1 else tuple(vos)
 
     def reset_stats(self):
@@ -876,6 +1031,21 @@ class Bank:
         self.stats = BankStats(self.n_subarrays)
         self._lane_load = np.zeros(self.n_subarrays, np.int64)
         self._rr_next = 0
+
+
+def _build_stacked_tables(wave_key, n_subarrays: int) -> np.ndarray:
+    """Materialize one wave composition's stacked (n_subarrays, n_cmds,
+    13) command tables — the TABLE_CACHE build function (runs once per
+    distinct key; idle slots stay all-NOP)."""
+    style, n_cmds, slot_ops = wave_key
+    out = np.zeros((n_subarrays, n_cmds, CMD_WIDTH), np.int32)
+    for sid, slot in enumerate(slot_ops):
+        if slot is None:
+            continue
+        op, n_bits = slot
+        _, _, table = cached_table(op, n_bits, style)
+        out[sid, : table.shape[0]] = table
+    return out
 
 
 def _adapt_planes(planes: np.ndarray, n_rows: int, n_words: int,

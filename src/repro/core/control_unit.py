@@ -27,7 +27,7 @@ Port semantics match :class:`repro.core.subarray.Subarray` exactly: a
 from __future__ import annotations
 
 import functools
-from typing import Sequence, Tuple
+from typing import Dict, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -46,7 +46,7 @@ _FULL = np.uint32(0xFFFFFFFF)
 
 def load_state(
     uprog: UProgram, operands: Sequence[np.ndarray], n_columns: int,
-    n_rows: int | None = None,
+    n_rows: int | None = None, out: np.ndarray | None = None,
 ) -> np.ndarray:
     """(n_rows, n_words) uint32 subarray state: C1 pinned, operand *i*'s
     bits packed vertically into ``uprog.in_rows[i]``.
@@ -54,11 +54,16 @@ def load_state(
     An operand entry of ``None`` is skipped — the caller supplies those
     rows already vertical (the bank dispatcher's operand-forwarding path
     writes producer bit-planes straight into the consumer state).
+    ``out`` fills an existing zeroed slab in place (the wave packer
+    passes its stacked state array's slot) instead of allocating.
     """
     from .subarray import pack_bits
 
-    state = np.zeros(
-        (n_rows or uprog.n_rows_total, n_columns // 32), dtype=np.uint32)
+    if out is not None:
+        state = out
+    else:
+        state = np.zeros(
+            (n_rows or uprog.n_rows_total, n_columns // 32), dtype=np.uint32)
     state[C1] = np.uint32(0xFFFFFFFF)
     for op_idx, rows in enumerate(uprog.in_rows):
         if operands[op_idx] is None:
@@ -186,14 +191,99 @@ def pad_command_table(table: np.ndarray, n_cmds: int) -> np.ndarray:
     return out
 
 
-def table_bucket(n_cmds: int, min_bucket: int = 64) -> int:
-    """Slot size for a μProgram of ``n_cmds`` commands: next power of two
-    ≥ ``min_bucket`` (bounds distinct compiled interpreter shapes to
-    O(log max-program-length))."""
-    b = min_bucket
-    while b < n_cmds:
+def shape_bucket(x: int, base: int) -> int:
+    """Harmonized array-dimension bucket: next power of two ≥ ``base``
+    (and ≥ x).  Rounding wave dimensions (rows, columns) to shared
+    buckets keeps stacked hetero replays from retriggering XLA traces —
+    the set of distinct compiled shapes stays O(log max-dim) instead of
+    one per wave composition."""
+    b = base
+    while b < x:
         b *= 2
     return b
+
+
+def table_bucket(n_cmds: int, min_bucket: int = 16) -> int:
+    """Slot size for a μProgram of ``n_cmds`` commands: next power of two
+    ≥ ``min_bucket`` (bounds distinct compiled interpreter shapes to
+    O(log max-program-length)).  The floor is 16 commands — small
+    compacted programs used to pay a min-64 NOP pad that made their
+    scans 2-4× longer than the program itself."""
+    return shape_bucket(n_cmds, min_bucket)
+
+
+# ---------------------------------------------------------------------------
+# compile-once replay tables: device-resident command-table cache
+# ---------------------------------------------------------------------------
+
+class TableCache:
+    """Memoizes encoded+padded+stacked command tables as device-resident
+    arrays, keyed by the wave's composition — (op, width, style) per
+    slot plus the shared command bucket.  A dispatch that replays a
+    composition seen before pays ZERO host-side table work: no
+    re-encode, no NOP re-pad, no host→device transfer (the paper's
+    μProgram memory: programs are written once and replayed forever —
+    and like that memory it has finite capacity: a device-byte budget,
+    least-recently-replayed compositions evicting past it, so a
+    long-running server with drifting queue mixes cannot grow device
+    memory without bound; chip-level round entries run to megabytes
+    each, which is why the budget is in bytes, not entries).
+    """
+
+    def __init__(self, max_bytes: int = 128 * 1024 * 1024):
+        from collections import OrderedDict
+
+        self.max_bytes = max_bytes
+        self._store: "OrderedDict" = OrderedDict()
+        self.bytes = 0
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def get(self, key, build):
+        """Return the cached device array for ``key``, building (and
+        device-committing) it on first use via ``build()``."""
+        t = self._store.get(key)
+        if t is None:
+            self.misses += 1
+            arr = build()
+            t = self._store[key] = jax.device_put(arr)
+            self.bytes += int(arr.nbytes)
+            while self.bytes > self.max_bytes and len(self._store) > 1:
+                _, old = self._store.popitem(last=False)
+                self.bytes -= int(old.nbytes)
+                self.evictions += 1
+        else:
+            self.hits += 1
+            self._store.move_to_end(key)
+        return t
+
+    def stats(self) -> Dict[str, int]:
+        return {"entries": len(self._store), "bytes": self.bytes,
+                "hits": self.hits, "misses": self.misses,
+                "evictions": self.evictions}
+
+    def clear(self) -> None:
+        self._store.clear()
+        self.bytes = 0
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+
+TABLE_CACHE = TableCache()
+
+
+def trace_counts() -> Dict[str, int]:
+    """Compiled-executable counts of the jitted interpreters — the
+    retrace regression gate: a second identical dispatch must leave
+    every count unchanged (tables are data; only shapes compile)."""
+    return {
+        "run_command_table": run_command_table._cache_size(),
+        "batched": batched_interpreter()._cache_size(),
+        "hetero": hetero_batched_interpreter()._cache_size(),
+        "chip": chip_batched_interpreter()._cache_size(),
+    }
 
 
 @functools.lru_cache(maxsize=1)

@@ -14,7 +14,7 @@ own (monotonicity properties in tests/test_costmodel.py).
 from __future__ import annotations
 
 from dataclasses import dataclass, replace
-from typing import Dict, Optional
+from typing import Dict, List, Optional, Sequence, Tuple
 
 from .isa import compile_op
 from .timing import DDR4, CPU_BASELINE, DramConfig, HostConfig, host_throughput_gops, uprogram_latency_s
@@ -63,6 +63,30 @@ def instr_cost_s(
     _, uprog = compile_op(op, n_bits, style)
     invs = max(1, -(-lanes // cfg.columns_per_subarray))
     return invs * uprogram_latency_s(uprog, cfg)
+
+
+def critical_path_s(
+    items: Sequence[Tuple[str, int, int]],
+    consumers: Sequence[Sequence[int]],
+    cfg: DramConfig = DDR4, style: str = "mig",
+) -> List[float]:
+    """Critical-path priority of every instruction in a dataflow queue:
+    ``priority[i] = instr_cost_s(i) + max(priority of i's consumers)``
+    — the modeled time from *i*'s replay start to the end of the
+    longest dependent chain hanging off it.  ``items[i]`` is
+    ``(op, n_bits, lanes)``; ``consumers[i]`` indexes into ``items``
+    (producers precede consumers, as in a dispatch queue).  This is the
+    hoisting priority of the cross-stage wave reorderer
+    (:meth:`repro.core.bank.Bank._build_waves`): scheduling the longest
+    chain first tightens the sum of fused-wave longest-constituent
+    bounds."""
+    n = len(items)
+    prio = [0.0] * n
+    for i in reversed(range(n)):
+        op, n_bits, lanes = items[i]
+        prio[i] = instr_cost_s(op, n_bits, lanes, cfg, style) + max(
+            (prio[c] for c in consumers[i]), default=0.0)
+    return prio
 
 
 def decide(

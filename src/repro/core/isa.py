@@ -41,18 +41,36 @@ from .control_unit import (encode_uprogram, load_state, make_interpreter,
 from .energy import energy_per_elem_pj, uprogram_energy_nj
 from .ops_library import OpSpec, get_op
 from .subarray import run_op
+from .synthesis import compact as compact_uprogram
 from .synthesis import synthesize, to_mig
 from .timing import DDR4, DramConfig, throughput_gops, uprogram_latency_s
 from .uprogram import UProgram
 
 
-@functools.lru_cache(maxsize=512)
-def compile_op(name: str, n_bits: int, style: str = "mig") -> Tuple[OpSpec, UProgram]:
+def compile_op(name: str, n_bits: int, style: str = "mig",
+               compact: bool = True) -> Tuple[OpSpec, UProgram]:
     """Steps 1+2 for one op: circuit -> optimized MIG -> μProgram.
 
     ``style="mig"`` is the SIMDRAM pipeline; ``style="aig"`` compiles the
     AND/OR/NOT description (the Ambit baseline executes this program).
+    ``compact=True`` (default) runs the Step-2.5 peephole
+    (:func:`repro.core.synthesis.compact`) over the allocated command
+    stream — removal-only, bit-exact, activation count never increases;
+    ``compact=False`` keeps the raw allocator output (the compaction
+    gates compare the two).
+
+    Thin normalizing wrapper: lru_cache keys positional and keyword
+    call forms separately, so defaults are resolved here and the cached
+    worker always sees four positional arguments — ``compile_op(op, 8)``
+    and ``compile_op(op, 8, compact=True)`` share one cache entry (and
+    one allocator run).
     """
+    return _compile_op(name, n_bits, style, bool(compact))
+
+
+@functools.lru_cache(maxsize=512)
+def _compile_op(name: str, n_bits: int, style: str,
+                compact: bool) -> Tuple[OpSpec, UProgram]:
     spec = get_op(name, n_bits)
     circ, ids = spec.build(style)
     if style == "mig":
@@ -62,6 +80,8 @@ def compile_op(name: str, n_bits: int, style: str = "mig") -> Tuple[OpSpec, UPro
     name2id = {opt.names[i]: i for i in range(len(opt.ops)) if opt.ops[i] == "in"}
     ids_m = [[name2id[circ.names[nid]] for nid in op] for op in ids]
     uprog = compile_circuit(opt, ids_m, op_name=name, n_bits=n_bits)
+    if compact:
+        uprog, _ = compact_uprogram(uprog)
     return spec, uprog
 
 

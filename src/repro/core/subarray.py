@@ -84,29 +84,45 @@ class Subarray:
 # ---------------------------------------------------------------------------
 
 def pack_bits(values: np.ndarray, n_bits: int, n_columns: int) -> np.ndarray:
-    """Horizontal -> vertical: (lanes,) uints -> (n_bits, n_words) uint32."""
+    """Horizontal -> vertical: (lanes,) uints -> (n_bits, n_words) uint32.
+
+    Vectorized over bit positions — one shift broadcast and ONE packbits
+    call instead of a per-bit Python loop (this is the host side of the
+    transposition unit; it sits on the wave packer's critical path)."""
     lanes = values.shape[0]
     assert lanes <= n_columns
-    out = np.zeros((n_bits, n_columns // 32), dtype=np.uint32)
-    vals = values.astype(np.uint64)
-    for j in range(n_bits):
-        bits = ((vals >> np.uint64(j)) & np.uint64(1)).astype(np.uint32)
-        padded = np.zeros(n_columns, dtype=np.uint8)
-        padded[:lanes] = bits
-        out[j] = np.packbits(padded, bitorder="little").view(np.uint32)
-    return out
+    if n_bits == 0:
+        return np.zeros((0, n_columns // 32), dtype=np.uint32)
+    if lanes == 0:
+        return np.zeros((n_bits, n_columns // 32), dtype=np.uint32)
+    # bit extraction via unpackbits on the little-endian byte view — a
+    # single C pass, much faster than 64-bit shift broadcasting (only
+    # the low n_bits matter, so ≤32-bit packs narrow to uint32 first)
+    if n_bits <= 32:
+        by = values.astype(np.uint32).view(np.uint8).reshape(lanes, 4)
+    else:
+        by = values.astype(np.uint64).view(np.uint8).reshape(lanes, 8)
+    bits = np.unpackbits(by, axis=1, bitorder="little")
+    padded = np.zeros((n_bits, n_columns), dtype=np.uint8)
+    padded[:, :lanes] = bits[:, :n_bits].T
+    return np.packbits(
+        padded.reshape(-1), bitorder="little"
+    ).view(np.uint32).reshape(n_bits, -1)
 
 
 def unpack_bits(planes: np.ndarray, lanes: int) -> np.ndarray:
-    """Vertical -> horizontal: (n_bits, n_words) uint32 -> (lanes,) uint64."""
+    """Vertical -> horizontal: (n_bits, n_words) uint32 -> (lanes,) uint64.
+
+    Vectorized: one unpackbits call over all planes, then a shift-OR
+    reduction."""
     n_bits = planes.shape[0]
-    out = np.zeros(lanes, dtype=np.uint64)
-    for j in range(n_bits):
-        bits = np.unpackbits(
-            planes[j].view(np.uint8), bitorder="little"
-        )[:lanes].astype(np.uint64)
-        out |= bits << np.uint64(j)
-    return out
+    if n_bits == 0 or lanes == 0:
+        return np.zeros(lanes, dtype=np.uint64)
+    bits = np.unpackbits(
+        np.ascontiguousarray(planes).view(np.uint8), axis=1,
+        bitorder="little")[:, :lanes].astype(np.uint64)
+    shifts = np.arange(n_bits, dtype=np.uint64)[:, None]
+    return np.bitwise_or.reduce(bits << shifts, axis=0)
 
 
 def run_uprogram(

@@ -31,10 +31,12 @@ typically requires fewer DRAM commands using MAJ and NOT").
 
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, replace
 from typing import Dict, List, Optional, Tuple
 
 from .logic import AND, CONST0, CONST1, INPUT, MAJ, NOT, OR, XOR, Circuit
+from .uprogram import (ROWHAMMER_STREAK_BOUND, UProgram, compact_commands,
+                       max_activation_streak)
 
 
 @dataclass
@@ -165,6 +167,80 @@ def synthesize(aig: Circuit) -> Tuple[Circuit, SynthesisReport]:
         aig_stats=aig.stats(), mig_stats=naive.stats(), opt_stats=opt.stats()
     )
     return opt, report
+
+
+# -- Step-2.5: post-allocation μProgram compaction ----------------------------
+# The Step-2 allocator schedules greedily, so its command streams carry
+# removable work: RowClone chains through scratch rows, dead spills, and
+# self-copies.  :func:`compact` runs the removal-only peephole from
+# :mod:`repro.core.uprogram` over the finished μProgram — the activation
+# count (the paper's latency/energy currency) can only shrink, and the
+# operand→output semantics are bit-exact (gated across all 16 ops ×
+# widths × {MIG, AIG} in tests/test_compaction.py and scripts/ci.sh).
+
+
+@dataclass(frozen=True)
+class CompactionReport:
+    """Before/after command mix of one :func:`compact` run."""
+
+    before_cmds: int
+    after_cmds: int
+    before_activations: int
+    after_activations: int
+
+    @property
+    def removed_activations(self) -> int:
+        return self.before_activations - self.after_activations
+
+    @property
+    def reduction(self) -> float:
+        if not self.before_activations:
+            return 0.0
+        return 1.0 - self.after_activations / self.before_activations
+
+
+def compact(uprog: UProgram) -> Tuple[UProgram, CompactionReport]:
+    """Compact a compiled μProgram; returns the (possibly smaller)
+    program plus a report.  Only commands are removed or redirected —
+    the operand-to-row map is untouched, and rows freed at the top of
+    the scratch region shrink ``n_rows_total`` (and therefore the
+    replay-state slab the bank engine allocates)."""
+    from .uprogram import N_SPECIAL, TRIPLES
+
+    live_out = {r for rows in uprog.out_rows for r in rows}
+    cmds = compact_commands(uprog.commands, live_out)
+    # RowHammer guard (paper §4): removing interleaving commands can
+    # merge same-row activation streaks.  Streaks may grow up to the
+    # hardware tolerance (ROWHAMMER_STREAK_BOUND) — or the allocator's
+    # own streak where that is already larger — but a compacted stream
+    # beyond that is rejected wholesale (all-or-nothing keeps the pass
+    # removal-only and the guard trivially sound)
+    if (max_activation_streak(cmds)
+            > max(max_activation_streak(uprog.commands),
+                  ROWHAMMER_STREAK_BOUND)):
+        cmds = list(uprog.commands)
+    referenced = set(live_out)
+    referenced.update(r for rows in uprog.in_rows for r in rows)
+    for c in cmds:
+        if c.kind == "AAP":
+            referenced.update((c.src[0], c.dst[0]))
+        else:
+            referenced.update(r for r, _ in TRIPLES[c.triple])
+    n_rows = max(max(referenced, default=0) + 1, N_SPECIAL)
+    compacted = replace(
+        uprog,
+        commands=cmds,
+        n_rows_total=min(uprog.n_rows_total, n_rows),
+        n_scratch=max(
+            0, uprog.n_scratch - (uprog.n_rows_total - n_rows)),
+    )
+    report = CompactionReport(
+        before_cmds=len(uprog.commands),
+        after_cmds=len(cmds),
+        before_activations=uprog.n_activations,
+        after_activations=compacted.n_activations,
+    )
+    return compacted, report
 
 
 # -- MIG-native building blocks ------------------------------------------------

@@ -33,8 +33,9 @@ stores in its μProgram memory and replays on a ``bbop`` instruction.
 
 from __future__ import annotations
 
+import functools
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
 
 # --- physical row indices ----------------------------------------------------
 T0, T1, T2, T3 = 0, 1, 2, 3
@@ -98,11 +99,14 @@ class UProgram:
     n_scratch: int
 
     # -- cost accounting (drives timing/energy/throughput models) ---------
-    @property
+    # command-mix counts are memoized: the dispatch hot path consults
+    # them per wave, and a μProgram's command list never mutates after
+    # compilation (compaction builds a NEW UProgram)
+    @functools.cached_property
     def n_aap(self) -> int:
         return sum(1 for c in self.commands if c.kind == "AAP")
 
-    @property
+    @functools.cached_property
     def n_ap(self) -> int:
         return sum(1 for c in self.commands if c.kind == "AP")
 
@@ -122,3 +126,249 @@ class UProgram:
 
     def listing(self) -> str:
         return "\n".join(f"{i:4d}: {c!r}" for i, c in enumerate(self.commands))
+
+
+# ---------------------------------------------------------------------------
+# μProgram compaction: a peephole pass over AAP/AP command sequences
+# ---------------------------------------------------------------------------
+#
+# The paper's first-order cost metric is the activation count (1 AAP =
+# 2 ACTs, 1 AP = 1 triple ACT), and the Step-2 allocator's greedy
+# scheduling leaves removable commands behind: values staged through a
+# scratch row and immediately re-copied (RowClone chains), rows written
+# and then overwritten before any read, and self-copies that change
+# nothing.  The pass below is removal/redirection-only — it can never
+# increase the activation count — and preserves the μProgram's
+# *semantics*: the operand-rows → output-rows mapping is bit-exact
+# (non-output scratch rows may legitimately end in a different state).
+#
+# Three sub-passes iterate to a fixpoint:
+#
+#   copy propagation   AAP(a→d) ... AAP(d→y)  ⇒  ... AAP(a→y) when
+#                      neither a nor d was rewritten in between (the
+#                      redirect honors port physics: a negated read is
+#                      only introduced on DCC rows);
+#   NOP squeezing      AAP whose written value provably equals the
+#                      destination's current content is dropped (this
+#                      covers self-copies and re-copies of an unchanged
+#                      source — and the all-zero AAP(T0→T0) NOP padding
+#                      word, so padded tables compact too);
+#   dead-write elim    backward liveness from the output rows: an AAP
+#                      whose destination is never read again is dropped;
+#                      an AP none of whose three rows is ever read again
+#                      is dropped.
+
+
+def _ap_rows(triple_idx: int) -> Set[int]:
+    return {r for r, _ in TRIPLES[triple_idx]}
+
+
+def _invalidate(copies: Dict[int, Tuple[int, bool]], row: int) -> None:
+    """Row ``row`` was overwritten: forget its copy record, and re-root
+    any equivalence class it anchored onto a surviving member (those
+    rows still hold the OLD value — only the anchor changed)."""
+    copies.pop(row, None)
+    orphans = [(r, p) for r, (root, p) in copies.items() if root == row]
+    for r, _p in orphans:
+        del copies[r]
+    if len(orphans) >= 2:
+        new_root, root_pol = orphans[0]
+        for r, p in orphans[1:]:
+            copies[r] = (new_root, p ^ root_pol)
+
+
+def _propagate_copies(commands: Sequence[Command]) -> Tuple[List[Command], bool]:
+    """Forward pass: redirect AAP reads to the oldest still-valid copy
+    root and drop AAPs that rewrite a row with its current content."""
+    # copies[r] = (root, pol): content[r] == content[root] ^ pol and
+    # neither r nor root has been written since the record was made.
+    copies: Dict[int, Tuple[int, bool]] = {}
+    out: List[Command] = []
+    changed = False
+    for c in commands:
+        if c.kind != "AAP":
+            rows = sorted(TRIPLES[c.triple], key=lambda rn: rn[0])
+            for r, _n in rows:
+                _invalidate(copies, r)
+            # charge-sharing leaves ALL THREE rows holding the MAJ value
+            # (n-port slots store the complement): one equivalence class
+            (r0, n0) = rows[0]
+            for r, n in rows[1:]:
+                copies[r] = (r0, n ^ n0)
+            out.append(c)
+            continue
+        (rs, ns), (rd, nd) = c.src, c.dst
+        root, pol = copies.get(rs, (rs, False))
+        eff_neg = pol ^ ns
+        # redirect the read to the chain root when the port exists:
+        # plain reads work on any row, negated reads only on DCC rows
+        if (root, eff_neg) != (rs, ns) and (not eff_neg or root in DCC_ROWS):
+            rs, ns = root, eff_neg
+            changed = True
+        # the value this AAP writes, expressed against the copy root
+        vroot, vpol = copies.get(rs, (rs, False))
+        vpol ^= ns ^ nd
+        if (vroot, vpol) == copies.get(rd, (rd, False)):
+            changed = True          # destination already holds the value
+            continue
+        out.append(Command("AAP", src=(rs, ns), dst=(rd, nd)))
+        _invalidate(copies, rd)
+        if vroot != rd:
+            copies[rd] = (vroot, vpol)
+    return out, changed
+
+
+def _eliminate_dead_writes(
+    commands: Sequence[Command], live_out: Iterable[int]
+) -> Tuple[List[Command], bool]:
+    """Backward liveness: drop commands whose writes are never read."""
+    live: Set[int] = set(live_out)
+    kept: List[Command] = []
+    changed = False
+    for c in reversed(commands):
+        if c.kind == "AAP":
+            rs, rd = c.src[0], c.dst[0]
+            if rd not in live:
+                changed = True
+                continue
+            if rs != rd:
+                live.discard(rd)    # fully overwritten here
+            live.add(rs)
+        else:
+            rows = _ap_rows(c.triple)
+            if not live & rows:
+                changed = True
+                continue
+            # an AP also writes its rows, but the read happens first, so
+            # in backward order the gen always wins — rows stay live
+            live |= rows
+        kept.append(c)
+    kept.reverse()
+    return kept, changed
+
+
+# RowHammer tolerance (paper §4): the test-suite's long-standing bound on
+# consecutive same-row activations in a compiled stream.  Compaction may
+# merge streaks up to this floor — or up to the allocator's own streak if
+# that is already larger — but never beyond (synthesis.compact enforces
+# it, scripts/check_compaction.py and tests/test_compaction.py gate it).
+ROWHAMMER_STREAK_BOUND = 8
+
+
+def max_activation_streak(commands: Sequence[Command]) -> int:
+    """Longest run of consecutive commands sharing a physical row — the
+    RowHammer exposure metric the Step-2 allocator bounds by
+    construction (paper §4).  Removing the commands *between* two
+    touches of one row merges their streaks, so
+    :func:`repro.core.synthesis.compact` rejects any compacted stream
+    whose streak exceeds ``max(original streak,
+    ROWHAMMER_STREAK_BOUND)``."""
+    streak = worst = 0
+    prev: Optional[Set[int]] = None
+    for c in commands:
+        rows = ({c.src[0], c.dst[0]} if c.kind == "AAP"
+                else _ap_rows(c.triple))
+        if prev is not None and prev & rows:
+            streak += 1
+            worst = max(worst, streak)
+        else:
+            streak = 0
+        prev = rows
+    return worst
+
+
+def _access_lists(commands: Sequence[Command]) -> Dict[int, List[Tuple[int, str]]]:
+    """Per physical row, the ordered (cmd_idx, kind) accesses; kind is
+    "r" (read), "w" (write) or "rw" (AP charge-sharing / self-copy)."""
+    acc: Dict[int, List[Tuple[int, str]]] = {}
+    for i, c in enumerate(commands):
+        if c.kind == "AAP":
+            rs, rd = c.src[0], c.dst[0]
+            if rs == rd:
+                acc.setdefault(rs, []).append((i, "rw"))
+            else:
+                acc.setdefault(rs, []).append((i, "r"))
+                acc.setdefault(rd, []).append((i, "w"))
+        else:
+            for r in _ap_rows(c.triple):
+                acc.setdefault(r, []).append((i, "rw"))
+    return acc
+
+
+def _forward_stores(
+    commands: Sequence[Command], live_out: Set[int]
+) -> Tuple[List[Command], bool]:
+    """Store forwarding: ``AAP(src→d) … AAP(d→y)`` where *d*'s only use
+    is that one re-copy becomes ``AAP(src→y)`` — the RowClone chain
+    through the intermediate row collapses.  Safe when nothing touches
+    *y* in between (the write moves earlier), the re-copy is the next
+    access to *d*, and *d* is dead afterwards (its next access is a
+    fresh write, or it is never accessed again and is not an output
+    row).  Port physics: a polarity-changing retarget is only allowed
+    when the final write lands on a DCC row."""
+    cmds = list(commands)
+    changed = False
+    while True:
+        acc = _access_lists(cmds)
+        nxt: Dict[Tuple[int, int], int] = {}   # (row, idx) -> list position
+        for row, lst in acc.items():
+            for pos, (i, _k) in enumerate(lst):
+                nxt[(row, i)] = pos
+        applied = False
+        for i, c in enumerate(cmds):
+            if c.kind != "AAP" or c.src[0] == c.dst[0]:
+                continue
+            d, nd = c.dst
+            lst = acc.get(d, [])
+            pos = nxt[(d, i)]
+            if pos + 1 >= len(lst):
+                continue
+            j, jkind = lst[pos + 1]
+            if jkind != "r":                   # next access must be a pure read
+                continue
+            cj = cmds[j]
+            y, ny = cj.dst
+            nsj = cj.src[1]
+            pol = nd ^ nsj ^ ny
+            if pol and y not in DCC_ROWS:
+                continue                       # no negating write port on y
+            ylst = acc.get(y, [])
+            between = [k for k, _ in ylst if i < k < j]
+            if between:
+                continue                       # y is touched before the re-copy
+            # d must be dead after j: next access is a fresh write, or none
+            if pos + 2 < len(lst):
+                k, kkind = lst[pos + 2]
+                if kkind != "w":
+                    continue
+            elif d in live_out:
+                continue
+            cmds[i] = Command("AAP", src=c.src, dst=(y, pol))
+            del cmds[j]
+            applied = changed = True
+            break
+        if not applied:
+            return cmds, changed
+
+
+def compact_commands(
+    commands: Sequence[Command], live_out: Iterable[int],
+    max_iters: int = 8,
+) -> List[Command]:
+    """Fixpoint-iterate copy propagation + NOP squeezing + store
+    forwarding + dead-write elimination.  ``live_out`` is the set of
+    physical rows whose final content the program's outputs read
+    (everything else is scratch)."""
+    cur = list(commands)
+    live = set(live_out)
+    for _ in range(max_iters):
+        # store forwarding first: copy propagation's read-redirects can
+        # break the single-use chains it collapses (measured on the op
+        # library — this order compacts strictly more)
+        cur, c1 = _forward_stores(cur, live)
+        cur, c2 = _eliminate_dead_writes(cur, live)
+        cur, c3 = _propagate_copies(cur)
+        cur, c4 = _eliminate_dead_writes(cur, live)
+        if not (c1 or c2 or c3 or c4):
+            break
+    return cur

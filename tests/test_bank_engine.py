@@ -245,7 +245,11 @@ def test_nop_padding_is_inert():
 
 
 def test_table_bucket_monotone_bounded():
-    assert table_bucket(1) == 64
+    # floor is 16 commands: small compacted programs scan short tables
+    # instead of paying a min-64 NOP pad (PR 4)
+    assert table_bucket(1) == 16
+    assert table_bucket(16) == 16
+    assert table_bucket(17) == 32
     assert table_bucket(64) == 64
     assert table_bucket(65) == 128
     assert table_bucket(1048) == 2048
