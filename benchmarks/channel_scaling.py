@@ -1,0 +1,242 @@
+"""Channel-level throughput scaling (multi-chip, transfer-bounded).
+
+The end-to-end SIMDRAM framework projects near-linear gains as more
+chips compute in parallel — bounded by the host-side memory channel.
+This benchmark drives that curve through the channel subsystem
+(:class:`repro.core.channel.SimdramChannel`) and emits
+``BENCH_channel.json``:
+
+  - **modeled curve**: :func:`repro.core.timing.channel_throughput_gops`
+    per op × width × chip count — the compute-side 1/2/4-chip scaling
+    line (exactly linear: chips share nothing);
+  - **measured vs modeled**: for each chip count, one heterogeneous mix
+    queue drains through ``SimdramChannel.dispatch`` and the report
+    records the modeled channel latency (max-per-super-round over
+    concurrent chips), the serialized per-chip baseline latency (sum
+    over chips), the host wall/pack times, AND the transfer bound: the
+    host↔chip traffic priced at ``channel_bw_gbs`` (``transfer_s`` —
+    constant across chip counts, because the link is shared) plus the
+    crossover chip count where it starts to dominate;
+  - **bit-exact gate**: channel dispatch == sequential per-chip
+    ``SimdramChip.dispatch`` across ALL 16 ops in both MIG and AIG
+    styles (exits non-zero on divergence — the CI acceptance gate), plus
+    the compile-once gate (a repeated dispatch must retrace nothing and
+    rebuild no tables).
+
+Output follows the harness contract: ``name,us_per_call,derived`` CSV
+rows.
+
+  python -m benchmarks.channel_scaling            # full sweep
+  python -m benchmarks.channel_scaling --smoke    # CI configuration
+"""
+
+from __future__ import annotations
+
+import json
+import time
+from typing import Dict, Sequence
+
+import numpy as np
+
+from repro.core.bank import BbopInstr, flatten_result
+from repro.core.channel import SimdramChannel, sequential_channel_dispatch
+from repro.core.isa import compile_op
+from repro.core.ops_library import ALL_OPS, get_op
+from repro.core.timing import DDR4, channel_throughput_gops
+
+from .bank_scaling import _mix_queue
+
+CHIP_COUNTS = (1, 2, 4)
+OPS = ("addition", "multiplication", "greater", "xor_red")
+
+
+def _assert_bit_exact(channel_results, seq_results, what: str) -> None:
+    for i, (a, b) in enumerate(zip(channel_results, seq_results)):
+        for x, y in zip(flatten_result(a), flatten_result(b)):
+            if not np.array_equal(x, y):
+                raise SystemExit(
+                    f"CHANNEL DISPATCH DIVERGES from sequential per-chip "
+                    f"execution at instruction {i} ({what})")
+
+
+def _gate_queue(style: str, lanes: int, widths: Sequence[int] = (8,)):
+    """One instruction per op × gate width in the library — the
+    all-16-ops gate (style-specific operands, mirroring
+    tests/test_channel.py).  The full sweep gates {8, 16, 32}b; the
+    smoke configuration gates {8, 16}b because 32-bit
+    multiplication/division synthesis takes minutes (the same carve-out
+    as scripts/check_compaction.py, whose ``--full`` covers them)."""
+    rng = np.random.default_rng({"mig": 0, "aig": 1}.get(style, 2))
+    queue = []
+    for n_bits in widths:
+        for op in ALL_OPS:
+            spec = get_op(op, n_bits)
+            ops = tuple(rng.integers(0, 1 << w, lanes).astype(np.uint64)
+                        for w in spec.operand_bits)
+            queue.append(BbopInstr(op, ops, n_bits))
+    return queue
+
+
+def table_channel_scaling(
+    chip_counts: Sequence[int] = CHIP_COUNTS,
+    n_banks: int = 4,
+    n_subarrays: int = 2,
+    lanes: int = 4096,
+    n_instrs: int = 32,
+    widths: Sequence[int] = (8, 16),
+    gate_lanes: int = 64,
+    gate_chips: int = 2,
+    gate_widths: Sequence[int] = (8, 16, 32),
+    out_json: str | None = "BENCH_channel.json",
+) -> Dict:
+    """Modeled curve + measured-vs-modeled calibration + transfer bound
+    + bit-exact gate."""
+    report: Dict = {
+        "config": {"chip_counts": list(chip_counts), "n_banks": n_banks,
+                   "n_subarrays": n_subarrays, "lanes": lanes,
+                   "n_instrs": n_instrs, "widths": list(widths),
+                   "channel_bw_gbs": DDR4.channel_bw_gbs},
+        "modeled": {},
+        "scaling": {},
+        "gate": {},
+    }
+
+    # -- modeled compute-side throughput curve (always 1/2/4 chips) --------
+    print("# channel_scaling/modeled: name,us_per_call,derived(gops)")
+    for op in OPS:
+        for n_bits in widths:
+            _, up = compile_op(op, n_bits)
+            base = channel_throughput_gops(
+                up, DDR4, n_chips=CHIP_COUNTS[0], n_banks=n_banks,
+                n_subarrays=n_subarrays)
+            for nc in CHIP_COUNTS:
+                gops = channel_throughput_gops(
+                    up, DDR4, n_chips=nc, n_banks=n_banks,
+                    n_subarrays=n_subarrays)
+                report["modeled"][f"{op}/{n_bits}b/chip{nc}"] = gops
+                print(f"model/{op}/{n_bits}b/chip{nc},0.00,{gops:.2f}"
+                      f"  # x{gops / base:.1f} vs chip{CHIP_COUNTS[0]}")
+
+    # -- measured vs modeled on a heterogeneous mix ------------------------
+    from repro.core.control_unit import TABLE_CACHE, trace_counts
+
+    print("# channel_scaling/dispatch: name,us_per_call,derived"
+          "(modeled_speedup_vs_sequential)")
+    for nc in chip_counts:
+        queue = _mix_queue(lanes, n_instrs, widths, seed=0)
+        channel = SimdramChannel(n_chips=nc, n_banks=n_banks,
+                                 n_subarrays=n_subarrays)
+        channel.dispatch(_mix_queue(lanes, n_instrs, widths, seed=0))  # warm
+        channel.reset_stats()
+        t0 = time.perf_counter()
+        channel_results = channel.dispatch(queue)
+        wall_us = (time.perf_counter() - t0) * 1e6
+        t_seq = time.perf_counter()
+        seq_results, chips = sequential_channel_dispatch(
+            _mix_queue(lanes, n_instrs, widths, seed=0),
+            n_chips=nc, n_banks=n_banks, n_subarrays=n_subarrays)
+        seq_wall_us = (time.perf_counter() - t_seq) * 1e6
+        _assert_bit_exact(channel_results, seq_results, f"mix/chip{nc}")
+        # compile-once replay gate: an identical dispatch must retrace
+        # nothing and resolve every super-round's tables from the cache
+        channel.reset_stats()
+        tr0, tc0 = trace_counts(), TABLE_CACHE.stats()
+        channel.dispatch(_mix_queue(lanes, n_instrs, widths, seed=0))
+        tr1, tc1 = trace_counts(), TABLE_CACHE.stats()
+        retraced = {k: tr1[k] - tr0[k] for k in tr1 if tr1[k] != tr0[k]}
+        if retraced:
+            raise SystemExit(
+                f"CHANNEL REPLAY CACHE MISS (chip{nc}): repeated dispatch "
+                f"retraced {retraced}")
+        if tc1["misses"] != tc0["misses"]:
+            raise SystemExit(
+                f"CHANNEL TABLE CACHE MISS (chip{nc}): repeated dispatch "
+                f"rebuilt command tables")
+        st = channel.stats
+        seq_latency_s = sum(c.stats.latency_s for c in chips)
+        row = {
+            "modeled_latency_s": st.latency_s,
+            "sequential_latency_s": seq_latency_s,
+            "modeled_speedup": seq_latency_s / max(st.latency_s, 1e-30),
+            "transfer_bytes": int(st.transfer_bytes),
+            "transfer_s": st.transfer_s,
+            "transfer_bound": st.transfer_bound,
+            "crossover_chips": (st.crossover_chips
+                                if st.crossover_chips != float("inf")
+                                else None),
+            "total_latency_s": st.total_latency_s,
+            "end_to_end_speedup": (
+                (seq_latency_s + st.transpose_s + st.transfer_s)
+                / max(st.total_latency_s, 1e-30)),
+            "measured_wall_us": wall_us,
+            "measured_seq_wall_us": seq_wall_us,
+            "measured_speedup": seq_wall_us / max(wall_us, 1e-30),
+            "measured_pack_us": st.pack_wall_s * 1e6,
+            "table_cache_hits_per_dispatch": tc1["hits"] - tc0["hits"],
+            "table_cache_misses_per_dispatch": (tc1["misses"]
+                                                - tc0["misses"]),
+            "new_traces_per_dispatch": sum(tr1.values())
+            - sum(tr0.values()),
+            "super_rounds": st.super_rounds,
+            "chip_rounds": sum(c.stats.rounds for c in channel.chips),
+            "imbalance": st.imbalance,
+            "utilization": [float(u) for u in st.utilization],
+            "throughput_gops": st.throughput_gops,
+            "sharded": channel.executor.sharded,
+            "devices": (int(channel.executor.mesh.devices.size)
+                        if channel.executor.sharded else 1),
+        }
+        report["scaling"][str(nc)] = row
+        print(f"channel/mix/chip{nc},{wall_us / len(queue):.0f},"
+              f"{row['modeled_speedup']:.2f}"
+              f"  # modeled {st.latency_s * 1e6:.1f} vs sequential "
+              f"{seq_latency_s * 1e6:.1f} us, transfer "
+              f"{st.transfer_s * 1e6:.1f} us "
+              f"(crossover ~{st.crossover_chips:.1f} chips), measured "
+              f"x{row['measured_speedup']:.2f}, imbalance "
+              f"{st.imbalance:.2f}, sharded={row['sharded']}")
+
+    # -- all-16-ops bit-exact gate, both styles, all gate widths -----------
+    for style in ("mig", "aig"):
+        queue = _gate_queue(style, gate_lanes, gate_widths)
+        channel = SimdramChannel(n_chips=gate_chips, n_banks=n_banks,
+                                 n_subarrays=n_subarrays, style=style)
+        t0 = time.perf_counter()
+        channel_results = channel.dispatch(queue)
+        gate_us = (time.perf_counter() - t0) * 1e6  # channel dispatch only
+        seq_results, _ = sequential_channel_dispatch(
+            _gate_queue(style, gate_lanes, gate_widths), n_chips=gate_chips,
+            n_banks=n_banks, n_subarrays=n_subarrays, style=style)
+        _assert_bit_exact(channel_results, seq_results, f"gate/{style}")
+        report["gate"][style] = {"ops": len(ALL_OPS),
+                                 "widths": list(gate_widths),
+                                 "bit_exact": True}
+        print(f"channel/gate/{style},{gate_us / len(queue):.0f},1.00"
+              f"  # {len(ALL_OPS)} ops x {list(gate_widths)}b bit-exact "
+              f"vs sequential chips")
+
+    if out_json:
+        with open(out_json, "w") as f:
+            json.dump(report, f, indent=2, sort_keys=True)
+        print(f"# wrote {out_json}")
+    return report
+
+
+if __name__ == "__main__":
+    import argparse
+
+    p = argparse.ArgumentParser()
+    p.add_argument("--smoke", action="store_true",
+                   help="fast CI configuration (1/2 chips, 64 lanes)")
+    p.add_argument("--json", default="BENCH_channel.json",
+                   help="output path for the channel bench report")
+    args = p.parse_args()
+    if args.smoke:
+        # gate widths {8, 16} only: 32b mul/div synthesis takes minutes
+        # (covered by the full sweep, like check_compaction --full)
+        table_channel_scaling(chip_counts=(1, 2), n_banks=2,
+                              n_subarrays=2, lanes=64, n_instrs=8,
+                              gate_lanes=32, gate_widths=(8, 16),
+                              out_json=args.json)
+    else:
+        table_channel_scaling(out_json=args.json)

@@ -1,0 +1,111 @@
+#!/usr/bin/env python
+"""Docs lint: every file path the documentation references must exist.
+
+Scans the documentation set (README.md, docs/ARCHITECTURE.md,
+examples/README.md) for backtick-quoted repo paths — `src/repro/...py`,
+`benchmarks/...py`, `scripts/...sh`, `docs/...md`, dotted module paths
+like `repro.core.channel`, and `python -m benchmarks.foo` invocations —
+and exits non-zero listing every reference that doesn't resolve to a
+real file.  This is what keeps the documentation layer honest as the
+code moves: rename a module without updating the docs and CI fails.
+
+Generated artifacts (BENCH_*.json) are exempt only if ALSO absent from
+the tree — if a doc names one and a checked-in copy exists, fine; if
+the doc names one that nothing produces, the reference still counts as
+checked because the benchmarks emit them at repo root during CI.
+
+Run from the repo root:  python scripts/check_docs.py
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+DOCS = ["README.md", "docs/ARCHITECTURE.md", "examples/README.md"]
+
+# path-looking backtick spans: something/with/slashes.ext or bare
+# top-level files with a known extension
+_PATH = re.compile(r"`([\w./-]+\.(?:py|md|sh|toml|json|yml))`")
+# dotted python module references: `repro.core.channel` / benchmarks.foo
+_MODULE = re.compile(r"`((?:repro|benchmarks)(?:\.\w+)+)`")
+# `python -m benchmarks.channel_scaling [args]` inside code fences
+_PYTHON_M = re.compile(r"python -m ([\w.]+)")
+# generated at bench time; allowed to be absent from a fresh checkout
+_GENERATED = re.compile(r"^BENCH_\w+\.json$")
+
+
+def _module_file(dotted: str):
+    """The .py file a dotted prefix resolves to, plus unresolved tail."""
+    parts = dotted.split(".")
+    for cut in range(len(parts), 0, -1):
+        rel = Path(*parts[:cut])
+        for base in (ROOT / "src", ROOT):
+            if (base / rel).with_suffix(".py").exists():
+                return (base / rel).with_suffix(".py"), parts[cut:]
+            if (base / rel / "__init__.py").exists():
+                return base / rel / "__init__.py", parts[cut:]
+    return None, parts
+
+
+def _module_exists(dotted: str, attr_ok: bool = False) -> bool:
+    """True when ``dotted`` names a real module — or, with ``attr_ok``,
+    a module attribute the module's source actually defines (catches
+    renamed functions/classes in `repro.core.foo.bar` references)."""
+    f, tail = _module_file(dotted)
+    if f is None:
+        return False
+    if not tail:
+        return True
+    if not attr_ok:
+        return False
+    return re.search(rf"\b{re.escape(tail[0])}\b", f.read_text()) is not None
+
+
+def check(doc: Path) -> list:
+    text = doc.read_text()
+    missing = []
+    for m in _PATH.finditer(text):
+        ref = m.group(1)
+        if _GENERATED.match(Path(ref).name):
+            continue
+        # repo-root-relative, or relative to the doc's own directory
+        # (examples/README.md says `quickstart.py` for a sibling file)
+        if not ((ROOT / ref).exists() or (doc.parent / ref).exists()):
+            missing.append((ref, "path"))
+    for m in _MODULE.finditer(text):
+        if not _module_exists(m.group(1), attr_ok=True):
+            missing.append((m.group(1), "module"))
+    for m in _PYTHON_M.finditer(text):
+        if m.group(1) in ("pytest",):
+            continue
+        if not _module_exists(m.group(1)):
+            missing.append((m.group(1), "python -m"))
+    return missing
+
+
+def main() -> int:
+    failed = False
+    for name in DOCS:
+        doc = ROOT / name
+        if not doc.exists():
+            print(f"MISSING DOC: {name}")
+            failed = True
+            continue
+        missing = check(doc)
+        for ref, kind in missing:
+            print(f"{name}: dangling {kind} reference `{ref}`")
+        failed = failed or bool(missing)
+        if not missing:
+            print(f"{name}: OK")
+    if failed:
+        print("DOCS LINT FAILED")
+        return 1
+    print("DOCS LINT OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -48,4 +48,18 @@ echo "== chip-scaling smoke bench (4 forced host devices) =="
 XLA_FLAGS=--xla_force_host_platform_device_count=4 \
     python -m benchmarks.chip_scaling --smoke --json BENCH_chip.json
 
+echo "== channel tests under real 2-D shard_map partitioning (8 forced devices) =="
+XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+    python -m pytest tests/test_channel.py -q
+
+echo "== channel-scaling smoke bench (8 forced host devices: 2-D mesh) =="
+# exits non-zero if channel dispatch diverges from sequential per-chip
+# execution (all 16 ops, MIG + AIG) or if a repeated dispatch retraces
+# XLA / rebuilds tables; BENCH_channel.json is a CI artifact
+XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+    python -m benchmarks.channel_scaling --smoke --json BENCH_channel.json
+
+echo "== docs lint (README/ARCHITECTURE references must resolve) =="
+python scripts/check_docs.py
+
 echo "CI OK"

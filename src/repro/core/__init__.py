@@ -4,7 +4,11 @@
 #
 # Execution stack, bottom-up:
 #   subarray.py      row-granular DRAM oracle (numpy, exact)
-#   control_unit.py  μProgram scan interpreter (one subarray)
-#   bank.py          bank-level batched engine (N subarrays, one vmap)
+#   control_unit.py  μProgram scan interpreter + the vmapped replay
+#                    ladder (subarray -> bank -> chip -> channel)
+#   bank.py          bank-level fused dispatcher (N subarrays, one vmap)
+#   chip.py          chip-level partitioned engine (banks, shard_map 1-D)
+#   channel.py       channel-level engine (chips, shard_map 2-D +
+#                    host-transfer bound)
 #   bitplane.py      TPU-native fused circuits (fast path)
 #   isa.py           bbop ISA surface + backend dispatch

@@ -656,6 +656,31 @@ class Bank:
                      lanes: Optional[Sequence[int]] = None) -> List[List[int]]:
         """Chunk instructions into fused waves.
 
+        Args:
+            queue: the full dispatch queue (indexed by the entries of
+                ``active`` — the chip/channel dispatchers pass their
+                GLOBAL queue with per-bank ``active`` subsets).
+            active: queue indices this bank actually executes, in queue
+                order; zero-lane instructions are excluded by the
+                caller.
+            stage: per-instruction dependency depth from
+                :func:`plan_queue` (a consumer's stage is strictly
+                greater than all its producers').
+            lanes: per-instruction lane counts from :func:`plan_queue`;
+                required for ``packing="reorder"`` (critical-path costs
+                need them), optional for the stage-bucketed packers.
+
+        Returns:
+            A list of waves, each a list of queue indices (≤
+            ``n_subarrays`` long) that replay in ONE fused interpreter
+            call.  Every instruction in ``active`` appears in exactly
+            one wave, and no wave contains an instruction whose ``Ref``
+            producer sits in the same or a later wave — so executing
+            waves in order always finds forwarded planes published.
+            The schedule never affects RESULTS (bit-exactness holds for
+            any valid wave order); it only affects modeled latency and
+            replay count.
+
         ``packing="reorder"`` (default) is cross-stage list scheduling:
         an instruction is *ready* once all its ``Ref`` producers sit in
         already-closed waves, so dataflow-independent consumers hoist

@@ -1,0 +1,502 @@
+"""Channel-level partitioned execution: N chips × M banks × K subarrays.
+
+The end-to-end SIMDRAM framework (Hajinazar et al., ASPLOS'21) projects
+near-linear throughput gains as more DRAM structures compute in
+parallel, *bounded by the host-side memory channel*: chips on a channel
+share nothing compute-side — each owns its banks, subarrays, and (here)
+its stacked command tables — but every horizontal operand and result
+crosses ONE shared link priced at ``cfg.channel_bw_gbs``.  This module
+reproduces that outermost tier on top of the PR 3/4 chip engine, keeping
+the per-chip replay path unchanged (PULSAR's scaling discipline) and
+widening only the dispatch:
+
+  - a :class:`SimdramChannel` owns ``n_chips``
+    :class:`~repro.core.chip.SimdramChip` instances and stacks their
+    per-round slabs into one ``(n_chips, n_banks, n_subarrays, n_rows,
+    n_words)`` array — one *super-round* replays every chip's round in a
+    single :func:`repro.core.control_unit.channel_replay` call,
+    ``shard_map``-ed over a 2-D ``("channel", "data")`` mesh when the
+    host has enough devices (chips over ``channel``, banks over
+    ``data`` — :func:`repro.distributed.pum.make_channel_executor`),
+    vmapped over chips otherwise;
+  - :meth:`SimdramChannel.dispatch` bin-packs Ref-connected chains onto
+    chips (chains stay chip-local — forwarded planes never cross chips,
+    let alone the channel), longest-processing-time-first by
+    :func:`repro.core.costmodel.instr_cost_s`; within each chip the
+    PR 3 bank partitioner and PR 4 wave schedulers take over unchanged,
+    and each super-round's stacked tables resolve from the compile-once
+    :data:`repro.core.control_unit.TABLE_CACHE` keyed by the whole
+    super-round's composition;
+  - :class:`ChannelStats` extends :class:`~repro.core.bank.BankStats`
+    with per-chip utilization, the host↔chip transfer model
+    (``transfer_bytes`` / ``transfer_s`` charged against
+    ``channel_bw_gbs`` — serialized across chips, because the link is
+    shared), and the transfer-bound crossover point
+    (:func:`repro.core.costmodel.transfer_crossover_chips`): the chip
+    count beyond which the channel, not compute, bounds the dispatch.
+
+Bit-exactness: channel dispatch == sequential per-chip
+``SimdramChip.dispatch`` == sequential per-bank == grouped baseline,
+property-tested in tests/test_channel.py and gated in
+benchmarks/channel_scaling.py across all 16 ops in both MIG and AIG
+styles, on both the 2-D shard_map executor and the vmap fallback.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .bank import (BankStats, BbopInstr, Ref, VerticalOperand, _Slot,
+                   cached_table, plan_queue)
+from .chip import SimdramChip, partition_queue
+from .control_unit import CMD_WIDTH, TABLE_CACHE
+from .costmodel import channel_transfer_bytes, transfer_crossover_chips
+from .timing import DDR4, DramConfig, channel_round_latency_s, host_transfer_s
+
+# chip-stats fields the channel mirrors by before/after diffing when it
+# delegates a super-round's packing/accounting/harvest to its chips
+_MIRROR = ("batches", "fused_batches", "elements", "aap", "ap", "energy_nj")
+_TRANSPOSE = ("transpositions_skipped", "transpose_s_saved", "transpose_s")
+
+
+@dataclass
+class ChannelStats(BankStats):
+    """Aggregate cost model for everything a :class:`SimdramChannel` ran.
+
+    Inherited fields aggregate over all chips (``n_subarrays`` is the
+    channel TOTAL, ``subarray_programs`` is flattened chip-major then
+    bank-major), with the same semantic refinement the chip made one
+    level down: ``latency_s`` models chips replaying *concurrently* —
+    each super-round charges its slowest chip's round — while
+    ``wall_s``/``pack_wall_s`` are the measured host-side counterparts.
+
+    The channel adds the transfer model: ``transfer_bytes`` is every
+    horizontal operand/result that crossed the host↔DRAM link, priced at
+    ``cfg.channel_bw_gbs`` into ``transfer_s``
+    (:func:`repro.core.timing.host_transfer_s`).  The link is shared by
+    all chips, so ``transfer_s`` does not shrink as chips are added —
+    :attr:`total_latency_s` folds it in, and :attr:`crossover_chips`
+    reports the chip count beyond which it dominates.
+    """
+
+    n_chips: int = 1
+    n_banks: int = 1
+    super_rounds: int = 0                        # stacked channel replays
+    transfer_bytes: int = 0                      # host↔chip traffic modeled
+    transfer_s: float = 0.0                      # … priced at channel_bw_gbs
+    chip_busy_s: np.ndarray = field(default=None)  # type: ignore
+
+    def __post_init__(self):
+        super().__post_init__()
+        if self.chip_busy_s is None:
+            self.chip_busy_s = np.zeros(self.n_chips)
+
+    @property
+    def chip_programs(self) -> np.ndarray:
+        """Instructions executed per chip (the scheduler's balance)."""
+        return self.subarray_programs.reshape(self.n_chips, -1).sum(axis=1)
+
+    @property
+    def utilization(self) -> np.ndarray:
+        """Per-chip busy fraction of the channel's modeled wall-clock."""
+        if not self.latency_s:
+            return np.zeros(self.n_chips)
+        return self.chip_busy_s / self.latency_s
+
+    @property
+    def imbalance(self) -> float:
+        """Slowest chip's busy time over the mean — 1.0 is a perfectly
+        balanced schedule, n_chips is all work on one chip."""
+        if not self.chip_busy_s.any():
+            return 0.0
+        return float(self.chip_busy_s.max() / self.chip_busy_s.mean())
+
+    @property
+    def total_latency_s(self) -> float:
+        """Replay latency + paid transpositions + host↔chip transfers —
+        the end-to-end modeled wall-clock this tier is bounded by.  The
+        transfer term is what keeps the multi-chip curve sub-linear for
+        workloads whose data must cross the shared channel."""
+        return self.latency_s + self.transpose_s + self.transfer_s
+
+    @property
+    def transfer_bound(self) -> bool:
+        """True when the shared channel costs more than compute — adding
+        chips past this point cannot help."""
+        return self.transfer_s >= self.latency_s > 0.0
+
+    @property
+    def crossover_chips(self) -> float:
+        """The transfer-bound crossover point for THIS dispatch's mix:
+        serial compute over ``transfer_s``
+        (:func:`repro.core.costmodel.transfer_crossover_chips`)."""
+        return transfer_crossover_chips(
+            float(self.chip_busy_s.sum()), self.transfer_s)
+
+    def as_dict(self) -> Dict[str, float]:
+        d = super().as_dict()
+        d.update({
+            "n_chips": self.n_chips,
+            "n_banks": self.n_banks,
+            "super_rounds": self.super_rounds,
+            "transfer_bytes": int(self.transfer_bytes),
+            "transfer_s": self.transfer_s,
+            "transfer_bound": self.transfer_bound,
+            "crossover_chips": self.crossover_chips,
+            "chip_busy_s": [float(x) for x in self.chip_busy_s],
+            "chip_programs": [int(x) for x in self.chip_programs],
+            "utilization": [float(x) for x in self.utilization],
+            "imbalance": self.imbalance,
+        })
+        return d
+
+
+def sequential_channel_dispatch(
+    queue: Sequence[BbopInstr], n_chips: int = 2, n_banks: int = 4,
+    n_subarrays: int = 2, cfg: DramConfig = DDR4, style: str = "mig",
+    packing: str = "reorder",
+):
+    """The no-channel baseline: the *same* chip partition a
+    :class:`SimdramChannel` would use, executed one chip at a time on
+    separate :class:`~repro.core.chip.SimdramChip` instances (vmap
+    fallback — no cross-chip stacking).
+
+    Returns ``(results, chips)`` — results in queue order (the
+    bit-exactness reference for channel dispatch), and the per-chip
+    ``SimdramChip`` objects whose summed ``stats.latency_s`` is the
+    serialized cost the channel's concurrent-chips model (max per
+    super-round) improves on.
+    """
+    queue = list(queue)
+    results: List = [None] * len(queue)
+    chips = [SimdramChip(n_banks=n_banks, n_subarrays=n_subarrays, cfg=cfg,
+                         style=style, packing=packing, use_shard_map=False)
+             for _ in range(n_chips)]
+    if not queue:
+        return results, chips
+    lanes, _, _ = plan_queue(queue, style)
+    active = [i for i in range(len(queue)) if lanes[i] > 0]
+    for i in range(len(queue)):
+        if lanes[i] == 0:
+            results[i] = chips[0].banks[0]._empty_result(queue[i])
+    chip_of = partition_queue(queue, active, lanes, n_chips, cfg, style)
+    for c, chip in enumerate(chips):
+        idxs = [i for i in active if chip_of[i] == c]
+        if not idxs:
+            continue
+        remap = {qi: j for j, qi in enumerate(idxs)}
+        sub = [
+            dataclasses.replace(
+                queue[qi],
+                operands=tuple(
+                    Ref(remap[o.producer], o.out) if isinstance(o, Ref)
+                    else o
+                    for o in queue[qi].operands))
+            for qi in idxs
+        ]
+        for qi, out in zip(idxs, chip.dispatch(sub)):
+            results[qi] = out
+    return results, chips
+
+
+class SimdramChannel:
+    """``n_chips`` chips × ``n_banks`` banks × ``n_subarrays`` subarrays,
+    one stacked replay per super-round.
+
+    All chips run the PR 3/4 stacked-round engine unchanged; the channel
+    stacks one chip round per chip into each super-round.
+    ``mesh``/``use_shard_map`` control the executor (see
+    :func:`repro.distributed.pum.make_channel_executor`): by default
+    chip slabs shard over the ``channel`` mesh axis and bank slabs over
+    ``data`` whenever a multi-device 2-D mesh fits, falling back to a
+    single-device vmap over chips otherwise — the two are bit-exact.
+    """
+
+    def __init__(self, n_chips: int = 2, n_banks: int = 4,
+                 n_subarrays: int = 2, cfg: DramConfig = DDR4,
+                 style: str = "mig", fuse_ratio: int = 32,
+                 packing: str = "reorder", mesh=None,
+                 use_shard_map: Optional[bool] = None):
+        if n_chips < 1:
+            raise ValueError("n_chips must be >= 1")
+        from repro.distributed.pum import make_channel_executor
+        self.n_chips = n_chips
+        self.n_banks = n_banks
+        self.n_subarrays = n_subarrays
+        self.cfg = cfg
+        self.style = style
+        # per-chip engines never submit their own replays here (the
+        # channel stacks their packed rounds), so they take the vmap
+        # executor — the channel's executor does the real partitioning
+        self.chips = [
+            SimdramChip(n_banks=n_banks, n_subarrays=n_subarrays, cfg=cfg,
+                        style=style, fuse_ratio=fuse_ratio, packing=packing,
+                        use_shard_map=False)
+            for _ in range(n_chips)
+        ]
+        self.executor = make_channel_executor(
+            n_chips, n_banks, mesh=mesh, use_shard_map=use_shard_map)
+        self.stats = ChannelStats(
+            n_subarrays=n_chips * n_banks * n_subarrays,
+            n_chips=n_chips, n_banks=n_banks)
+
+    # -- scheduling --------------------------------------------------------
+    def _partition(self, queue, active, lanes) -> Dict[int, int]:
+        """Chip assignment: Ref-connected components are indivisible
+        (forwarded planes never cross chips), LPT bin-packed by
+        :func:`repro.core.costmodel.instr_cost_s` — the same rule the
+        chip applies to banks one level down."""
+        return partition_queue(queue, active, lanes, self.n_chips,
+                               self.cfg, self.style)
+
+    def _charge_transfers(self, queue, active, lanes):
+        """Model the host↔chip traffic this queue forces over the shared
+        channel: every horizontal operand in, every horizontal result
+        out (:func:`repro.core.costmodel.channel_transfer_bytes`), priced
+        at ``cfg.channel_bw_gbs`` — serialized regardless of chip count,
+        because chips share the one link."""
+        nbytes = 0
+        for i in active:
+            ins = queue[i]
+            spec, _, _ = cached_table(ins.op, ins.n_bits, self.style)
+            in_bits = [w for o, w in zip(ins.operands, spec.operand_bits)
+                       if not isinstance(o, (Ref, VerticalOperand))]
+            out_bits = [] if ins.keep_vertical else list(spec.out_bits)
+            nbytes += channel_transfer_bytes(lanes[i], in_bits, out_bits)
+        self.stats.transfer_bytes += nbytes
+        self.stats.transfer_s += host_transfer_s(nbytes, self.cfg)
+
+    # -- dispatch ----------------------------------------------------------
+    def dispatch(self, queue: Sequence[BbopInstr]) -> List:
+        """Drain a bbop queue across all chips.
+
+        Args:
+            queue: sequence of :class:`~repro.core.bank.BbopInstr`;
+                ``Ref`` operands must point at earlier entries, and
+                Ref-connected chains stay chip-local.
+
+        Returns:
+            One result per instruction, in queue order (same result
+            forms as :meth:`repro.core.chip.SimdramChip.dispatch`).
+
+        Costs accumulate in :attr:`stats` (a :class:`ChannelStats`) and
+        recursively in each chip's / bank's own stats.  Host packing of
+        super-round *k+1* overlaps the device replay of super-round *k*.
+
+        Bit-exactness guarantee: results are identical to
+        :func:`sequential_channel_dispatch` (same partition, one chip at
+        a time) for every op, width, and style, on both the 2-D
+        shard_map executor and the vmap fallback — gated in
+        benchmarks/channel_scaling.py and tests/test_channel.py."""
+        queue = list(queue)
+        results: List = [None] * len(queue)
+        if not queue:
+            return results           # clean no-op: stats stay zeroed
+        t0 = time.perf_counter()
+        self.stats.bbops += len(queue)
+        lanes, stage, needed = plan_queue(queue, self.style)
+        planes_cache: Dict[Tuple[int, int], np.ndarray] = {}
+        active = []
+        for i in range(len(queue)):
+            if lanes[i] == 0:
+                self.chips[0].banks[0]._skip_zero_lane(
+                    queue, i, needed, planes_cache, results)
+            else:
+                active.append(i)
+        if not active:               # all-zero-lane queue: no replay
+            self.stats.wall_s += time.perf_counter() - t0
+            return results
+
+        self._charge_transfers(queue, active, lanes)
+        chip_of = self._partition(queue, active, lanes)
+        waves: List[List[List[List[int]]]] = []   # [chip][bank][round]
+        for c, chip in enumerate(self.chips):
+            idxs = [i for i in active if chip_of[i] == c]
+            for i in idxs:
+                chip.stats.bbops += 1
+            bank_of = chip._partition(queue, idxs, lanes) if idxs else {}
+            for i in idxs:
+                chip.banks[bank_of[i]].stats.bbops += 1
+            waves.append([
+                chip.banks[b]._build_waves(
+                    queue, [i for i in idxs if bank_of[i] == b], stage,
+                    lanes)
+                for b in range(self.n_banks)
+            ])
+        n_super = max(len(w) for per_chip in waves for w in per_chip)
+        pending: Optional[Tuple[List, jnp.ndarray]] = None
+        for r in range(n_super):
+            round_by_chip = []
+            for c in range(self.n_chips):
+                rw = [(b, waves[c][b][r]) for b in range(self.n_banks)
+                      if r < len(waves[c][b])]
+                if rw:
+                    round_by_chip.append((c, rw))
+            if pending is not None:
+                # stage barrier: a super-round forwarding planes from
+                # the still-in-flight one drains it before packing
+                in_flight = {e.qi for _, ebb in pending[0]
+                             for _, ents in ebb for e in ents}
+                if any(isinstance(o, Ref) and o.producer in in_flight
+                       for _, rw in round_by_chip
+                       for _, wave in rw
+                       for i in wave for o in queue[i].operands):
+                    self._harvest_super_round(queue, pending, planes_cache,
+                                              needed, results)
+                    pending = None
+            chips_entries, fut = self._pack_super_round(
+                queue, round_by_chip, lanes, planes_cache)
+            self._account_super_round(queue, chips_entries)
+            if pending is not None:
+                # double buffering: super-round k harvests only after
+                # super-round k+1 was packed and submitted
+                self._harvest_super_round(queue, pending, planes_cache,
+                                          needed, results)
+            pending = (chips_entries, fut)
+        if pending is not None:
+            jax.block_until_ready(pending[1])     # drain the pipeline
+            self._harvest_super_round(queue, pending, planes_cache, needed,
+                                      results)
+        self.stats.wall_s += time.perf_counter() - t0
+        return results
+
+    def _pack_super_round(self, queue, round_by_chip, lanes, planes_cache):
+        """Stack one chip round per participating chip into the channel
+        arrays.
+
+        Every chip's slab is padded to the super-round's max (rows,
+        cmds, cols) — NOP commands and zero rows are inert — so a single
+        executor call replays all chips; idle chips stay all-NOP.  The
+        stacked (n_chips, n_banks, n_subarrays, n_cmds, 13) tables come
+        from the compile-once
+        :data:`repro.core.control_unit.TABLE_CACHE`, keyed by the whole
+        super-round's composition: a repeated super-round pays zero
+        host-side table work."""
+        t_pack = time.perf_counter()
+        dims = [self.chips[c]._round_dims(queue, rw, lanes)
+                for c, rw in round_by_chip]
+        n_rows = max(d[0] for d in dims)
+        n_cmds = max(d[1] for d in dims)
+        cols = max(d[2] for d in dims)
+        states = np.zeros(
+            (self.n_chips, self.n_banks, self.n_subarrays, n_rows,
+             cols // 32), np.uint32)
+        chips_entries: List[Tuple[int, List[Tuple[int, List[_Slot]]]]] = []
+        chip_keys: List = [None] * self.n_chips
+        for c, rw in round_by_chip:
+            chip = self.chips[c]
+            snap = [getattr(chip.stats, f) for f in _TRANSPOSE]
+            st, bank_keys, entries_by_bank = chip._pack_round_states(
+                queue, rw, lanes, planes_cache, n_rows, n_cmds, cols)
+            for f, v0 in zip(_TRANSPOSE, snap):
+                setattr(self.stats, f,
+                        getattr(self.stats, f)
+                        + getattr(chip.stats, f) - v0)
+            states[c] = st
+            chip_keys[c] = tuple(bank_keys)
+            chips_entries.append((c, entries_by_bank))
+        tables = TABLE_CACHE.get(
+            ("channel", self.n_chips, self.n_banks, self.n_subarrays,
+             n_cmds, tuple(chip_keys)),
+            lambda: self._build_super_round_tables(chip_keys, n_cmds))
+        pack_s = time.perf_counter() - t_pack
+        self.stats.pack_wall_s += pack_s
+        for c, _ in round_by_chip:
+            self.chips[c].stats.pack_wall_s += pack_s / len(round_by_chip)
+        fut = self.executor.run(jnp.asarray(states), tables)
+        return chips_entries, fut
+
+    def _build_super_round_tables(self, chip_keys, n_cmds: int) -> np.ndarray:
+        """Materialize one super-round's stacked tables (TABLE_CACHE
+        build function — runs once per distinct composition)."""
+        out = np.zeros(
+            (self.n_chips, self.n_banks, self.n_subarrays, n_cmds,
+             CMD_WIDTH), np.int32)
+        for c, keys in enumerate(chip_keys):
+            if keys is None:
+                continue
+            out[c] = self.chips[c]._build_round_tables(list(keys), n_cmds)
+        return out
+
+    def _account_super_round(self, queue, chips_entries):
+        """Charge one super-round: each chip's round accounts on the
+        chip (and its banks) via the unchanged chip-level rule, while
+        the channel charges the super-round at
+        :func:`repro.core.timing.channel_round_latency_s` — the max
+        across concurrently-replaying chips, priced from the same
+        ``bank_waves`` the chip rule used (one cost source, so the
+        calibration chain bank → chip → channel never
+        desynchronizes: the per-chip delta mirrored into
+        ``chip_busy_s`` equals that chip's term of the max)."""
+        st = self.stats
+        st.super_rounds += 1
+        per_chip = self.n_banks * self.n_subarrays
+        chip_rounds = []
+        for c, entries_by_bank in chips_entries:
+            chip = self.chips[c]
+            snap = [getattr(chip.stats, f) for f in _MIRROR]
+            lat0 = chip.stats.latency_s
+            progs0 = chip.stats.subarray_programs.copy()
+            bank_waves = chip._account_round(queue, entries_by_bank)
+            for f, v0 in zip(_MIRROR, snap):
+                setattr(st, f, getattr(st, f) + getattr(chip.stats, f) - v0)
+            st.chip_busy_s[c] += chip.stats.latency_s - lat0
+            st.subarray_programs[c * per_chip:(c + 1) * per_chip] += (
+                chip.stats.subarray_programs - progs0)
+            chip_rounds.append(bank_waves)
+        st.latency_s += channel_round_latency_s(chip_rounds, self.cfg)
+
+    def _harvest_super_round(self, queue, pending, planes_cache, needed,
+                             results):
+        """Materialize one completed super-round, chip slab by chip slab
+        (forwarded planes publish per chip — chains are chip-local)."""
+        chips_entries, fut = pending
+        out = np.asarray(fut)
+        for c, entries_by_bank in chips_entries:
+            chip = self.chips[c]
+            snap = [getattr(chip.stats, f) for f in _TRANSPOSE]
+            chip._harvest_round(queue, (entries_by_bank, out[c]),
+                                planes_cache, needed, results)
+            for f, v0 in zip(_TRANSPOSE, snap):
+                setattr(self.stats, f,
+                        getattr(self.stats, f)
+                        + getattr(chip.stats, f) - v0)
+
+    # -- ISA front-end -----------------------------------------------------
+    def bbop(self, name: str, *operands, n_bits: int,
+             signed_out: bool = False):
+        """One bbop whose lanes span the whole channel: elements split
+        into contiguous chunks, one per (chip, bank, subarray) slot, and
+        drain in (ideally) one super-round."""
+        arrs = [np.asarray(o) for o in operands]
+        n = arrs[0].shape[-1]
+        if n == 0:
+            return self.dispatch(
+                [BbopInstr(name, tuple(arrs), n_bits,
+                           signed_out=signed_out)])[0]
+        slots = self.n_chips * self.n_banks * self.n_subarrays
+        per = max(1, -(-n // slots))
+        queue = [
+            BbopInstr(name, tuple(a[..., s: s + per] for a in arrs), n_bits,
+                      signed_out=signed_out)
+            for s in range(0, n, per)
+        ]
+        results = self.dispatch(queue)
+        if isinstance(results[0], tuple):
+            return tuple(np.concatenate([r[i] for r in results], axis=-1)
+                         for i in range(len(results[0])))
+        return np.concatenate(results, axis=-1)
+
+    def reset_stats(self):
+        self.stats = ChannelStats(
+            n_subarrays=self.n_chips * self.n_banks * self.n_subarrays,
+            n_chips=self.n_chips, n_banks=self.n_banks)
+        for chip in self.chips:
+            chip.reset_stats()

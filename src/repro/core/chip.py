@@ -233,10 +233,33 @@ class SimdramChip:
 
     # -- dispatch ----------------------------------------------------------
     def dispatch(self, queue: Sequence[BbopInstr]) -> List:
-        """Drain a bbop queue across all banks; results come back in
-        queue order, costs accumulate in :attr:`stats` (chip-level) and
-        each bank's own stats.  Host packing of round *k+1* overlaps the
-        device replay of round *k*, exactly like the bank dispatcher."""
+        """Drain a bbop queue across all banks.
+
+        Args:
+            queue: sequence of :class:`~repro.core.bank.BbopInstr`.
+                ``Ref`` operands must point at earlier queue entries;
+                Ref-connected chains are scheduled as indivisible units
+                and never split across banks (forwarded bit-planes stay
+                bank-local).
+
+        Returns:
+            One result per instruction, in queue order: an int64 array
+            per output (tuple for multi-output ops), or
+            :class:`~repro.core.bank.VerticalOperand` planes when the
+            instruction set ``keep_vertical=True``.
+
+        Costs accumulate in :attr:`stats` (a :class:`ChipStats`: modeled
+        ``latency_s`` charges the slowest bank per round — banks replay
+        concurrently — while ``wall_s``/``pack_wall_s`` record measured
+        host time) and in each participating bank's own stats.  Host
+        packing of round *k+1* overlaps the device replay of round *k*,
+        exactly like the bank dispatcher.
+
+        Bit-exactness guarantee: results are identical to
+        :func:`sequential_dispatch` (same partition, one bank at a time)
+        and to the grouped single-bank baseline, for every op, width,
+        style, and executor (shard_map or vmap fallback) — gated in
+        benchmarks/chip_scaling.py and tests/test_chip.py."""
         queue = list(queue)
         results: List = [None] * len(queue)
         if not queue:
@@ -295,22 +318,28 @@ class SimdramChip:
         self.stats.wall_s += time.perf_counter() - t0
         return results
 
-    def _pack_round(self, queue, round_waves, lanes, planes_cache):
-        """Stack one wave per participating bank into the chip arrays.
-
-        Every bank's slab is padded to the round's max (rows, cmds, cols)
-        — NOP commands and zero rows are inert — so a single executor
-        call replays all banks; idle banks stay all-NOP.  The stacked
-        (n_banks, n_subarrays, n_cmds, 13) command tables come from the
-        compile-once :data:`repro.core.control_unit.TABLE_CACHE`, keyed
-        by the whole round's composition: a repeated round pays zero
-        host-side table work."""
-        t_pack = time.perf_counter()
+    def _round_dims(self, queue, round_waves, lanes) -> Tuple[int, int, int]:
+        """(n_rows, n_cmds, cols) ONE chip round needs — the max of its
+        participating banks' wave dims.  The channel-level dispatcher
+        maxes these across chips so every chip's round packs into one
+        stacked (n_chips, n_banks, n_subarrays, ...) super-round."""
         dims = [self.banks[b]._wave_dims(queue, wave, lanes)
                 for b, wave in round_waves]
-        n_rows = max(d[0] for d in dims)
-        n_cmds = max(d[1] for d in dims)
-        cols = max(d[2] for d in dims)
+        return (max(d[0] for d in dims), max(d[1] for d in dims),
+                max(d[2] for d in dims))
+
+    def _pack_round_states(self, queue, round_waves, lanes, planes_cache,
+                           n_rows: int, n_cmds: int, cols: int):
+        """Pack one chip round's state slab at the given dims (NOP
+        commands and zero rows are inert; idle banks stay all-NOP).
+
+        Returns ``(states, bank_keys, entries_by_bank)`` — the raw
+        (n_banks, n_subarrays, n_rows, n_words) array, the per-bank
+        TABLE_CACHE wave keys, and the per-bank slot entries — without
+        resolving tables or submitting a replay, so the channel
+        dispatcher can stack several chips' rounds into one super-round
+        replay.  Bank-level transpose savings/payments accrued while
+        packing are mirrored into this chip's stats."""
         states = np.zeros(
             (self.n_banks, self.n_subarrays, n_rows, cols // 32), np.uint32)
         entries_by_bank: List[Tuple[int, List[_Slot]]] = []
@@ -331,6 +360,22 @@ class SimdramChip:
             states[b] = st
             bank_keys[b] = wave_key
             entries_by_bank.append((b, entries))
+        return states, bank_keys, entries_by_bank
+
+    def _pack_round(self, queue, round_waves, lanes, planes_cache):
+        """Stack one wave per participating bank into the chip arrays.
+
+        Every bank's slab is padded to the round's max (rows, cmds, cols)
+        — NOP commands and zero rows are inert — so a single executor
+        call replays all banks; idle banks stay all-NOP.  The stacked
+        (n_banks, n_subarrays, n_cmds, 13) command tables come from the
+        compile-once :data:`repro.core.control_unit.TABLE_CACHE`, keyed
+        by the whole round's composition: a repeated round pays zero
+        host-side table work."""
+        t_pack = time.perf_counter()
+        n_rows, n_cmds, cols = self._round_dims(queue, round_waves, lanes)
+        states, bank_keys, entries_by_bank = self._pack_round_states(
+            queue, round_waves, lanes, planes_cache, n_rows, n_cmds, cols)
         tables = TABLE_CACHE.get(
             ("chip", self.n_banks, self.n_subarrays, n_cmds,
              tuple(bank_keys)),
@@ -361,7 +406,9 @@ class SimdramChip:
         max across banks — banks replay concurrently.  All costs come
         from :func:`repro.core.bank.wave_cost`, the same single source
         the bank-level stats use (the calibration pair must never
-        desynchronize)."""
+        desynchronize).  Returns the round's ``bank_waves`` so the
+        channel-level dispatcher can apply the same max rule one tier up
+        (:func:`repro.core.timing.channel_round_latency_s`)."""
         st = self.stats
         st.rounds += 1
         bank_waves = []
@@ -377,6 +424,7 @@ class SimdramChip:
                 st.subarray_programs[b * self.n_subarrays + e.sid] += 1
             bank_waves.append((c.uprogs, c.invocations))
         st.latency_s += chip_round_latency_s(bank_waves, self.cfg)
+        return bank_waves
 
     def _harvest_round(self, queue, pending, planes_cache, needed, results):
         """Materialize one completed chip round, bank slab by bank slab

@@ -283,6 +283,7 @@ def trace_counts() -> Dict[str, int]:
         "batched": batched_interpreter()._cache_size(),
         "hetero": hetero_batched_interpreter()._cache_size(),
         "chip": chip_batched_interpreter()._cache_size(),
+        "channel": channel_batched_interpreter()._cache_size(),
     }
 
 
@@ -357,3 +358,26 @@ def chip_batched_interpreter():
     the bank count doesn't divide the mesh).  Bit-exact against the
     sharded executor: both run the same scan per (bank, subarray)."""
     return jax.jit(chip_replay)
+
+
+def channel_replay(states: jnp.ndarray, tables: jnp.ndarray) -> jnp.ndarray:
+    """Un-jitted channel-level replay body: (n_chips, n_banks,
+    n_subarrays, n_rows, n_words) states × (n_chips, n_banks,
+    n_subarrays, n_cmds, 13) tables — one more vmapped axis over
+    :func:`chip_replay`'s.  Chips share nothing (each owns its banks'
+    states and tables), so the chip axis is embarrassingly parallel
+    exactly like the bank axis one level down — which is what lets
+    :mod:`repro.distributed.pum` ``shard_map`` the stack over a 2-D
+    ``("channel", "data")`` mesh: chip slabs split across the
+    ``channel`` axis, each chip's bank slabs across ``data``."""
+
+    return jax.vmap(chip_replay)(states, tables)
+
+
+@functools.lru_cache(maxsize=1)
+def channel_batched_interpreter():
+    """Jitted single-device :func:`channel_replay` — the vmap-over-chips
+    fallback the channel dispatcher uses when no multi-device 2-D mesh
+    fits.  Bit-exact against the sharded executor: both run the same
+    scan per (chip, bank, subarray)."""
+    return jax.jit(channel_replay)

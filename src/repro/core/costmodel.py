@@ -17,7 +17,8 @@ from dataclasses import dataclass, replace
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from .isa import compile_op
-from .timing import DDR4, CPU_BASELINE, DramConfig, HostConfig, host_throughput_gops, uprogram_latency_s
+from .timing import (DDR4, CPU_BASELINE, DramConfig, HostConfig,
+                     host_throughput_gops, uprogram_latency_s)
 from .transpose import transpose_cost_s
 
 
@@ -63,6 +64,33 @@ def instr_cost_s(
     _, uprog = compile_op(op, n_bits, style)
     invs = max(1, -(-lanes // cfg.columns_per_subarray))
     return invs * uprogram_latency_s(uprog, cfg)
+
+
+def channel_transfer_bytes(
+    n_elems: int, horiz_in_bits: Sequence[int], horiz_out_bits: Sequence[int]
+) -> int:
+    """Bytes ONE instruction moves across the host↔DRAM channel: every
+    horizontal operand crosses once on entry, every horizontal result
+    once on exit.  ``Ref``-forwarded and ``VerticalOperand`` inputs and
+    ``keep_vertical`` outputs stay PuM-resident and move nothing — pass
+    only the widths that actually cross.  The channel dispatcher
+    (:meth:`repro.core.channel.SimdramChannel.dispatch`) sums this over
+    the queue and prices it with
+    :func:`repro.core.timing.host_transfer_s`."""
+    bits = n_elems * (sum(horiz_in_bits) + sum(horiz_out_bits))
+    return -(-bits // 8)
+
+
+def transfer_crossover_chips(compute_serial_s: float,
+                             transfer_s: float) -> float:
+    """The transfer-bound crossover point: with compute spread over *n*
+    chips taking ``compute_serial_s / n`` while the shared channel still
+    takes ``transfer_s``, adding chips beyond this count no longer helps
+    — the channel, not compute, bounds the dispatch.  ``inf`` when the
+    queue moves nothing across the channel (fully forwarded chains)."""
+    if transfer_s <= 0.0:
+        return float("inf")
+    return compute_serial_s / transfer_s
 
 
 def critical_path_s(

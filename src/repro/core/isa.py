@@ -51,13 +51,30 @@ def compile_op(name: str, n_bits: int, style: str = "mig",
                compact: bool = True) -> Tuple[OpSpec, UProgram]:
     """Steps 1+2 for one op: circuit -> optimized MIG -> μProgram.
 
-    ``style="mig"`` is the SIMDRAM pipeline; ``style="aig"`` compiles the
-    AND/OR/NOT description (the Ambit baseline executes this program).
-    ``compact=True`` (default) runs the Step-2.5 peephole
-    (:func:`repro.core.synthesis.compact`) over the allocated command
-    stream — removal-only, bit-exact, activation count never increases;
-    ``compact=False`` keeps the raw allocator output (the compaction
-    gates compare the two).
+    Args:
+        name: operation name from :mod:`repro.core.ops_library`
+            (``get_op`` raises on unknown names).
+        n_bits: element width the μProgram computes over.
+        style: ``"mig"`` is the SIMDRAM pipeline (MAJ/NOT synthesis);
+            ``"aig"`` compiles the AND/OR/NOT description (the Ambit
+            baseline executes this program).
+        compact: ``True`` (default) runs the Step-2.5 peephole
+            (:func:`repro.core.synthesis.compact`) over the allocated
+            command stream; ``False`` keeps the raw allocator output
+            (the compaction gates compare the two).
+
+    Returns:
+        ``(spec, uprog)`` — the op's :class:`~repro.core.ops_library
+        .OpSpec` (operand/output widths, oracle) and the allocated
+        :class:`~repro.core.uprogram.UProgram` ready for
+        :func:`repro.core.control_unit.encode_uprogram`.
+
+    Bit-exactness guarantee: compaction is removal-only — the compacted
+    program computes the same outputs as the uncompacted one on the
+    DRAM-faithful oracle for every op × width × style, its
+    ``n_activations`` never increases, and the RowHammer same-row
+    activation-streak bound never worsens (gated library-wide in
+    scripts/check_compaction.py).
 
     Thin normalizing wrapper: lru_cache keys positional and keyword
     call forms separately, so defaults are resolved here and the cached
@@ -222,12 +239,33 @@ class SimdramDevice:
         return outs[0] if len(outs) == 1 else tuple(outs)
 
     def dispatch(self, queue) -> List:
-        """Drain a :class:`repro.core.bank.BbopInstr` queue through the
-        fused dataflow dispatcher (heterogeneous ops fuse into one
-        replay per wave; ``Ref`` operands forward vertically) — the
-        chip-level partitioned engine when ``backend="chip"``, the bank
-        engine otherwise.  Per-instruction costs are appended to
-        :attr:`calls`."""
+        """Drain a queue of bbops through the fused dataflow dispatcher.
+
+        Args:
+            queue: iterable of :class:`repro.core.bank.BbopInstr`
+                (materialized to a list, so one-shot iterators are
+                fine).  ``Ref`` operands must point at earlier entries;
+                heterogeneous ops fuse into one replay per wave and
+                ``Ref``/``VerticalOperand`` operands forward vertically.
+
+        Returns:
+            One result per instruction in queue order — an int64 array
+            per output (tuple for multi-output ops), or
+            :class:`repro.core.bank.VerticalOperand` for
+            ``keep_vertical`` instructions.
+
+        Routing: the chip-level partitioned engine when
+        ``backend="chip"`` (``cfg.n_banks`` banks sharded over the
+        ``data`` mesh axis), the bank engine otherwise; either engine
+        accumulates its own stats object (``self.chip().stats`` /
+        ``self.bank().stats``), and one :class:`CallStats` per
+        instruction is appended to :attr:`calls` (the device-level
+        μProgram cost model, independent of the engine's wave fusion).
+
+        Bit-exactness guarantee: every backend implements identical
+        bbop semantics — results match the grouped single-bank baseline
+        and the subarray-level DRAM oracle, cross-checked in
+        tests/test_fused_dispatch.py and tests/test_chip.py."""
         from .bank import plan_queue
         queue = list(queue)     # tolerate iterator queues
         engine = self.chip() if self.backend == "chip" else self.bank()

@@ -127,6 +127,45 @@ def chip_throughput_gops(
     return bank_throughput_gops(up, cfg, n_subarrays=n_banks * n_subarrays)
 
 
+# --- channel-level parallel replay (repro.core.channel engine) ---------------
+
+def host_transfer_s(n_bytes: float, cfg: DramConfig = DDR4) -> float:
+    """Modeled seconds ``n_bytes`` of host↔DRAM traffic occupy the
+    memory channel (``cfg.channel_bw_gbs``, GB/s).  All chips on a
+    channel share this one link, so the cost does NOT shrink as chips
+    are added — it is the end-to-end framework's transfer bound, the
+    term that caps multi-chip speedup for workloads whose operands and
+    results must cross the channel horizontally."""
+    return n_bytes / (cfg.channel_bw_gbs * 1e9)
+
+
+def channel_round_latency_s(chip_rounds, cfg: DramConfig = DDR4) -> float:
+    """Wall-clock of ONE channel super-round: every chip replays its own
+    chip round concurrently, so the super-round costs the *slowest
+    chip's* round — which itself costs its slowest bank's wave
+    (:func:`chip_round_latency_s`).  ``chip_rounds`` is a list of
+    ``bank_waves`` lists, one per participating chip (each in the form
+    :func:`chip_round_latency_s` takes)."""
+    if not chip_rounds:
+        return 0.0
+    return max(chip_round_latency_s(bw, cfg) for bw in chip_rounds)
+
+
+def channel_throughput_gops(
+    up: UProgram, cfg: DramConfig = DDR4, n_chips: int = 1,
+    n_banks: int = 1, n_subarrays: int = 1,
+) -> float:
+    """Compute-side throughput of ``n_chips`` chips of ``n_banks`` banks
+    of ``n_subarrays`` concurrently-computing subarrays each — the
+    paper's bank sweep with one more multiplicative axis.  Linear in all
+    three factors (chips and banks share nothing, subarrays share only
+    the command broadcast); the host-side channel transfer bound is
+    accounted separately (:func:`host_transfer_s`), because it applies
+    only to operands/results that actually cross the channel."""
+    return bank_throughput_gops(
+        up, cfg, n_subarrays=n_chips * n_banks * n_subarrays)
+
+
 # --- CPU / GPU analytic comparison points ------------------------------------
 # Bulk bitwise/elementwise kernels on CPU/GPU are DRAM-bandwidth-bound; the
 # paper's baselines follow the same logic.  An n-bit binary op streams

@@ -1,4 +1,4 @@
-"""Multi-device PuM execution: the chip's bank axis on the ``data`` mesh.
+"""Multi-device PuM execution: bank and chip axes on real device meshes.
 
 SIMDRAM's headline scaling knob is bank count — 16 banks replaying one
 broadcast command stream reach 88× CPU throughput — and banks share
@@ -15,10 +15,22 @@ single-device path vmaps (:func:`repro.core.control_unit.chip_replay`),
 so the two executors are bit-exact by construction — the paper's
 multi-bank parallelism mapped onto real accelerator parallelism.
 
+One level up, chips on a memory channel share nothing either (PULSAR's
+scaling argument: the per-chip replay path is untouched; only the outer
+dispatch widens), so the channel-level stack
+
+    states: (n_chips, n_banks, n_subarrays, n_rows, n_words)
+    tables: (n_chips, n_banks, n_subarrays, n_cmds, 13)
+
+``shard_map``s over a 2-D ``("channel", "data")`` mesh — chip slabs
+split across ``channel``, each chip's bank slabs across ``data`` — with
+the same bit-exact jitted vmap fallback
+(:func:`repro.core.control_unit.channel_replay`) on small hosts.
+
 Divisibility follows :mod:`repro.distributed.sharding`'s ``fit_spec``
-discipline: if the bank count doesn't divide the device count the spec
+discipline: if an axis count doesn't divide the device count the spec
 degrades to replication and the executor falls back to the jitted
-vmap-over-banks path (also used on single-device hosts).
+vmap path (also used on single-device hosts).
 """
 
 from __future__ import annotations
@@ -31,7 +43,9 @@ import jax
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.core.control_unit import chip_batched_interpreter, chip_replay
+from repro.core.control_unit import (channel_batched_interpreter,
+                                     channel_replay,
+                                     chip_batched_interpreter, chip_replay)
 
 from .sharding import fit_spec
 
@@ -103,4 +117,99 @@ def _sharded_executor(mesh: Mesh) -> Callable:
     return jax.jit(shard_map(
         chip_replay, mesh=mesh,
         in_specs=(bank_spec, bank_spec), out_specs=bank_spec,
+        check_rep=False))
+
+
+# ---------------------------------------------------------------------------
+# channel level: chips × banks on a 2-D ("channel", "data") mesh
+# ---------------------------------------------------------------------------
+
+def channel_mesh(n_chips: int, n_banks: int,
+                 devices: Optional[Sequence] = None) -> Optional[Mesh]:
+    """2-D ``("channel", "data")`` mesh for a channel's chip × bank grid.
+
+    Picks the largest device grid ``(ch, da)`` with ``ch | n_chips`` and
+    ``da | n_banks`` (equal chip slabs per ``channel`` row, equal bank
+    slabs per ``data`` column), preferring to spend devices on the
+    ``channel`` axis at equal total — chips are the outer scaling knob
+    this tier adds.  ``None`` when only a single device would
+    participate: the caller should use the vmap fallback instead of
+    paying shard_map overhead for nothing."""
+    devs = list(devices if devices is not None else jax.devices())
+    best = (1, 1)
+    for ch in range(1, len(devs) + 1):
+        if n_chips % ch:
+            continue
+        da = max((d for d in range(1, len(devs) // ch + 1)
+                  if n_banks % d == 0), default=1)
+        if (ch * da, ch) > (best[0] * best[1], best[0]):
+            best = (ch, da)
+    ch, da = best
+    if ch * da <= 1:
+        return None
+    return Mesh(np.array(devs[: ch * da]).reshape(ch, da),
+                ("channel", "data"))
+
+
+@dataclass(frozen=True)
+class ChannelExecutor:
+    """A compiled channel-replay callable plus how it partitions.
+
+    ``run(states, tables)`` returns the executed (n_chips, n_banks,
+    n_subarrays, n_rows, n_words) states asynchronously (a jitted call
+    either way); ``sharded`` tells whether chip/bank slabs execute on
+    different devices (2-D shard_map) or one device vmaps the whole
+    stack.
+    """
+
+    run: Callable
+    mesh: Optional[Mesh]
+    sharded: bool
+
+
+def make_channel_executor(
+    n_chips: int,
+    n_banks: int,
+    mesh: Optional[Mesh] = None,
+    use_shard_map: Optional[bool] = None,
+) -> ChannelExecutor:
+    """Build the channel's replay executor.
+
+    ``use_shard_map``: ``None`` auto-selects (shard_map whenever a
+    multi-device ``("channel", "data")`` mesh fits the chip × bank
+    grid), ``True`` requires it (raises if no mesh fits — the CI
+    forced-device path uses this to guarantee the 2-D partitioned
+    executor is actually exercised), ``False`` forces the single-device
+    vmap fallback (the bit-exactness reference).
+    """
+    if use_shard_map is False:
+        return ChannelExecutor(channel_batched_interpreter(), None, False)
+    if mesh is None:
+        mesh = channel_mesh(n_chips, n_banks)
+    has_axes = mesh is not None and {"channel", "data"} <= set(
+        mesh.axis_names)
+    spec = (fit_spec(mesh, (n_chips, n_banks), "channel", "data")
+            if has_axes else P(None, None))
+    fits = (has_axes and spec[0] == "channel" and spec[1] == "data"
+            and mesh.devices.size > 1)
+    if not fits:
+        if use_shard_map:
+            raise ValueError(
+                f"shard_map requested but no multi-device (channel, data) "
+                f"mesh fits n_chips={n_chips} × n_banks={n_banks} "
+                f"(devices={jax.device_count()})")
+        return ChannelExecutor(channel_batched_interpreter(), mesh, False)
+    return ChannelExecutor(_sharded_channel_executor(mesh), mesh, True)
+
+
+@functools.lru_cache(maxsize=None)
+def _sharded_channel_executor(mesh: Mesh) -> Callable:
+    """One jitted 2-D shard_map executor per mesh — every channel on the
+    same mesh shares it, exactly like the chip-level executor cache."""
+    from jax.experimental.shard_map import shard_map
+
+    chip_spec = P("channel", "data", None, None, None)
+    return jax.jit(shard_map(
+        channel_replay, mesh=mesh,
+        in_specs=(chip_spec, chip_spec), out_specs=chip_spec,
         check_rep=False))

@@ -1,0 +1,399 @@
+"""Channel-level partitioned execution vs the sequential per-chip baseline.
+
+Proves the PR-5 tentpole claims:
+  - ``SimdramChannel.dispatch`` (stacked multi-chip replay, one
+    super-round per wave front) is bit-exact against sequential per-chip
+    ``SimdramChip.dispatch`` across all 16 ops in both MIG and AIG
+    styles, property-tested over random queues/geometries;
+  - the chip partitioner keeps Ref chains chip-local (forwarded planes
+    never cross chips), property-tested over random chain shapes;
+  - the transfer model charges host↔chip traffic against
+    ``cfg.channel_bw_gbs``: modeled end-to-end latency is non-decreasing
+    as the channel bandwidth shrinks, and fully-forwarded/kept-vertical
+    traffic is free;
+  - ``ChannelStats`` reports per-chip utilization, cross-chip imbalance,
+    the modeled-vs-measured latency pair, and the transfer-bound
+    crossover point;
+  - the 2-D ``("channel", "data")`` shard_map executor (chip slabs over
+    ``channel``, bank slabs over ``data``) is bit-exact against the
+    single-device vmap fallback — exercised in-process when the host
+    exposes ≥2 devices (the CI channel step forces 8 via
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8``) and via a
+    forced-device subprocess otherwise (slow marker);
+  - edge cases: empty and all-zero-lane queues return cleanly with
+    zeroed stats, channel-wide ``bbop`` spans all chips.
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+from dataclasses import replace
+
+import jax
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro.core.bank import BbopInstr, Ref, VerticalOperand, flatten_result, plan_queue
+from repro.core.channel import (ChannelStats, SimdramChannel,
+                                sequential_channel_dispatch)
+from repro.core.chip import partition_queue
+from repro.core.costmodel import transfer_crossover_chips
+from repro.core.ops_library import ALL_OPS, get_op
+from repro.core.timing import DDR4, host_transfer_s
+
+LANES = 48
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _rand_instr(rng, op, n_bits, lanes=LANES, **kw):
+    spec = get_op(op, n_bits)
+    ops = tuple(rng.integers(0, 1 << w, lanes).astype(np.uint64)
+                for w in spec.operand_bits)
+    return BbopInstr(op, ops, n_bits, **kw)
+
+
+def _assert_same(got, ref):
+    for i, (a, b) in enumerate(zip(got, ref)):
+        fa, fb = flatten_result(a), flatten_result(b)
+        assert len(fa) == len(fb)
+        for x, y in zip(fa, fb):
+            np.testing.assert_array_equal(x, y, err_msg=f"instr {i}")
+
+
+def _both(queue, n_chips=2, n_banks=2, n_subarrays=2, style="mig", **kw):
+    """Channel dispatch vs sequential per-chip dispatch, bit-exact."""
+    channel = SimdramChannel(n_chips=n_chips, n_banks=n_banks,
+                             n_subarrays=n_subarrays, style=style, **kw)
+    rc = channel.dispatch(queue)
+    rs, chips = sequential_channel_dispatch(
+        queue, n_chips=n_chips, n_banks=n_banks, n_subarrays=n_subarrays,
+        style=style)
+    _assert_same(rc, rs)
+    return channel, chips, rc
+
+
+# --- bit-exactness --------------------------------------------------------
+
+@pytest.mark.parametrize("style", ["mig", "aig"])
+def test_channel_matches_sequential_all_ops(style):
+    """All 16 ops in one mixed queue: channel == sequential per-chip,
+    both styles (the PR acceptance criterion's test-side gate)."""
+    rng = np.random.default_rng({"mig": 0, "aig": 1}[style])
+    queue = [_rand_instr(rng, op, 8, lanes=32) for op in ALL_OPS]
+    channel, chips, _ = _both(queue, style=style)
+    assert channel.stats.bbops == len(queue)
+    assert channel.stats.elements == 32 * len(queue)
+    # every instruction landed on some chip
+    assert channel.stats.chip_programs.sum() == len(queue)
+    assert sum(c.stats.bbops for c in channel.chips) == len(queue)
+
+
+@given(st.integers(2, 6), st.integers(1, 3), st.integers(1, 2),
+       st.integers(0, 10_000))
+@settings(max_examples=8, deadline=None)
+def test_channel_property_random_queues(n_bits, n_chips, n_banks, seed):
+    """Random op mixes / widths / lane counts / geometries: channel ==
+    sequential per-chip."""
+    rng = np.random.default_rng(seed)
+    ops = ("addition", "subtraction", "min", "max", "greater", "relu")
+    queue = []
+    for _ in range(int(rng.integers(1, 9))):
+        op = ops[int(rng.integers(0, len(ops)))]
+        lanes = int(rng.integers(1, 70))
+        signed = bool(rng.integers(0, 2)) and op != "greater"
+        queue.append(_rand_instr(rng, op, n_bits, lanes=lanes,
+                                 signed_out=signed))
+    _both(queue, n_chips=n_chips, n_banks=n_banks)
+
+
+def test_channel_chain_with_vertical_operands():
+    """Ref chains + user VerticalOperand + keep_vertical through the
+    channel: forwarded hops are counted in ChannelStats and results
+    match the sequential baseline."""
+    rng = np.random.default_rng(2)
+    x, y = (rng.integers(0, 256, LANES).astype(np.uint64) for _ in range(2))
+    z = rng.integers(0, 1 << 16, LANES).astype(np.uint64)
+    vo = VerticalOperand.from_values(x, 8)
+    queue = [
+        BbopInstr("multiplication", (x, y), 8),
+        BbopInstr("addition", (Ref(0), z), 16),
+        BbopInstr("relu", (Ref(1),), 16, keep_vertical=True),
+        BbopInstr("addition", (vo, y), 8),
+    ]
+    channel, _, rc = _both(queue)
+    want = (x * y + z) & 0xFFFF
+    np.testing.assert_array_equal(
+        rc[2].to_values() & 0xFFFF, np.where(want >= 1 << 15, 0, want))
+    # 2 Ref hops + 1 VerticalOperand entry + 1 keep_vertical exit
+    assert channel.stats.transpositions_skipped == 4
+    assert channel.stats.transpose_s_saved > 0
+
+
+# --- scheduler ------------------------------------------------------------
+
+@given(st.integers(1, 4), st.integers(2, 5), st.integers(0, 10_000))
+@settings(max_examples=15, deadline=None)
+def test_ref_chains_stay_chip_local(n_chips, chain_len, seed):
+    """The partitioner never splits a Ref-connected component across
+    chips — forwarded planes cannot cross chips (property test over
+    random chain shapes and chip counts)."""
+    rng = np.random.default_rng(seed)
+    queue = []
+    n_chains = int(rng.integers(1, 7))
+    for _ in range(n_chains):
+        base = len(queue)
+        queue.append(_rand_instr(rng, "multiplication", 8,
+                                 lanes=int(rng.integers(1, 40))))
+        for j in range(chain_len - 1):
+            queue.append(BbopInstr("relu", (Ref(base + j),), 8))
+    lanes, _, _ = plan_queue(queue)
+    chip_of = partition_queue(queue, list(range(len(queue))), lanes, n_chips)
+    pos = 0
+    for _ in range(n_chains):
+        members = {chip_of[pos + j] for j in range(chain_len)}
+        assert len(members) == 1, "chain split across chips"
+        pos += chain_len
+
+
+def test_lpt_balances_equal_components():
+    """Eight equal-cost instructions on two chips land four per chip —
+    perfectly balanced (imbalance 1.0, equal utilization)."""
+    rng = np.random.default_rng(4)
+    queue = [_rand_instr(rng, "addition", 8) for _ in range(8)]
+    channel, _, _ = _both(queue, n_chips=2, n_banks=2)
+    np.testing.assert_array_equal(channel.stats.chip_programs, [4, 4])
+    assert channel.stats.imbalance == pytest.approx(1.0)
+    assert np.allclose(channel.stats.utilization,
+                       channel.stats.utilization[0])
+
+
+def test_channel_latency_models_concurrent_chips():
+    """Identical work spread over N chips costs one chip's latency —
+    chips replay concurrently — while the sequential baseline pays the
+    per-chip sum."""
+    rng = np.random.default_rng(5)
+    queue = [_rand_instr(rng, "addition", 8) for _ in range(8)]
+    channel, chips, _ = _both(queue, n_chips=2, n_banks=2, n_subarrays=2)
+    seq_s = sum(c.stats.latency_s for c in chips)
+    assert channel.stats.super_rounds >= 1
+    assert channel.stats.latency_s < seq_s
+    assert channel.stats.latency_s == pytest.approx(seq_s / 2)
+
+
+# --- transfer model -------------------------------------------------------
+
+def test_transfer_monotone_in_bandwidth():
+    """Modeled end-to-end latency is non-decreasing as channel_bw_gbs
+    shrinks — the transfer bound the multi-chip curve saturates
+    against."""
+    ops = ("addition", "greater", "xor_red", "subtraction")
+    prev = None
+    for bw in (19.2, 9.6, 4.8, 1.2, 0.3):
+        channel = SimdramChannel(
+            n_chips=2, n_banks=2, n_subarrays=2,
+            cfg=replace(DDR4, channel_bw_gbs=bw))
+        rng = np.random.default_rng(6)
+        channel.dispatch(
+            [_rand_instr(rng, op, 8, lanes=2048) for op in ops])
+        t = channel.stats.total_latency_s
+        assert channel.stats.transfer_s == pytest.approx(
+            host_transfer_s(channel.stats.transfer_bytes, channel.cfg))
+        if prev is not None:
+            assert t >= prev, f"latency dropped when bw shrank to {bw}"
+        prev = t
+    # at 0.3 GB/s the shared link dominates this tiny-compute queue
+    assert channel.stats.transfer_bound
+
+
+def test_transfer_accounting_and_crossover():
+    """Horizontal operands/results are charged; Ref-forwarded and
+    keep_vertical traffic is free.  The crossover point is serial
+    compute over transfer time."""
+    rng = np.random.default_rng(7)
+    x, y = (rng.integers(0, 256, LANES).astype(np.uint64) for _ in range(2))
+    channel = SimdramChannel(n_chips=2, n_banks=2, n_subarrays=2)
+    channel.dispatch([
+        BbopInstr("multiplication", (x, y), 8),
+        BbopInstr("relu", (Ref(0),), 16, keep_vertical=True),
+    ])
+    # mul: 2×8b in + 16b out cross; relu: Ref in (free) + vertical out
+    # (free) — so exactly (8+8+16)/8 bytes per lane cross the channel
+    assert channel.stats.transfer_bytes == LANES * (8 + 8 + 16) // 8
+    st = channel.stats
+    assert st.crossover_chips == pytest.approx(
+        transfer_crossover_chips(float(st.chip_busy_s.sum()),
+                                 st.transfer_s))
+    assert st.total_latency_s >= st.latency_s + st.transfer_s
+
+    # a fully PuM-resident queue moves nothing: crossover is infinite
+    vo = VerticalOperand.from_values(x, 8)
+    free = SimdramChannel(n_chips=2, n_banks=2, n_subarrays=2)
+    free.dispatch([BbopInstr("relu", (vo,), 8, keep_vertical=True)])
+    assert free.stats.transfer_bytes == 0
+    assert free.stats.crossover_chips == float("inf")
+    assert not free.stats.transfer_bound
+
+
+# --- stats surface --------------------------------------------------------
+
+def test_channel_stats_extend_bank_stats():
+    rng = np.random.default_rng(8)
+    channel, _, _ = _both([_rand_instr(rng, "addition", 8),
+                           _rand_instr(rng, "greater", 8)])
+    assert isinstance(channel.stats, ChannelStats)
+    d = channel.stats.as_dict()
+    # the BankStats surface plus the channel extensions
+    for key in ("bbops", "batches", "fused_batches", "latency_s",
+                "energy_nj", "pack_wall_s", "wall_s", "n_chips", "n_banks",
+                "super_rounds", "transfer_bytes", "transfer_s",
+                "transfer_bound", "crossover_chips", "chip_busy_s",
+                "chip_programs", "utilization", "imbalance"):
+        assert key in d, key
+    assert d["n_chips"] == 2
+    assert d["wall_s"] > 0 and d["pack_wall_s"] > 0   # measured side
+    assert d["latency_s"] > 0                         # modeled side
+    assert channel.stats.throughput_gops > 0
+
+
+# --- edge cases -----------------------------------------------------------
+
+def test_empty_and_zero_lane_channel_queues():
+    """Empty queues and all-zero-lane queues return cleanly with zeroed
+    stats — no empty wave plan, no device round-trip, no transfers."""
+    channel = SimdramChannel(n_chips=2, n_banks=2, n_subarrays=2)
+    assert channel.dispatch([]) == []
+    assert channel.stats.super_rounds == 0 and channel.stats.bbops == 0
+    assert channel.stats.latency_s == 0.0
+
+    e = np.zeros(0, np.uint64)
+    queue = [BbopInstr("addition", (e, e), 8),
+             BbopInstr("relu", (Ref(0),), 8),
+             BbopInstr("abs", (e,), 8, keep_vertical=True)]
+    out = channel.dispatch(queue)
+    assert np.asarray(out[0]).shape == (0,)
+    assert np.asarray(out[1]).shape == (0,)
+    assert isinstance(out[2], VerticalOperand) and out[2].lanes == 0
+    assert channel.stats.super_rounds == 0
+    assert channel.stats.transfer_bytes == 0
+    assert channel.stats.bbops == len(queue)
+
+    # zero-lane instructions inside a mixed queue still work
+    rng = np.random.default_rng(9)
+    mixed = [_rand_instr(rng, "addition", 8),
+             BbopInstr("addition", (e, e), 8),
+             _rand_instr(rng, "greater", 8)]
+    channel2, _, rm = _both(mixed)
+    assert np.asarray(rm[1]).shape == (0,)
+    assert channel2.stats.chip_programs.sum() == 2
+
+
+def test_channel_bbop_spans_chips():
+    """One wide bbop splits lanes across every (chip, bank, subarray)
+    slot and reassembles in order — ideally one super-round."""
+    rng = np.random.default_rng(10)
+    x = rng.integers(0, 256, 1000)
+    y = rng.integers(0, 256, 1000)
+    channel = SimdramChannel(n_chips=2, n_banks=2, n_subarrays=2)
+    got = channel.bbop("addition", x, y, n_bits=8)
+    want = get_op("addition", 8).oracle(
+        x.astype(np.uint64), y.astype(np.uint64))[0]
+    np.testing.assert_array_equal(
+        got.astype(np.int64) & 0xFF, want.astype(np.int64) & 0xFF)
+    assert channel.stats.super_rounds == 1
+    assert channel.stats.chip_programs.sum() == 8
+
+
+def test_channel_validation():
+    with pytest.raises(ValueError):
+        SimdramChannel(n_chips=0)
+    with pytest.raises(ValueError):
+        SimdramChannel(n_chips=2, packing="nope")
+
+
+# --- sharded executor -----------------------------------------------------
+
+def test_vmap_fallback_on_single_device():
+    """With one device (the tier-1 default), the executor falls back to
+    the vmapped path; requiring shard_map raises."""
+    if jax.device_count() > 1:
+        pytest.skip("host exposes multiple devices")
+    channel = SimdramChannel(n_chips=2, n_banks=2, n_subarrays=2)
+    assert not channel.executor.sharded
+    with pytest.raises(ValueError, match="shard_map requested"):
+        SimdramChannel(n_chips=2, n_banks=2, use_shard_map=True)
+
+
+def test_sharded_executor_multi_device():
+    """Real 2-D shard_map partitioning (chip slabs over ``channel``,
+    bank slabs over ``data``) is bit-exact vs the vmap fallback — runs
+    when the host exposes ≥2 devices (the CI channel step forces 8)."""
+    if jax.device_count() < 2:
+        pytest.skip("needs >= 2 devices "
+                    "(XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+    rng = np.random.default_rng(11)
+    queue = [_rand_instr(rng, op, w)
+             for op in ("addition", "multiplication", "greater", "min")
+             for w in (8, 16)]
+    base = len(queue)
+    queue.append(_rand_instr(rng, "multiplication", 8))
+    queue.append(BbopInstr("relu", (Ref(base),), 8, keep_vertical=True))
+    sharded = SimdramChannel(n_chips=2, n_banks=4, n_subarrays=2,
+                             use_shard_map=True)
+    assert sharded.executor.sharded
+    assert sharded.executor.mesh.shape["channel"] >= 1
+    assert sharded.executor.mesh.devices.size >= 2
+    fallback = SimdramChannel(n_chips=2, n_banks=4, n_subarrays=2,
+                              use_shard_map=False)
+    _assert_same(sharded.dispatch(queue), fallback.dispatch(queue))
+    _assert_same(sequential_channel_dispatch(queue, 2, 4, 2)[0],
+                 fallback.dispatch(queue))
+
+
+@pytest.mark.slow
+def test_sharded_executor_forced_devices_subprocess():
+    """Belt-and-braces: force 8 host devices in a subprocess and prove
+    the 2-D ``(channel, data)`` shard_map path is bit-exact against the
+    vmap fallback end to end (covers local single-device runs)."""
+    script = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import numpy as np
+        from repro.core.bank import BbopInstr, Ref, flatten_result
+        from repro.core.channel import (SimdramChannel,
+                                        sequential_channel_dispatch)
+        from repro.core.ops_library import get_op
+
+        rng = np.random.default_rng(0)
+        queue = []
+        for op in ("addition", "multiplication", "greater", "xor_red"):
+            spec = get_op(op, 8)
+            ops = tuple(rng.integers(0, 1 << w, 64).astype(np.uint64)
+                        for w in spec.operand_bits)
+            queue.append(BbopInstr(op, ops, 8))
+        queue.append(BbopInstr("relu", (Ref(0),), 8))
+        sharded = SimdramChannel(n_chips=2, n_banks=4, n_subarrays=2,
+                                 use_shard_map=True)
+        assert sharded.executor.sharded
+        mesh = sharded.executor.mesh
+        assert mesh.shape["channel"] == 2 and mesh.shape["data"] == 4
+        fallback = SimdramChannel(n_chips=2, n_banks=4, n_subarrays=2,
+                                  use_shard_map=False)
+        ra = sharded.dispatch(queue)
+        rb = fallback.dispatch(queue)
+        rs, _ = sequential_channel_dispatch(queue, 2, 4, 2)
+        for a, b, c in zip(ra, rb, rs):
+            for x, y in zip(flatten_result(a), flatten_result(b)):
+                np.testing.assert_array_equal(x, y)
+            for x, y in zip(flatten_result(a), flatten_result(c)):
+                np.testing.assert_array_equal(x, y)
+        print("SHARDED_CHANNEL_OK", mesh.shape["channel"], mesh.shape["data"])
+    """)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    out = subprocess.run([sys.executable, "-c", script],
+                         capture_output=True, text=True, env=env,
+                         timeout=600)
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert "SHARDED_CHANNEL_OK 2 4" in out.stdout
