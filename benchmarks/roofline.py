@@ -1,6 +1,18 @@
 """§Roofline: derive the three roofline terms from the dry-run artifacts.
 
-Reads experiments/dryrun/*.json (written by repro.launch.dryrun) and for
+Two modes:
+
+``--apps`` reads ``BENCH_apps.json`` (written by
+``benchmarks/paper_tables.py::table_apps``) and decomposes every app ×
+ladder-rung into the SIMDRAM roofline terms:
+
+  compute term    = replay latency (fused waves / stacked rounds)   [s]
+  transpose term  = paid horizontal↔vertical conversions            [s]
+  transfer term   = host↔chip traffic on the shared channel link    [s]
+
+and names the dominant bound — the SIMDRAM analogue of
+compute/memory/collective.  The default LM mode reads
+experiments/dryrun/*.json (written by repro.launch.dryrun) and for
 each (arch × shape × mesh) computes:
 
   compute term    = HLO_FLOPs_per_device / 197e12           [s]
@@ -118,6 +130,55 @@ def fmt_table(rows: List[Dict], mesh: str = "16x16") -> str:
     return hdr + body
 
 
+APPS_BENCH = os.path.join(HERE, "..", "BENCH_apps.json")
+
+
+def analyze_apps(bench_path: str = APPS_BENCH) -> List[Dict]:
+    """Per (app × backend) roofline rows from the table_apps artifact."""
+    with open(bench_path) as f:
+        rep = json.load(f)
+    rows: List[Dict] = []
+    for name, app in sorted(rep["apps"].items()):
+        for be, tier in app["tiers"].items():
+            eng = tier["modeled"]["engine"]
+            if eng is not None:
+                compute = eng.get("latency_s", 0.0)
+                transpose = eng.get("transpose_s", 0.0)
+                transfer = eng.get("transfer_s", 0.0)
+            else:   # sequential backends: device model only, no engine terms
+                compute = tier["modeled"]["device_latency_s"]
+                transpose = transfer = 0.0
+            dom = max((("compute", compute), ("transpose", transpose),
+                       ("transfer", transfer)), key=lambda kv: kv[1])
+            rows.append({
+                "app": name, "backend": be,
+                "compute_s": compute, "transpose_s": transpose,
+                "transfer_s": transfer,
+                "bound_s": compute + transpose + transfer,
+                "dominant": dom[0],
+                "wall_s": tier["measured"]["wall_s"],
+            })
+    return rows
+
+
+def main_apps() -> None:
+    print("# table_apps_roofline: name,us_per_call,derived(bound_s)")
+    if not os.path.exists(APPS_BENCH):
+        print("apps_roofline/NO_DATA,0,0  "
+              "(run `python -m benchmarks.run --table apps` first)")
+        return
+    rows = analyze_apps()
+    for r in rows:
+        print(f"apps_roofline/{r['app']}/{r['backend']},0,{r['bound_s']:.3e}"
+              f"  # dominant={r['dominant']}")
+    ladder = [r for r in rows if r["backend"] == "channel"]
+    if ladder:
+        worst = max(ladder, key=lambda r: r["transfer_s"] /
+                    max(r["bound_s"], 1e-30))
+        print(f"# most_transfer_bound,{worst['app']},"
+              f"{worst['transfer_s']:.3e}")
+
+
 def main() -> None:
     print("# table_roofline: name,us_per_call,derived(mfu_bound)")
     rows = load_all()
@@ -143,4 +204,12 @@ def main() -> None:
 
 
 if __name__ == "__main__":
-    main()
+    import argparse
+    p = argparse.ArgumentParser()
+    p.add_argument("--apps", action="store_true",
+                   help="roofline-decompose BENCH_apps.json instead of the "
+                        "LM dry-run artifacts")
+    if p.parse_args().apps:
+        main_apps()
+    else:
+        main()

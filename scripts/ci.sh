@@ -59,6 +59,13 @@ echo "== channel-scaling smoke bench (8 forced host devices: 2-D mesh) =="
 XLA_FLAGS=--xla_force_host_platform_device_count=8 \
     python -m benchmarks.channel_scaling --smoke --json BENCH_channel.json
 
+echo "== apps-on-the-ladder smoke gate (8 forced host devices) =="
+# exits non-zero if any of the seven paper app kernels produces a
+# different output array on ANY ladder rung (bitplane/bank/chip/channel)
+# or fails its numpy-oracle verification; BENCH_apps.json is a CI artifact
+XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+    python -m benchmarks.run --table apps --smoke
+
 echo "== docs lint (README/ARCHITECTURE references must resolve) =="
 python scripts/check_docs.py
 

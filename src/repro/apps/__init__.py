@@ -2,13 +2,20 @@
 
   vgg.py         VGG-13 / VGG-16 quantized inference
   lenet.py       LeNet-5 quantized inference
-  knn.py         k-nearest-neighbours (L1 distance + min tree)
+  knn.py         k-nearest-neighbours (L1 distance + host top-k)
   tpch.py        TPC-H-style predicate scan + aggregate
   bitweaving.py  BitWeaving column scans
   brightness.py  image brightness adjustment (add + clamp predication)
+  nn_layers.py   shared quantized-NN blocks + a small end-to-end net
 
-Each kernel runs end-to-end with real data through SIMDRAM bbops (host
-code only where the paper also keeps the CPU involved), verifies against
-a numpy oracle, and reports the per-device command statistics that feed
-benchmarks/apps.py.
+Each kernel builds ``Ref``-chained :class:`~repro.core.bank.BbopInstr`
+queues (one independent chain per lane shard — see
+:mod:`repro.apps.runtime`) and drains them through
+:meth:`~repro.core.isa.SimdramDevice.dispatch`, so the SAME app code
+runs on every rung of the backend ladder: ``bitplane`` → ``bank`` →
+``chip`` → ``channel``.  Host code remains only where the paper also
+keeps the CPU involved (top-k, sums, matmul accounting).  Every kernel
+verifies against a numpy oracle with a raising check and reports
+``verified: True`` plus the per-device command statistics that feed
+``benchmarks/paper_tables.py::table_apps``.
 """

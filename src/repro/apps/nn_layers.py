@@ -1,21 +1,34 @@
-"""Quantized NN building blocks over SIMDRAM bbops.
+"""Quantized NN building blocks over SIMDRAM bbops (paper §5 app kernel).
 
 Convolutions/matmuls use the bit-serial formulation (kernel or analytic
-accounting), elementwise stages (ReLU, residual adds, pooling compare
-trees) run as real bbops on the selected backend.  Mirrors the paper's NN
-kernels: int8 weights/activations, per-tensor power-of-two scales.
+accounting), elementwise stages (ReLU, pooling compare trees) run as
+real bbops: each builds a ``Ref``-chained :class:`BbopInstr` queue per
+lane shard and drains it through :meth:`SimdramDevice.dispatch`, so the
+same code runs on every rung of the backend ladder.  Mirrors the
+paper's NN kernels: int8 weights/activations, per-tensor power-of-two
+scales.  :func:`run` drives a small conv → ReLU+pool → dense → ReLU
+network end-to-end and verifies it against a numpy oracle.
+
+Width plumbing: ReLU inputs must already fit ``n_bits``-bit
+two's-complement — out-of-range activations raise ``ValueError``
+instead of being silently clipped (the seed-era bug: a clip here
+corrupts the network's numerics without failing verification of the
+clipped tensor).  Signed max-pooling lowers onto the UNSIGNED ``max``
+primitive via the order-preserving bias ``x + 2**(n_bits-1)``, un-biased
+in-queue by a final signed subtraction.
 """
 
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Optional, Tuple
+from typing import Dict, Tuple
 
 import numpy as np
 
 from repro.core.isa import SimdramDevice, compile_op
-from repro.core.timing import uprogram_latency_s
-from repro.core.energy import uprogram_energy_nj
+
+from .runtime import (QueueBuilder, gather, n_parallel_units,
+                      resolve_device, shard_slices, verify)
 
 
 def quantize(x: np.ndarray, bits: int = 8, signed: bool = True) -> Tuple[np.ndarray, float]:
@@ -71,43 +84,8 @@ def conv2d_int(
     return out.T.reshape(o, oh, ow)
 
 
-def relu_pum(dev: SimdramDevice, x: np.ndarray, n_bits: int = 16) -> np.ndarray:
-    """ReLU executed as a real SIMDRAM bbop (clips to n_bits two's compl.)."""
-    flat = x.reshape(-1)
-    lim = 1 << (n_bits - 1)
-    clipped = np.clip(flat, -lim, lim - 1)
-    out = np.asarray(
-        dev.bbop("relu", clipped.astype(np.int64) & ((1 << n_bits) - 1),
-                 n_bits=n_bits, signed_out=True)
-    )
-    return out.reshape(x.shape).astype(np.int64)
-
-
-def maxpool2x2_pum(dev: SimdramDevice, x: np.ndarray, n_bits: int = 16) -> np.ndarray:
-    """2×2 max-pool as a tree of SIMDRAM `max` bbops (signed)."""
-    c, h, w = x.shape
-    h2, w2 = h // 2, w // 2
-    x = x[:, : h2 * 2, : w2 * 2]
-    a = x[:, 0::2, 0::2].reshape(-1)
-    b = x[:, 0::2, 1::2].reshape(-1)
-    cc = x[:, 1::2, 0::2].reshape(-1)
-    d = x[:, 1::2, 1::2].reshape(-1)
-    mask = (1 << n_bits) - 1
-
-    def mx(u, v):
-        # signed max via flipped-msb unsigned max (ops_library signed=True)
-        dev_out = dev.bbop("if_else",
-                           np.asarray(dev.bbop("greater",
-                                               _bias(u, n_bits), _bias(v, n_bits),
-                                               n_bits=n_bits)).astype(np.int64),
-                           u.astype(np.int64) & mask, v.astype(np.int64) & mask,
-                           n_bits=n_bits, signed_out=True)
-        return np.asarray(dev_out).astype(np.int64)
-
-    m1 = mx(a, b)
-    m2 = mx(cc, d)
-    m = mx(m1, m2)
-    return m.reshape(c, h2, w2)
+def dense_int(x: np.ndarray, w: np.ndarray) -> np.ndarray:
+    return x.astype(np.int64) @ w.astype(np.int64).T
 
 
 def _bias(x: np.ndarray, n_bits: int) -> np.ndarray:
@@ -115,5 +93,132 @@ def _bias(x: np.ndarray, n_bits: int) -> np.ndarray:
     return (x.astype(np.int64) + (1 << (n_bits - 1))) & ((1 << n_bits) - 1)
 
 
-def dense_int(x: np.ndarray, w: np.ndarray) -> np.ndarray:
-    return x.astype(np.int64) @ w.astype(np.int64).T
+def _check_range(flat: np.ndarray, n_bits: int, who: str) -> None:
+    lim = 1 << (n_bits - 1)
+    lo, hi = int(flat.min(initial=0)), int(flat.max(initial=0))
+    if lo < -lim or hi >= lim:
+        raise ValueError(
+            f"{who}: activations [{lo}, {hi}] exceed {n_bits}-bit "
+            f"two's-complement range [{-lim}, {lim - 1}]; widen n_bits "
+            f"instead of silently clipping")
+
+
+def relu_pum(dev: SimdramDevice, x: np.ndarray, n_bits: int = 16) -> np.ndarray:
+    """ReLU as a dispatched queue of SIMDRAM ``relu`` bbops."""
+    flat = x.reshape(-1).astype(np.int64)
+    _check_range(flat, n_bits, "relu_pum")
+    mask = (1 << n_bits) - 1
+
+    qb = QueueBuilder()
+    shards = []
+    for sl in shard_slices(flat.size, n_parallel_units(dev)):
+        shards.append((sl, qb.emit("relu", flat[sl] & mask, n_bits=n_bits)))
+    out = gather(dev.dispatch(qb.queue), shards, flat.size)
+    return out.reshape(x.shape)
+
+
+def _pool_phases(x: np.ndarray):
+    """(C,H,W) -> the four 2×2-phase planes, flattened, + pooled shape."""
+    c, h, w = x.shape
+    h2, w2 = h // 2, w // 2
+    x = x[:, : h2 * 2, : w2 * 2]
+    phases = [x[:, 0::2, 0::2], x[:, 0::2, 1::2],
+              x[:, 1::2, 0::2], x[:, 1::2, 1::2]]
+    return [p.reshape(-1).astype(np.int64) for p in phases], (c, h2, w2)
+
+
+def maxpool2x2_pum(dev: SimdramDevice, x: np.ndarray, n_bits: int = 16) -> np.ndarray:
+    """Signed 2×2 max-pool as one dispatched queue per shard: unsigned
+    ``max`` tree over sign-bit-biased operands, un-biased by an in-queue
+    signed subtraction."""
+    _check_range(x.reshape(-1), n_bits, "maxpool2x2_pum")
+    (a, b, cc, d), (c, h2, w2) = _pool_phases(x)
+    n = a.size
+    bias = 1 << (n_bits - 1)
+
+    qb = QueueBuilder()
+    shards = []
+    for sl in shard_slices(n, n_parallel_units(dev)):
+        m1 = qb.emit("max", _bias(a[sl], n_bits), _bias(b[sl], n_bits),
+                     n_bits=n_bits)
+        m2 = qb.emit("max", _bias(cc[sl], n_bits), _bias(d[sl], n_bits),
+                     n_bits=n_bits)
+        m = qb.emit("max", m1, m2, n_bits=n_bits)
+        r = qb.emit("subtraction", m, np.full(a[sl].shape, bias, np.int64),
+                    n_bits=n_bits, signed_out=True)
+        shards.append((sl, r))
+    out = gather(dev.dispatch(qb.queue), shards, n)
+    return out.reshape(c, h2, w2)
+
+
+def relu_maxpool2x2_pum(
+    dev: SimdramDevice, x: np.ndarray, n_bits: int = 16
+) -> np.ndarray:
+    """Fused ReLU → 2×2 max-pool as ONE queue: four ``relu`` bbops (one
+    per pool phase) feed an unsigned ``max`` tree directly — ReLU output
+    is non-negative, so no sign-bit bias is needed and the whole fusion
+    is a seven-instruction ``Ref`` chain per shard."""
+    _check_range(x.reshape(-1), n_bits, "relu_maxpool2x2_pum")
+    phases, (c, h2, w2) = _pool_phases(x)
+    n = phases[0].size
+    mask = (1 << n_bits) - 1
+
+    qb = QueueBuilder()
+    shards = []
+    for sl in shard_slices(n, n_parallel_units(dev)):
+        rs = [qb.emit("relu", p[sl] & mask, n_bits=n_bits) for p in phases]
+        m1 = qb.emit("max", rs[0], rs[1], n_bits=n_bits)
+        m2 = qb.emit("max", rs[2], rs[3], n_bits=n_bits)
+        shards.append((sl, qb.emit("max", m1, m2, n_bits=n_bits)))
+    out = gather(dev.dispatch(qb.queue), shards, n)
+    return out.reshape(c, h2, w2)
+
+
+def _pool_oracle(x: np.ndarray) -> np.ndarray:
+    c, h, w = x.shape
+    h2, w2 = h // 2, w // 2
+    x = x[:, : h2 * 2, : w2 * 2]
+    return np.maximum.reduce([x[:, 0::2, 0::2], x[:, 0::2, 1::2],
+                              x[:, 1::2, 0::2], x[:, 1::2, 1::2]])
+
+
+def run(
+    in_ch: int = 2,
+    img_hw: int = 8,
+    out_ch: int = 3,
+    fc_out: int = 5,
+    n_bits: int = 16,
+    device: SimdramDevice | None = None,
+    backend: str = "bitplane",
+    seed: int = 0,
+) -> Dict:
+    """Small conv → fused ReLU+pool → dense → ReLU network, every
+    elementwise stage a dispatched bbop queue, verified stage-by-stage
+    against numpy."""
+    dev = resolve_device(device, backend)
+    rng = np.random.default_rng(seed)
+    x = rng.integers(-8, 8, size=(in_ch, img_hw, img_hw)).astype(np.int64)
+    wc = rng.integers(-4, 4, size=(out_ch, in_ch, 3, 3)).astype(np.int64)
+
+    conv = conv2d_int(x, wc, pad=1)
+    macs = conv.size * in_ch * 9
+    LayerCost("conv", macs=macs, elements=conv.size).account_matmul(dev)
+
+    pooled = relu_maxpool2x2_pum(dev, conv, n_bits=n_bits)
+    want_pool = _pool_oracle(np.maximum(conv, 0))
+    verify(np.array_equal(pooled, want_pool), "fused relu+pool mismatch",
+           got=pooled.reshape(-1)[:8], want=want_pool.reshape(-1)[:8])
+
+    wf = rng.integers(-4, 4, size=(fc_out, pooled.size)).astype(np.int64)
+    fc = dense_int(pooled.reshape(1, -1), wf)
+    macs_fc = fc.size * pooled.size
+    LayerCost("fc", macs=macs_fc, elements=fc.size).account_matmul(dev)
+
+    out = relu_pum(dev, fc, n_bits=n_bits)
+    want_out = np.maximum(fc, 0)
+    verify(np.array_equal(out, want_out), "final relu mismatch",
+           got=out.reshape(-1), want=want_out.reshape(-1))
+
+    return {"arch": "nn_layers", "macs": macs + macs_fc,
+            "backend": dev.backend, "verified": True,
+            "output": out.reshape(-1), **dev.totals()}

@@ -5,10 +5,17 @@ Models the selection/aggregation core of TPC-H Q6:
   SELECT SUM(extendedprice * discount) FROM lineitem
   WHERE shipdate in range AND discount BETWEEN lo AND hi AND quantity < q
 
-All predicates evaluate as SIMDRAM relational bbops over every row in
-parallel; the conjunction is an and_red; the aggregation masks via
-if_else then sums host-side (the paper aggregates partial sums on the
-CPU too).  Verified against a numpy query oracle.
+The whole query body is one ``Ref`` chain per row shard — five
+relational bbops, a two-level ``and_red`` conjunction, the PuM multiply
+and the predicating ``if_else`` — drained through
+:meth:`SimdramDevice.dispatch` so the predicate bit-vectors forward
+vertically between instructions on the fused backends.  The paper's
+``<``/``<=`` comparisons against constants lower onto the unsigned
+``greater``/``greater_equal`` primitives with the constant as the LEFT
+operand (``x < c  ≡  c > x``), keeping every predicate in-queue.  Only
+the final SUM of masked revenues happens host-side (the paper
+aggregates partial sums on the CPU too).  Verified against a numpy
+query oracle.
 """
 
 from __future__ import annotations
@@ -19,13 +26,17 @@ import numpy as np
 
 from repro.core.isa import SimdramDevice
 
+from .runtime import (QueueBuilder, gather, n_parallel_units,
+                      resolve_device, shard_slices, verify)
+
 
 def run(
     n_rows: int = 8192,
     device: SimdramDevice | None = None,
+    backend: str = "bitplane",
     seed: int = 0,
 ) -> Dict:
-    dev = device or SimdramDevice(backend="bitplane")
+    dev = resolve_device(device, backend)
     rng = np.random.default_rng(seed)
 
     shipdate = rng.integers(0, 2556, size=n_rows).astype(np.int64)      # days
@@ -36,30 +47,40 @@ def run(
     d_lo, d_hi, q_lt = 4, 6, 24
     t_lo, t_hi = 365, 730
 
-    def ge(x, c, bits):
-        return np.asarray(dev.bbop("greater_equal", x, np.full_like(x, c), n_bits=bits))
+    qb = QueueBuilder()
+    shards = []
+    for sl in shard_slices(n_rows, n_parallel_units(dev)):
+        sd, qt, dc, pr = shipdate[sl], quantity[sl], discount[sl], price[sl]
 
-    def lt(x, c, bits):
-        return 1 - ge(x, c, bits)
+        def full(c, like):
+            return np.full(like.shape, c, np.int64)
 
-    p1 = ge(shipdate, t_lo, 12) & lt(shipdate, t_hi, 12)
-    p2 = ge(discount, d_lo, 4) & (1 - np.asarray(
-        dev.bbop("greater", discount, np.full_like(discount, d_hi), n_bits=4)))
-    p3 = lt(quantity, q_lt, 6)
-    sel = np.asarray(dev.bbop(
-        "and_red", p1.astype(np.int64), p2.astype(np.int64), p3.astype(np.int64),
-        np.ones_like(p1, dtype=np.int64), n_bits=1))
+        r_tlo = qb.emit("greater_equal", sd, full(t_lo, sd), n_bits=12)
+        r_thi = qb.emit("greater", full(t_hi, sd), sd, n_bits=12)       # sd < t_hi
+        r_dlo = qb.emit("greater_equal", dc, full(d_lo, dc), n_bits=4)
+        r_dhi = qb.emit("greater_equal", full(d_hi, dc), dc, n_bits=4)  # dc <= d_hi
+        r_q = qb.emit("greater", full(q_lt, qt), qt, n_bits=6)          # qt < q_lt
+        r_a = qb.emit("and_red", r_tlo, r_thi, r_dlo, r_dhi, n_bits=1)
+        ones = np.ones(sd.shape, np.int64)
+        r_sel = qb.emit("and_red", r_a, r_q, ones, ones, n_bits=1)
+        r_mul = qb.emit("multiplication", pr, dc, n_bits=14)
+        r_rev = qb.emit("if_else", r_sel, r_mul,
+                        np.zeros(sd.shape, np.int64), n_bits=28)
+        shards.append((sl, (r_sel, r_rev)))
 
-    # revenue = price * discount on selected rows (PuM multiply + predication)
-    prod = np.asarray(dev.bbop("multiplication", price, discount, n_bits=14))
-    masked = np.asarray(dev.bbop("if_else", sel.astype(np.int64), prod,
-                                 np.zeros_like(prod), n_bits=28))
+    results = dev.dispatch(qb.queue)
+    sel = gather(results, [(sl, rs) for sl, (rs, _) in shards], n_rows)
+    masked = gather(results, [(sl, rr) for sl, (_, rr) in shards], n_rows)
     revenue = int(masked.sum())
 
     want_sel = ((shipdate >= t_lo) & (shipdate < t_hi)
                 & (discount >= d_lo) & (discount <= d_hi) & (quantity < q_lt))
     want = int((price * discount)[want_sel].sum())
-    assert revenue == want, (revenue, want)
+    verify(revenue == want, "TPC-H Q6 revenue mismatch",
+           got=revenue, want=want)
+    verify(np.array_equal(sel.astype(bool), want_sel),
+           "TPC-H Q6 selection-vector mismatch")
 
     return {"arch": "tpch_q6", "rows": n_rows, "selected": int(sel.sum()),
-            "revenue": revenue, **dev.totals()}
+            "revenue": revenue, "backend": dev.backend, "verified": True,
+            "output": masked, **dev.totals()}

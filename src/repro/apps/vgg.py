@@ -2,21 +2,31 @@
 
 Convolution MACs are charged to the device as bit-serial mul+add
 μPrograms (the paper's accounting); ReLU and max-pool stages execute as
-*real* bbops.  Synthetic int8 weights; correctness is asserted against an
-integer numpy oracle layer-by-layer.
+*real* dispatched bbop queues on the selected backend.  The plan walker
+looks one item ahead: a conv whose ReLU is immediately followed by
+``'M'`` fuses both into one
+:func:`~repro.apps.nn_layers.relu_maxpool2x2_pum` ``Ref`` chain;
+stand-alone stages use :func:`~repro.apps.nn_layers.relu_pum` /
+:func:`~repro.apps.nn_layers.maxpool2x2_pum`.  Synthetic int8 weights;
+every stage verifies against an integer numpy oracle with a raising
+check.
 
-`run(arch="vgg13"|"vgg16", ...)` returns command/latency/energy totals.
+``run(arch="vgg13"|"vgg16", n_layers=k, ...)`` truncates the plan to
+its first ``k`` items (for fast cross-backend gating) and returns
+command/latency/energy totals.
 """
 
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import Dict, List, Tuple
+from typing import Dict
 
 import numpy as np
 
 from repro.core.isa import SimdramDevice
-from .nn_layers import LayerCost, conv2d_int, maxpool2x2_pum, relu_pum
+
+from .nn_layers import (LayerCost, _pool_oracle, conv2d_int, maxpool2x2_pum,
+                        relu_maxpool2x2_pum, relu_pum)
+from .runtime import resolve_device, verify
 
 # (conv channel plan per block, 'M' = 2x2 maxpool) — standard VGG configs
 VGG_PLANS = {
@@ -30,25 +40,32 @@ def run(
     arch: str = "vgg13",
     img_hw: int = 32,
     n_classes: int = 10,
+    n_layers: int | None = None,
     device: SimdramDevice | None = None,
+    backend: str = "bitplane",
     seed: int = 0,
     elementwise_pum: bool = True,
 ) -> Dict:
-    dev = device or SimdramDevice(backend="bitplane")
+    dev = resolve_device(device, backend)
     rng = np.random.default_rng(seed)
     plan = VGG_PLANS[arch]
+    if n_layers is not None:
+        plan = plan[:n_layers]
 
     x = rng.integers(-64, 64, size=(3, img_hw, img_hw)).astype(np.int64)
     c_in = 3
     total_macs = 0
-    for li, item in enumerate(plan):
+    li = 0
+    while li < len(plan):
+        item = plan[li]
         if item == "M":
-            ref = x.reshape(x.shape[0], x.shape[1] // 2, 2, x.shape[2] // 2, 2).max(axis=(2, 4))
+            ref = _pool_oracle(x)
             if elementwise_pum:
                 x = maxpool2x2_pum(dev, x, n_bits=16)
-                assert np.array_equal(x, ref), f"{arch} maxpool L{li}"
+                verify(np.array_equal(x, ref), f"{arch} maxpool L{li}")
             else:
                 x = ref
+            li += 1
             continue
         c_out = int(item)
         w = rng.integers(-8, 8, size=(c_out, c_in, 3, 3)).astype(np.int64)
@@ -56,14 +73,25 @@ def run(
         macs = int(np.prod(y.shape)) * c_in * 9
         total_macs += macs
         LayerCost(f"conv{li}", macs, int(np.prod(y.shape))).account_matmul(dev, n_bits=8)
-        # re-quantize activations to int16 range then ReLU in PuM
+        # re-quantize activations to int16 range then ReLU (+pool) in PuM
         y = np.clip(y >> 6, -(1 << 15), (1 << 15) - 1)
-        ref = np.maximum(y, 0)
-        if elementwise_pum:
-            y = relu_pum(dev, y, n_bits=16)
-            assert np.array_equal(y, ref), f"{arch} relu L{li}"
+        fuse_pool = li + 1 < len(plan) and plan[li + 1] == "M"
+        if fuse_pool:
+            ref = _pool_oracle(np.maximum(y, 0))
+            if elementwise_pum:
+                y = relu_maxpool2x2_pum(dev, y, n_bits=16)
+                verify(np.array_equal(y, ref), f"{arch} relu+pool L{li}")
+            else:
+                y = ref
+            li += 2
         else:
-            y = ref
+            ref = np.maximum(y, 0)
+            if elementwise_pum:
+                y = relu_pum(dev, y, n_bits=16)
+                verify(np.array_equal(y, ref), f"{arch} relu L{li}")
+            else:
+                y = ref
+            li += 1
         x = y
         c_in = c_out
 
@@ -71,10 +99,12 @@ def run(
     feat = x.reshape(-1)
     wfc = rng.integers(-8, 8, size=(n_classes, feat.shape[0])).astype(np.int64)
     logits = wfc @ feat
-    t = dev.totals()
     return {
         "arch": arch,
         "macs": total_macs,
         "pred": int(np.argmax(logits)),
-        **t,
+        "backend": dev.backend,
+        "verified": True,
+        "output": logits,
+        **dev.totals(),
     }

@@ -17,6 +17,12 @@ equivalent: a registry of operations, a per-(op, width) compilation cache
                        n_banks × subarrays_per_bank slots, one stacked
                        replay per round, shard_map-ed over the data mesh
                        axis on multi-device hosts (see repro.core.chip)
+  backend="channel"    channel-level partitioned engine: cfg.n_chips chips
+                       of n_banks × subarrays_per_bank slots, one stacked
+                       super-round replay, shard_map-ed over a 2-D
+                       ("channel", "data") mesh on multi-device hosts,
+                       host↔chip transfers priced at cfg.channel_bw_gbs
+                       (see repro.core.channel)
 
 All backends implement identical semantics; tests cross-check them.
 :class:`SimdramDevice` carries the DRAM config and accumulates per-call
@@ -140,6 +146,7 @@ class SimdramDevice:
     calls: List[CallStats] = field(default_factory=list)
     _bank: Optional[object] = field(default=None, repr=False)
     _chip: Optional[object] = field(default=None, repr=False)
+    _channel: Optional[object] = field(default=None, repr=False)
 
     def bank(self):
         """The device's bank-level engine (one compute subarray per bank,
@@ -162,6 +169,20 @@ class SimdramDevice:
                 n_subarrays=self.cfg.subarrays_per_bank,
                 cfg=self.cfg, style=self.style)
         return self._chip
+
+    def channel(self):
+        """The device's channel-level engine: ``cfg.n_chips`` chips of
+        ``cfg.n_banks`` banks sharing one host↔DRAM link, chip slabs
+        sharded over the ``channel`` mesh axis and bank slabs over
+        ``data`` on multi-device hosts; created lazily."""
+        if self._channel is None:
+            from .channel import SimdramChannel
+            self._channel = SimdramChannel(
+                n_chips=self.cfg.n_chips,
+                n_banks=self.cfg.n_banks,
+                n_subarrays=self.cfg.subarrays_per_bank,
+                cfg=self.cfg, style=self.style)
+        return self._channel
 
     def _account(self, name: str, n_bits: int, uprog: UProgram, elements: int):
         # a zero-element call executes no replay (the engines skip it),
@@ -220,6 +241,10 @@ class SimdramDevice:
             return self.chip().bbop(
                 name, *operands, n_bits=n_bits, signed_out=signed_out)
 
+        if self.backend == "channel":
+            return self.channel().bbop(
+                name, *operands, n_bits=n_bits, signed_out=signed_out)
+
         # bitplane / pallas: fused circuit execution (pallas swaps the
         # elementwise executor for the tiled kernel in repro.kernels.ops)
         if self.backend == "pallas":
@@ -254,25 +279,84 @@ class SimdramDevice:
             :class:`repro.core.bank.VerticalOperand` for
             ``keep_vertical`` instructions.
 
-        Routing: the chip-level partitioned engine when
-        ``backend="chip"`` (``cfg.n_banks`` banks sharded over the
-        ``data`` mesh axis), the bank engine otherwise; either engine
-        accumulates its own stats object (``self.chip().stats`` /
-        ``self.bank().stats``), and one :class:`CallStats` per
-        instruction is appended to :attr:`calls` (the device-level
-        μProgram cost model, independent of the engine's wave fusion).
+        Routing: the full backend ladder — the channel-level engine for
+        ``backend="channel"`` (``cfg.n_chips`` chips over a 2-D mesh),
+        the chip-level engine for ``backend="chip"`` (``cfg.n_banks``
+        banks over the ``data`` mesh axis), the fused bank engine for
+        ``backend="bank"``, and a per-instruction sequential drain for
+        the single-subarray backends (``bitplane``/``pallas``/
+        ``subarray``/``interp``): each instruction executes through
+        :meth:`bbop` in queue order with ``Ref``/vertical operands
+        materialized horizontally, the semantics baseline the engines
+        are cross-checked against.  Every path accumulates one
+        :class:`CallStats` per instruction in :attr:`calls` (the
+        device-level μProgram cost model, independent of wave fusion),
+        and the engines additionally accumulate their own stats objects
+        (``self.channel().stats`` / ``self.chip().stats`` /
+        ``self.bank().stats``).
 
         Bit-exactness guarantee: every backend implements identical
         bbop semantics — results match the grouped single-bank baseline
         and the subarray-level DRAM oracle, cross-checked in
-        tests/test_fused_dispatch.py and tests/test_chip.py."""
+        tests/test_fused_dispatch.py, tests/test_chip.py,
+        tests/test_channel.py and tests/test_apps.py."""
         from .bank import plan_queue
         queue = list(queue)     # tolerate iterator queues
-        engine = self.chip() if self.backend == "chip" else self.bank()
-        results = engine.dispatch(queue)
+        engines = {"channel": self.channel, "chip": self.chip,
+                   "bank": self.bank}
+        if self.backend not in engines:
+            return self._dispatch_sequential(queue)
+        results = engines[self.backend]().dispatch(queue)
         for ins, n in zip(queue, plan_queue(queue, self.style)[0]):
             _, uprog = compile_op(ins.op, ins.n_bits, self.style)
             self._account(ins.op, ins.n_bits, uprog, n)
+        return results
+
+    def _dispatch_sequential(self, queue) -> List:
+        """Per-instruction queue drain for the engine-less backends.
+
+        ``Ref`` operands materialize horizontally (the producer's
+        result re-enters the next :meth:`bbop` as a flat array), and
+        every operand is truncated to its spec width — exactly the
+        low-bits packing the vertical-forwarding engines apply, so a
+        signed producer's negative value lands as the same
+        two's-complement planes :func:`repro.core.bank._adapt_planes`
+        would forward.  :meth:`bbop` does the per-instruction
+        accounting."""
+        from .bank import Ref, VerticalOperand, cached_table
+        results: List = [None] * len(queue)
+        for i, ins in enumerate(queue):
+            spec, _, _ = cached_table(ins.op, ins.n_bits, self.style)
+            operands = []
+            for o, w in zip(ins.operands, spec.operand_bits):
+                if isinstance(o, Ref):
+                    prod = queue[o.producer]
+                    r = results[o.producer]
+                    vals = r[o.out] if isinstance(r, tuple) else r
+                    if isinstance(vals, VerticalOperand):
+                        vals = vals.to_values(signed=prod.signed_out)
+                elif isinstance(o, VerticalOperand):
+                    vals = o.to_values()
+                else:
+                    vals = o
+                vals = np.asarray(vals).astype(np.int64)
+                if w < 63:
+                    vals = vals & ((1 << w) - 1)
+                operands.append(vals)
+            if int(operands[0].shape[-1]) == 0:
+                _, uprog = compile_op(ins.op, ins.n_bits, self.style)
+                self._account(ins.op, ins.n_bits, uprog, 0)
+                outs = [np.zeros(0, np.int64) for _ in spec.out_bits]
+            else:
+                r = self.bbop(ins.op, *operands, n_bits=ins.n_bits,
+                              signed_out=ins.signed_out)
+                outs = list(r) if isinstance(r, tuple) else [r]
+            if ins.keep_vertical:
+                vos = [VerticalOperand.from_values(np.asarray(v), w)
+                       for v, w in zip(outs, spec.out_bits)]
+                results[i] = vos[0] if len(vos) == 1 else tuple(vos)
+            else:
+                results[i] = outs[0] if len(outs) == 1 else tuple(outs)
         return results
 
     # -- reporting -------------------------------------------------------------

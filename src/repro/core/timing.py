@@ -34,6 +34,7 @@ class DramConfig:
     rows_per_subarray: int = 1024
     n_banks: int = 16                      # compute banks active in parallel
     subarrays_per_bank: int = 1            # simultaneously-computing subarrays
+    n_chips: int = 1                       # chips sharing one memory channel
     channel_bw_gbs: float = 19.2           # DDR4-2400 x64
 
     @property

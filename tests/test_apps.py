@@ -1,10 +1,28 @@
-"""The 7 paper application kernels end-to-end (small sizes, real bbops)."""
+"""The 7 paper application kernels end-to-end (small sizes, real bbops).
+
+The cross-backend block is the apps-on-the-ladder contract: every kernel
+builds one ``BbopInstr`` queue and must produce BIT-IDENTICAL output
+arrays whether that queue drains through the sequential bitplane path,
+the fused bank engine, the multi-bank chip engine, or the multi-chip
+channel engine.
+"""
 
 import numpy as np
 import pytest
+from _hypothesis_compat import given, settings, st
 
-from repro.apps import bitweaving, brightness, knn, lenet, tpch, vgg
+from repro.apps import (bitweaving, brightness, knn, lenet, nn_layers, tpch,
+                        vgg)
+from repro.apps.runtime import LADDER, AppVerificationError, verify
 from repro.core.isa import SimdramDevice
+from repro.core.timing import DramConfig
+
+# small enough for four-backend sweeps, parallel enough to shard
+SMALL = DramConfig(n_banks=2, subarrays_per_bank=2, n_chips=2)
+
+
+def _dev(backend):
+    return SimdramDevice(backend=backend, cfg=SMALL, style="mig")
 
 
 def test_bitweaving_scans():
@@ -16,6 +34,24 @@ def test_brightness_clamp():
     r = brightness.run(h=16, w=16, delta=60)
     assert r["pixels"] == 3 * 16 * 16
     r = brightness.run(h=8, w=8, delta=-200)   # exercises under-clamp
+
+
+def test_brightness_rejects_out_of_range_delta():
+    with pytest.raises(ValueError):
+        brightness.run(h=2, w=2, delta=300)
+    with pytest.raises(ValueError):
+        brightness.run(h=2, w=2, delta=-600)
+
+
+def test_relu_rejects_out_of_range_activations():
+    with pytest.raises(ValueError):
+        nn_layers.relu_pum(_dev("bitplane"), np.array([1 << 20]), n_bits=8)
+
+
+def test_verify_raises_with_context():
+    with pytest.raises(AppVerificationError, match="boom"):
+        verify(False, "boom", got=1, want=2)
+    verify(True, "fine")
 
 
 def test_tpch_query():
@@ -48,3 +84,64 @@ def test_apps_cheaper_on_simdram_than_ambit():
     r_am = tpch.run(n_rows=512, device=d_am)
     assert r_sd["latency_s"] < r_am["latency_s"]
     assert r_sd["energy_mj"] < r_am["energy_mj"]
+
+
+# --- the ladder contract: all seven apps, bit-exact on every backend ---------
+
+APPS = [
+    ("knn", lambda d: knn.run(n_points=96, n_features=3, n_bits=5, device=d)),
+    ("tpch", lambda d: tpch.run(n_rows=128, device=d)),
+    ("bitweaving", lambda d: bitweaving.run(n_rows=160, n_bits=6, device=d)),
+    ("brightness", lambda d: brightness.run(h=6, w=6, delta=60, device=d)),
+    ("nn_layers", lambda d: nn_layers.run(device=d)),
+    ("lenet", lambda d: lenet.run(device=d, conv_channels=(2, 3),
+                                  fc_dims=(12, 10))),
+    ("vgg13", lambda d: vgg.run("vgg13", img_hw=8, n_layers=3, device=d)),
+]
+
+
+@pytest.mark.parametrize("name,fn", APPS, ids=[n for n, _ in APPS])
+@pytest.mark.parametrize("backend", LADDER[1:])
+def test_app_bit_exact_across_ladder(name, fn, backend):
+    base = fn(_dev(LADDER[0]))
+    r = fn(_dev(backend))
+    assert base["verified"] is True and r["verified"] is True
+    assert r["backend"] == backend
+    np.testing.assert_array_equal(np.asarray(base["output"]),
+                                  np.asarray(r["output"]))
+
+
+def test_backend_parameter_builds_matching_device():
+    r = brightness.run(h=4, w=4, backend="bank")
+    assert r["backend"] == "bank"
+
+
+# --- width/signedness plumbing (the knn audit) -------------------------------
+
+@st.composite
+def _knn_window(draw):
+    """Points pinned at the edges of one 2**n_bits-wide window — the
+    boundary pairs (±2**(n_bits-1), full-range spans) that the widened
+    (n+1)-bit signed subtract must represent exactly."""
+    n_bits = draw(st.integers(min_value=2, max_value=6))
+    signed = draw(st.booleans())
+    if signed:
+        lo, hi = -(1 << (n_bits - 1)), (1 << (n_bits - 1)) - 1
+    else:
+        lo, hi = 0, (1 << n_bits) - 1
+    mid = draw(st.integers(min_value=lo, max_value=hi))
+    vals = [lo, hi, lo, hi, mid, draw(st.integers(min_value=lo, max_value=hi))]
+    q = draw(st.sampled_from([lo, hi, mid]))
+    return n_bits, vals, q
+
+
+@given(_knn_window(), st.sampled_from(["bitplane", "bank"]))
+@settings(max_examples=25)
+def test_knn_distance_exact_at_window_edges(window, backend):
+    n_bits, vals, q = window
+    refs = np.array(vals, np.int64).reshape(-1, 1)
+    refs = np.concatenate([refs, refs[::-1]], axis=1)     # two features
+    query = np.array([q, q], np.int64)
+    dist = knn.l1_distance(_dev(backend), refs, query, n_bits)
+    want = np.abs(refs - query[None, :]).sum(axis=1)
+    np.testing.assert_array_equal(dist, want)
