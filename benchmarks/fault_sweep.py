@@ -1,0 +1,209 @@
+"""Fault-injection sweep: detection/retry/degradation under the ladder.
+
+SIMDRAM's reliability study (paper §5) ends at a failure *rate*; this
+benchmark closes the loop by running real dispatches under those rates
+through the fault layer (:mod:`repro.core.fault`) and emitting
+``BENCH_faults.json``:
+
+  - **bit-exact gate**: all 16 ops in both MIG and AIG styles dispatch
+    through a fault-injected chip (σ = 15 %, one spare lane, a sprinkle
+    of stuck-at columns) and must match the clean chip bit-exactly
+    after detection / retry / remap (exits non-zero on divergence —
+    the CI acceptance gate);
+  - **σ × spare-lane sweep**: per-configuration
+    :class:`repro.core.fault.FaultStats` counters (injected, detected,
+    corrected, retries, remapped) plus the derived per-activation flip
+    probability and modeled detection/retry overhead;
+  - **disabled-model gate**: a ``FaultModel(enabled=False)`` dispatch
+    must add zero modeled overhead and zero new traces vs a plain chip
+    (the zero-cost-when-off guarantee);
+  - **reliability decomposition**: the per-TRA-pattern failure
+    breakdown (:func:`repro.core.reliability.tra_failure_breakdown`)
+    the flip probabilities derive from.
+
+Output follows the harness contract: ``name,us_per_call,derived`` CSV
+rows.
+
+  python -m benchmarks.fault_sweep            # full sweep
+  python -m benchmarks.fault_sweep --smoke    # CI configuration
+"""
+
+from __future__ import annotations
+
+import json
+import time
+from typing import Dict, Sequence
+
+import numpy as np
+
+from repro.core.bank import Bank, flatten_result
+from repro.core.chip import SimdramChip
+from repro.core.fault import FaultExhaustedError, FaultModel
+from repro.core.ops_library import ALL_OPS
+from repro.core.reliability import tra_failure_breakdown
+
+from .bank_scaling import _mix_queue
+from .chip_scaling import _gate_queue
+
+SIGMAS = (0.12, 0.15, 0.18)
+SPARE_LANES = (1, 2)
+
+
+def _assert_bit_exact(faulty_results, clean_results, what: str) -> None:
+    for i, (a, b) in enumerate(zip(faulty_results, clean_results)):
+        for x, y in zip(flatten_result(a), flatten_result(b)):
+            if not np.array_equal(x, y):
+                raise SystemExit(
+                    f"FAULT-PROTECTED DISPATCH DIVERGES from clean "
+                    f"execution at instruction {i} ({what})")
+
+
+def table_fault_sweep(
+    sigmas: Sequence[float] = SIGMAS,
+    spare_lanes: Sequence[int] = SPARE_LANES,
+    lanes: int = 256,
+    n_instrs: int = 8,
+    gate_lanes: int = 64,
+    n_banks: int = 2,
+    n_subarrays: int = 4,
+    p_trials: int = 200_000,
+    out_json: str | None = "BENCH_faults.json",
+) -> Dict:
+    """Bit-exact gate + σ×spares sweep + zero-cost-off gate + breakdown."""
+    report: Dict = {
+        "config": {"sigmas": list(sigmas), "spare_lanes": list(spare_lanes),
+                   "lanes": lanes, "n_instrs": n_instrs,
+                   "n_banks": n_banks, "n_subarrays": n_subarrays,
+                   "p_trials": p_trials},
+        "gate": {},
+        "sweep": {},
+        "disabled": {},
+        "reliability": {},
+    }
+
+    # -- all-16-ops bit-exact gate under paper-rate faults, both styles ----
+    print("# fault_sweep/gate: name,us_per_call,derived(corrected)")
+    gate_model = FaultModel(sigma=0.15, p_trials=p_trials, spare_lanes=1,
+                            stuck_lane_rate=0.002, seed=0)
+    for style in ("mig", "aig"):
+        queue = _gate_queue(style, gate_lanes)
+        clean = SimdramChip(n_banks=n_banks, n_subarrays=n_subarrays,
+                            style=style).dispatch(queue)
+        chip = SimdramChip(n_banks=n_banks, n_subarrays=n_subarrays,
+                           style=style, fault=gate_model)
+        t0 = time.perf_counter()
+        faulty = chip.dispatch(queue)
+        gate_us = (time.perf_counter() - t0) * 1e6
+        _assert_bit_exact(faulty, clean, f"gate/{style}")
+        fs = chip.stats.faults.as_dict()
+        report["gate"][style] = {"ops": len(ALL_OPS), "bit_exact": True,
+                                 **fs}
+        print(f"fault/gate/{style},{gate_us / len(queue):.0f},"
+              f"{fs['corrected']}  # {len(ALL_OPS)} ops bit-exact, "
+              f"injected={fs['injected']} detected={fs['detected']} "
+              f"retries={fs['retries']}")
+
+    # -- σ × spare-lane sweep at bank tier ---------------------------------
+    print("# fault_sweep/sweep: name,us_per_call,derived(overhead_s)")
+    clean_bank_out = Bank(n_subarrays=n_subarrays).dispatch(
+        _mix_queue(lanes, n_instrs, (8, 16), seed=0))
+    for sigma in sigmas:
+        for spares in spare_lanes:
+            model = FaultModel(sigma=sigma, p_trials=p_trials,
+                               spare_lanes=spares,
+                               stuck_lane_rate=0.002, seed=21)
+            bank = Bank(n_subarrays=n_subarrays, fault=model)
+            key = f"sigma={sigma:.2f}/spares={spares}"
+            t0 = time.perf_counter()
+            try:
+                out = bank.dispatch(_mix_queue(lanes, n_instrs, (8, 16),
+                                               seed=0))
+            except FaultExhaustedError:
+                # outside the protection envelope (e.g. σ=0.18 with a
+                # single spare: a 2-replica vote detects but cannot
+                # correct) — the BOUNDED failure is the result
+                fs = bank.stats.faults.as_dict()
+                report["sweep"][key] = {
+                    "p_flip": model.flip_probability(),
+                    "replicas": model.replicas,
+                    "bit_exact": False,
+                    "exhausted": True,
+                    **fs,
+                }
+                print(f"fault/{key},0,-1  # EXHAUSTED (bounded) "
+                      f"p={model.flip_probability():.1e} "
+                      f"retries={fs['retries']} "
+                      f"redispatches={fs['redispatches']}")
+                continue
+            wall_us = (time.perf_counter() - t0) * 1e6
+            _assert_bit_exact(out, clean_bank_out, f"sweep/{key}")
+            fs = bank.stats.faults.as_dict()
+            report["sweep"][key] = {
+                "p_flip": model.flip_probability(),
+                "replicas": model.replicas,
+                "bit_exact": True,
+                "exhausted": False,
+                "modeled_total_latency_s": bank.stats.total_latency_s,
+                **fs,
+            }
+            print(f"fault/{key},{wall_us / n_instrs:.0f},"
+                  f"{fs['overhead_s']:.2e}  # p={model.flip_probability():.1e}"
+                  f" injected={fs['injected']} detected={fs['detected']}"
+                  f" corrected={fs['corrected']} retries={fs['retries']}"
+                  f" remapped={fs['remapped']}")
+
+    # -- zero-cost-when-disabled gate --------------------------------------
+    from repro.core.control_unit import trace_counts
+
+    plain = SimdramChip(n_banks=n_banks, n_subarrays=n_subarrays)
+    q = _mix_queue(lanes, n_instrs, (8, 16), seed=0)
+    r_plain = plain.dispatch(q)
+    tr0 = trace_counts()
+    off = SimdramChip(n_banks=n_banks, n_subarrays=n_subarrays,
+                      fault=FaultModel(enabled=False))
+    r_off = off.dispatch(_mix_queue(lanes, n_instrs, (8, 16), seed=0))
+    tr1 = trace_counts()
+    new_traces = sum(tr1.values()) - sum(tr0.values())
+    _assert_bit_exact(r_off, r_plain, "disabled")
+    if new_traces:
+        raise SystemExit(
+            f"DISABLED FAULT MODEL RETRACED: {new_traces} new traces "
+            "(must reuse the plain chip's compiled replays)")
+    if off.stats.faults.overhead_s != 0.0 or off.stats.faults.any:
+        raise SystemExit("DISABLED FAULT MODEL ADDED OVERHEAD")
+    if off.stats.latency_s != plain.stats.latency_s:
+        raise SystemExit("DISABLED FAULT MODEL CHANGED MODELED LATENCY")
+    report["disabled"] = {"zero_overhead": True, "new_traces": 0,
+                          "bit_exact": True}
+    print("fault/disabled,0.00,0  # enabled=False adds no traces and "
+          "no modeled overhead")
+
+    # -- per-pattern reliability decomposition -----------------------------
+    for sigma in sigmas:
+        bd = tra_failure_breakdown(sigma, n_trials=p_trials)
+        report["reliability"][f"{sigma:.2f}"] = bd
+        print(f"fault/breakdown/sigma={sigma:.2f},0.00,{bd['overall']:.2e}")
+
+    if out_json:
+        with open(out_json, "w") as f:
+            json.dump(report, f, indent=2, sort_keys=True)
+        print(f"# wrote {out_json}")
+    return report
+
+
+if __name__ == "__main__":
+    import argparse
+
+    p = argparse.ArgumentParser()
+    p.add_argument("--smoke", action="store_true",
+                   help="fast CI configuration (fewer σ points, 50k "
+                        "reliability trials)")
+    p.add_argument("--json", default="BENCH_faults.json",
+                   help="output path for the fault bench report")
+    args = p.parse_args()
+    if args.smoke:
+        table_fault_sweep(sigmas=(0.15, 0.18), spare_lanes=(1,),
+                          lanes=128, n_instrs=8, p_trials=50_000,
+                          out_json=args.json)
+    else:
+        table_fault_sweep(out_json=args.json)

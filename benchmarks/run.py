@@ -19,9 +19,16 @@ import time
 
 from . import bank_scaling as B
 from . import chip_scaling as C
+from . import fault_sweep as F
 from . import paper_tables as T
 
 TABLES = {
+    "fault_sweep": lambda full, smoke=False: F.table_fault_sweep(
+        sigmas=(0.12, 0.15, 0.18) if full else (0.15, 0.18),
+        spare_lanes=(1, 2) if full else (1,),
+        lanes=256 if full else 128,
+        p_trials=200_000 if full else 50_000,
+        out_json=None),
     "chip_scaling": lambda full, smoke=False: C.table_chip_scaling(
         lanes=65536 if full else 4096,
         n_instrs=32 if full else 16,

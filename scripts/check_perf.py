@@ -1,0 +1,261 @@
+#!/usr/bin/env python
+"""Evidence-gated perf CI: compare fresh BENCH_*.json against baselines.
+
+The smoke benches in scripts/ci.sh regenerate ``BENCH_dispatch.json``,
+``BENCH_chip.json``, ``BENCH_channel.json``, ``BENCH_apps.json`` and
+``BENCH_faults.json`` on every run; this script diffs them against the
+committed baselines in ``benchmarks/baselines/`` and fails the build on
+a perf or correctness regression.  The verdict is machine-readable:
+``PERF_VERDICT.json`` lists every comparison that ran and every
+regression found.
+
+Rules (applied per leaf key, walking both JSON trees in lockstep):
+
+  - **noise keys are ignored**: anything measured on the host wall
+    clock (``measured_*``, ``*wall*``, ``*_us``) varies with CI load
+    and never gates;
+  - **modeled time (lower is better)**: keys ending ``_s`` — modeled
+    latency / transfer / transpose / fault overhead — must satisfy
+    ``current <= baseline * (1 + tol)``;
+  - **throughput (higher is better)**: keys ending ``gops``,
+    ``speedup`` or ``_saved`` must satisfy
+    ``current >= baseline * (1 - tol)``;
+  - **replay-economy counters (lower is better)**: ``replays``,
+    ``rounds``, ``super_rounds``, ``bank_waves``, ``batches``,
+    ``fused_batches``, ``transfer_bytes``, ``new_traces_per_dispatch``,
+    ``table_cache_misses_per_dispatch`` must not exceed the baseline;
+  - **correctness booleans**: ``bit_exact`` / ``verified`` /
+    ``zero_overhead`` that are true in the baseline must stay true;
+    ``exhausted`` that is false in the baseline must stay false;
+  - **fault evidence**: ``injected`` / ``detected`` / ``corrected``
+    that are non-zero in the baseline must stay non-zero (the fault
+    path is actually exercising, not silently disabled).
+
+A baseline key missing from the current report is a schema regression
+and fails.  New keys in the current report pass (they gate once the
+baseline is re-promoted).  Config blocks must match exactly — the
+baselines are smoke-config artifacts, so a mismatch means the bench
+and baseline drifted apart (re-promote with ``--promote``).
+
+Usage:
+  python scripts/check_perf.py                 # gate (CI)
+  python scripts/check_perf.py --tol 0.10      # looser ratio gates
+  python scripts/check_perf.py --promote       # refresh the baselines
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import os
+import shutil
+import sys
+from typing import Any, Dict, List
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BASELINE_DIR = os.path.join(REPO, "benchmarks", "baselines")
+BENCH_FILES = ("BENCH_dispatch.json", "BENCH_chip.json",
+               "BENCH_channel.json", "BENCH_apps.json",
+               "BENCH_faults.json")
+
+LOWER_COUNTERS = {
+    "replays", "rounds", "super_rounds", "bank_waves", "batches",
+    "fused_batches", "transfer_bytes", "new_traces_per_dispatch",
+    "table_cache_misses_per_dispatch", "transpositions",
+}
+TRUE_STAYS_TRUE = {"bit_exact", "verified", "zero_overhead"}
+FALSE_STAYS_FALSE = {"exhausted"}
+NONZERO_STAYS_NONZERO = {"injected", "detected", "corrected"}
+
+
+def _ignored(key: str) -> bool:
+    return (key.startswith("measured") or "wall" in key
+            or key.endswith("_us") or key in ("utilization", "devices",
+                                              "sharded", "imbalance"))
+
+
+def _classify(key: str):
+    """Which gate applies to this leaf key (None = informational)."""
+    if _ignored(key):
+        return None
+    if key in TRUE_STAYS_TRUE:
+        return "true_stays_true"
+    if key in FALSE_STAYS_FALSE:
+        return "false_stays_false"
+    if key in NONZERO_STAYS_NONZERO:
+        return "nonzero_stays_nonzero"
+    if key in LOWER_COUNTERS:
+        return "counter_le"
+    if key.endswith("gops") or key.endswith("speedup") \
+            or key.endswith("_saved"):
+        return "higher_better"
+    if key.endswith("_s"):
+        return "lower_better"
+    return None
+
+
+def _walk(base: Any, cur: Any, path: str, tol: float,
+          regressions: List[Dict], counts: Dict[str, int]) -> None:
+    if isinstance(base, dict):
+        if not isinstance(cur, dict):
+            regressions.append({"path": path, "kind": "schema",
+                                "baseline": "object",
+                                "current": type(cur).__name__})
+            return
+        for k, bv in base.items():
+            if k not in cur:
+                if isinstance(bv, (dict, list)) or _classify(k):
+                    regressions.append({"path": f"{path}/{k}",
+                                        "kind": "missing_key",
+                                        "baseline": bv, "current": None})
+                continue
+            _walk(bv, cur[k], f"{path}/{k}", tol, regressions, counts)
+        return
+    if isinstance(base, list):
+        if not isinstance(cur, list) or len(cur) != len(base):
+            return                      # lists are informational
+        for i, bv in enumerate(base):
+            _walk(bv, cur[i], f"{path}[{i}]", tol, regressions, counts)
+        return
+
+    key = path.rsplit("/", 1)[-1].split("[")[0]
+    rule = _classify(key)
+    if rule is None:
+        return
+    counts["checked"] += 1
+    bad = None
+    if rule == "true_stays_true":
+        if bool(base) and not bool(cur):
+            bad = "correctness boolean flipped false"
+    elif rule == "false_stays_false":
+        if not bool(base) and bool(cur):
+            bad = "degradation boolean flipped true"
+    elif rule == "nonzero_stays_nonzero":
+        if _num(base) > 0 and _num(cur) == 0:
+            bad = "fault-evidence counter dropped to zero"
+    elif rule == "counter_le":
+        if _num(cur) > _num(base):
+            bad = "counter exceeded baseline"
+    elif rule == "lower_better":
+        if _num(cur) > _num(base) * (1.0 + tol) + 1e-15:
+            bad = f"modeled time regressed beyond {tol:.0%}"
+    elif rule == "higher_better":
+        if _num(cur) < _num(base) * (1.0 - tol) - 1e-15:
+            bad = f"throughput regressed beyond {tol:.0%}"
+    if bad:
+        regressions.append({"path": path, "kind": rule, "why": bad,
+                            "baseline": base, "current": cur})
+
+
+def _num(x: Any) -> float:
+    try:
+        v = float(x)
+        return v if math.isfinite(v) else 0.0
+    except (TypeError, ValueError):
+        return 0.0
+
+
+def check(current_dir: str, baseline_dir: str, tol: float,
+          allow_config_mismatch: bool) -> Dict:
+    verdict: Dict = {"ok": True, "tol": tol, "files": {},
+                     "regressions": []}
+    for name in BENCH_FILES:
+        bpath = os.path.join(baseline_dir, name)
+        cpath = os.path.join(current_dir, name)
+        entry: Dict = {"baseline": os.path.relpath(bpath, REPO),
+                       "current": cpath, "checked": 0}
+        if not os.path.exists(bpath):
+            entry["status"] = "no_baseline"
+            verdict["files"][name] = entry
+            continue
+        if not os.path.exists(cpath):
+            entry["status"] = "missing_current"
+            verdict["ok"] = False
+            verdict["regressions"].append(
+                {"path": name, "kind": "missing_file",
+                 "why": "bench artifact was not produced"})
+            verdict["files"][name] = entry
+            continue
+        with open(bpath) as f:
+            base = json.load(f)
+        with open(cpath) as f:
+            cur = json.load(f)
+        if base.get("config") != cur.get("config") \
+                and not allow_config_mismatch:
+            entry["status"] = "config_mismatch"
+            verdict["ok"] = False
+            verdict["regressions"].append(
+                {"path": f"{name}/config", "kind": "config_mismatch",
+                 "why": "bench config drifted from the baseline "
+                        "(re-promote with --promote)",
+                 "baseline": base.get("config"),
+                 "current": cur.get("config")})
+            verdict["files"][name] = entry
+            continue
+        regs: List[Dict] = []
+        counts = {"checked": 0}
+        _walk(base, cur, name, tol, regs, counts)
+        entry["checked"] = counts["checked"]
+        entry["status"] = "ok" if not regs else "regressed"
+        if regs:
+            verdict["ok"] = False
+            verdict["regressions"].extend(regs)
+        verdict["files"][name] = entry
+    return verdict
+
+
+def promote(current_dir: str, baseline_dir: str) -> None:
+    os.makedirs(baseline_dir, exist_ok=True)
+    for name in BENCH_FILES:
+        src = os.path.join(current_dir, name)
+        if os.path.exists(src):
+            shutil.copy2(src, os.path.join(baseline_dir, name))
+            print(f"promoted {name} -> "
+                  f"{os.path.relpath(baseline_dir, REPO)}/")
+        else:
+            print(f"skip {name}: not present in {current_dir}")
+
+
+def main() -> int:
+    p = argparse.ArgumentParser()
+    p.add_argument("--current-dir", default=REPO,
+                   help="directory holding the fresh BENCH_*.json")
+    p.add_argument("--baseline-dir", default=BASELINE_DIR)
+    p.add_argument("--tol", type=float, default=0.05,
+                   help="relative tolerance for ratio gates")
+    p.add_argument("--out", default=os.path.join(REPO,
+                                                 "PERF_VERDICT.json"))
+    p.add_argument("--promote", action="store_true",
+                   help="copy the current artifacts over the baselines "
+                        "instead of gating")
+    p.add_argument("--allow-config-mismatch", action="store_true")
+    args = p.parse_args()
+
+    if args.promote:
+        promote(args.current_dir, args.baseline_dir)
+        return 0
+
+    verdict = check(args.current_dir, args.baseline_dir, args.tol,
+                    args.allow_config_mismatch)
+    with open(args.out, "w") as f:
+        json.dump(verdict, f, indent=2, sort_keys=True)
+    checked = sum(e.get("checked", 0) for e in verdict["files"].values())
+    for name, entry in verdict["files"].items():
+        print(f"{name}: {entry['status']} ({entry.get('checked', 0)} "
+              "gated keys)")
+    if not verdict["ok"]:
+        print(f"\nPERF GATE FAILED — {len(verdict['regressions'])} "
+              f"regression(s), see {os.path.relpath(args.out, REPO)}:")
+        for r in verdict["regressions"][:20]:
+            print(f"  {r['path']}: {r.get('why', r['kind'])} "
+                  f"(baseline={r.get('baseline')!r} "
+                  f"current={r.get('current')!r})")
+        return 1
+    print(f"\nPERF GATE OK — {checked} keys gated, verdict written to "
+          f"{os.path.relpath(args.out, REPO)}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

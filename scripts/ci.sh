@@ -66,6 +66,20 @@ echo "== apps-on-the-ladder smoke gate (8 forced host devices) =="
 XLA_FLAGS=--xla_force_host_platform_device_count=8 \
     python -m benchmarks.run --table apps --smoke
 
+echo "== fault-injection smoke gate (2 forced devices: sharded faulty replay) =="
+# exits non-zero if any of the 16 ops diverges from clean execution
+# under paper-rate fault injection (MIG + AIG), or if a disabled
+# FaultModel adds traces or modeled overhead; BENCH_faults.json is a
+# CI artifact
+XLA_FLAGS=--xla_force_host_platform_device_count=2 \
+    python -m benchmarks.fault_sweep --smoke --json BENCH_faults.json
+
+echo "== evidence-gated perf verdict (fresh BENCH_* vs benchmarks/baselines) =="
+# machine-readable verdict in PERF_VERDICT.json; exits non-zero when a
+# modeled latency / throughput / replay-economy counter regresses past
+# tolerance or a correctness boolean flips (see scripts/check_perf.py)
+python scripts/check_perf.py
+
 echo "== docs lint (README/ARCHITECTURE references must resolve) =="
 python scripts/check_docs.py
 

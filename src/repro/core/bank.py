@@ -115,10 +115,14 @@ class BankStats:
     pack_wall_s: float = 0.0  # measured host seconds spent packing waves
     wall_s: float = 0.0       # measured host seconds spent in dispatch()
     subarray_programs: np.ndarray = field(default=None)  # type: ignore
+    faults: object = field(default=None)   # FaultStats (always present)
 
     def __post_init__(self):
         if self.subarray_programs is None:
             self.subarray_programs = np.zeros(self.n_subarrays, np.int64)
+        if self.faults is None:
+            from .fault import FaultStats
+            self.faults = FaultStats()
 
     def add_wave(self, cost, fused: bool, concurrent: bool = False):
         """Accumulate one wave's :class:`WaveCost`.  ``concurrent=True``
@@ -144,8 +148,10 @@ class BankStats:
         path actually paid — the end-to-end modeled wall-clock.  The
         fused dispatcher's forwarded hops show up here as savings
         (``transpose_s`` stays low) where ``latency_s`` alone is blind
-        to them."""
-        return self.latency_s + self.transpose_s
+        to them.  The fault layer's redundant replays and vote reads
+        (``faults.overhead_s``) land here too — zero when injection is
+        disabled."""
+        return self.latency_s + self.transpose_s + self.faults.overhead_s
 
     def as_dict(self) -> Dict[str, float]:
         return {
@@ -165,6 +171,10 @@ class BankStats:
             "pack_wall_s": self.pack_wall_s,
             "wall_s": self.wall_s,
             "throughput_gops": self.throughput_gops,
+            # only when the fault layer actually did something, so
+            # fault-free benchmark snapshots keep their schema
+            **({"faults": self.faults.as_dict()} if self.faults.any
+               else {}),
         }
 
 
@@ -328,6 +338,36 @@ def flatten_result(result) -> List[np.ndarray]:
             else np.asarray(o) for o in outs]
 
 
+def validate_queue(queue: Sequence[BbopInstr], style: str = "mig"):
+    """Reject malformed queues with a clear :class:`ValueError` before
+    anything reaches the interpreter: unknown op names, wrong operand
+    counts, and horizontal operands that disagree on lane count (the
+    vertical-operand and ``Ref`` checks live in :func:`plan_queue`,
+    which calls this first).  Returns the queue unchanged."""
+    for i, ins in enumerate(queue):
+        try:
+            spec, _, _ = cached_table(ins.op, ins.n_bits, style)
+        except KeyError as e:
+            raise ValueError(
+                f"instr {i}: unknown op {ins.op!r} — see "
+                "repro.core.ops_library.ALL_OPS") from e
+        if len(ins.operands) != spec.n_operands:
+            raise ValueError(
+                f"instr {i} ({ins.op}/{ins.n_bits}b): expects "
+                f"{spec.n_operands} operands, got {len(ins.operands)}")
+        horiz = {
+            k: int(np.asarray(o).shape[-1])
+            for k, o in enumerate(ins.operands)
+            if not isinstance(o, (Ref, VerticalOperand))
+        }
+        if len(set(horiz.values())) > 1:
+            raise ValueError(
+                f"instr {i} ({ins.op}/{ins.n_bits}b): horizontal "
+                f"operands disagree on lane count: "
+                f"{{{', '.join(f'{k}: {n}' for k, n in horiz.items())}}}")
+    return queue
+
+
 def plan_queue(queue: Sequence[BbopInstr], style: str = "mig"):
     """Resolve a queue's dataflow: per-instruction lane counts, dependency
     stages (a consumer runs strictly after its producers), and the set of
@@ -340,6 +380,7 @@ def plan_queue(queue: Sequence[BbopInstr], style: str = "mig"):
     than silently diverging.  Shared by :meth:`Bank.dispatch` and the
     chip-level partitioned dispatcher (:mod:`repro.core.chip`).
     """
+    validate_queue(queue, style)
     n = len(queue)
     lanes, stage, needed = [0] * n, [0] * n, set()
     for i, ins in enumerate(queue):
@@ -403,7 +444,8 @@ class Bank:
     def __init__(self, n_subarrays: int = 4, cfg: DramConfig = DDR4,
                  style: str = "mig", engine: str = "interp",
                  fuse: bool = True, fuse_ratio: int = 32,
-                 packing: str = "reorder"):
+                 packing: str = "reorder", fault=None,
+                 fault_seed: Tuple[int, ...] = ()):
         if engine not in ("interp", "bitplane", "pallas"):
             raise ValueError(f"unknown engine {engine!r}")
         if fuse_ratio < 1:
@@ -417,9 +459,27 @@ class Bank:
         self.fuse = fuse
         self.fuse_ratio = fuse_ratio
         self.packing = packing
+        self.fault = fault if (fault is not None and fault.enabled) else None
+        self._blacklist: set = set()   # persistently-failing subarray ids
+        if self.fault is not None:
+            if not (engine == "interp" and fuse):
+                raise ValueError(
+                    "fault injection runs inside the fused interp replay; "
+                    "use engine='interp', fuse=True")
+            from .fault import FaultRuntime
+            self._fault_rt = FaultRuntime(
+                self.fault, tuple(fault_seed), n_subarrays)
+        else:
+            self._fault_rt = None
         self.stats = BankStats(n_subarrays)
         self._rr_next = 0     # round-robin allocation cursor (grouped path)
         self._lane_load = np.zeros(n_subarrays, np.int64)  # fused-slot loads
+
+    @property
+    def _wave_capacity(self) -> int:
+        """Subarrays a wave may still occupy: everything not blacklisted
+        by the fault layer (all of them while injection is off)."""
+        return self.n_subarrays - len(self._blacklist)
 
     # -- core: one op, up to n_subarrays operand sets, one replay ----------
     def execute_batch(
@@ -571,7 +631,23 @@ class Bank:
         the same (op, width, signedness) are allocated round-robin
         across subarrays and each full batch replays its cached command
         table once (the grouped baseline).
+
+        With a :class:`~repro.core.fault.FaultModel` attached, the queue
+        first replicates every lane across the spare columns, then
+        drains through the same fused path with the fault-injected
+        interpreter — detection, bounded retry, blacklist-and-repack,
+        and finally :class:`~repro.core.fault.FaultExhaustedError` when
+        the redundancy budget runs out (see :mod:`repro.core.fault`).
         """
+        queue = list(queue)
+        if self.fault is None or not queue:
+            return self._dispatch_core(queue)
+        from .fault import fault_guarded_dispatch
+        return fault_guarded_dispatch(
+            self.fault, self.stats.faults, queue, self._dispatch_core,
+            self._blacklist_units, lambda: self._wave_capacity)
+
+    def _dispatch_core(self, queue: Sequence[BbopInstr]) -> List:
         queue = list(queue)
         results: List = [None] * len(queue)
         if not queue:
@@ -636,7 +712,7 @@ class Bank:
             states, tables, entries = self._pack_wave(
                 queue, wave, lanes, planes_cache)
             self.stats.pack_wall_s += time.perf_counter() - t_pack
-            fut = run(jnp.asarray(states), jnp.asarray(tables))  # async
+            fut = self._submit_wave(run, states, tables, entries)  # async
             self._account_wave(
                 [(e.uprog, e.lanes, e.sid) for e in entries],
                 fused=len({(queue[i].op, queue[i].n_bits,
@@ -651,6 +727,28 @@ class Bank:
         if pending is not None:
             jax.block_until_ready(pending[1])     # drain the pipeline
             self._harvest_wave(queue, pending, planes_cache, needed, results)
+
+    def _submit_wave(self, run, states, tables, entries):
+        """Submit one packed wave for replay.  Fault-free: the async
+        jitted call, untouched.  Fault-injected: the synchronous
+        detect/retry/heal loop (:func:`repro.core.fault.faulty_execute`)
+        over the bank-tier faulty interpreter — it returns a healed
+        numpy state array, which the harvest path treats exactly like a
+        drained device future."""
+        if self._fault_rt is None:
+            return run(jnp.asarray(states), jnp.asarray(tables))
+        from .control_unit import faulty_batched_interpreter
+        from .fault import faulty_execute
+        return faulty_execute(
+            self.fault, faulty_batched_interpreter(), states, tables,
+            [((), entries, self._fault_rt)], self.stats.faults, self.cfg)
+
+    def _blacklist_units(self, units) -> int:
+        """Retire persistently-failing subarrays (``units`` are
+        ``(sid,)`` tuples); returns how many are newly blacklisted."""
+        new = {int(u[-1]) for u in units} - self._blacklist
+        self._blacklist |= new
+        return len(new)
 
     def _build_waves(self, queue, active, stage,
                      lanes: Optional[Sequence[int]] = None) -> List[List[int]]:
@@ -777,7 +875,7 @@ class Bank:
                 c, r = buckets(i)
                 if not wave:
                     wave, span = [i], [c, c, r, r]
-                elif (len(wave) < self.n_subarrays
+                elif (len(wave) < self._wave_capacity
                         and max(span[1], c) <= min(span[0], c)
                         * self.fuse_ratio
                         and max(span[3], r) <= min(span[2], r)
@@ -797,7 +895,7 @@ class Bank:
         for i in idxs:
             c, r = buckets(i)
             for wave, sp in zip(open_, spans):
-                if (len(wave) < self.n_subarrays
+                if (len(wave) < self._wave_capacity
                         and max(sp[1], c) <= min(sp[0], c) * self.fuse_ratio
                         and max(sp[3], r) <= min(sp[2], r) * self.fuse_ratio):
                     wave.append(i)
@@ -819,7 +917,7 @@ class Bank:
                 # sorted by cmds desc, so c_max is the wave head's; the
                 # row span needs running min/max (rows do not follow the
                 # command-count order)
-                if (len(wave) == self.n_subarrays
+                if (len(wave) >= self._wave_capacity
                         or c_max > c * self.fuse_ratio
                         or max(r_max, r) > min(r_min, r)
                         * self.fuse_ratio):
@@ -892,7 +990,8 @@ class Bank:
         states = np.zeros((self.n_subarrays, n_rows, words), np.uint32)
         entries: List[_Slot] = []
         order = sorted(range(len(wave)), key=lambda j: -lanes[wave[j]])
-        free = list(np.argsort(self._lane_load, kind="stable"))
+        free = [s for s in np.argsort(self._lane_load, kind="stable")
+                if int(s) not in self._blacklist]
         sids = [0] * len(wave)
         for j in order:
             sids[j] = int(free.pop(0))
@@ -1052,7 +1151,9 @@ class Bank:
 
     def reset_stats(self):
         """Zero the stats AND both allocation cursors (fused lane loads,
-        grouped round-robin) so re-runs allocate deterministically."""
+        grouped round-robin) so re-runs allocate deterministically.  The
+        fault blacklist survives — retired subarrays are physical state,
+        not statistics."""
         self.stats = BankStats(self.n_subarrays)
         self._lane_load = np.zeros(self.n_subarrays, np.int64)
         self._rr_next = 0

@@ -123,8 +123,11 @@ class ChannelStats(BankStats):
         """Replay latency + paid transpositions + host↔chip transfers —
         the end-to-end modeled wall-clock this tier is bounded by.  The
         transfer term is what keeps the multi-chip curve sub-linear for
-        workloads whose data must cross the shared channel."""
-        return self.latency_s + self.transpose_s + self.transfer_s
+        workloads whose data must cross the shared channel.  Fault-layer
+        overhead (redundant replays + vote reads) folds in too — zero
+        when injection is disabled."""
+        return (self.latency_s + self.transpose_s + self.transfer_s
+                + self.faults.overhead_s)
 
     @property
     def transfer_bound(self) -> bool:
@@ -223,7 +226,7 @@ class SimdramChannel:
                  n_subarrays: int = 2, cfg: DramConfig = DDR4,
                  style: str = "mig", fuse_ratio: int = 32,
                  packing: str = "reorder", mesh=None,
-                 use_shard_map: Optional[bool] = None):
+                 use_shard_map: Optional[bool] = None, fault=None):
         if n_chips < 1:
             raise ValueError("n_chips must be >= 1")
         from repro.distributed.pum import make_channel_executor
@@ -232,17 +235,25 @@ class SimdramChannel:
         self.n_subarrays = n_subarrays
         self.cfg = cfg
         self.style = style
+        self.fault = fault if (fault is not None and fault.enabled) else None
         # per-chip engines never submit their own replays here (the
         # channel stacks their packed rounds), so they take the vmap
         # executor — the channel's executor does the real partitioning
         self.chips = [
             SimdramChip(n_banks=n_banks, n_subarrays=n_subarrays, cfg=cfg,
                         style=style, fuse_ratio=fuse_ratio, packing=packing,
-                        use_shard_map=False)
-            for _ in range(n_chips)
+                        use_shard_map=False, fault=self.fault,
+                        fault_seed=(c,))
+            for c in range(n_chips)
         ]
         self.executor = make_channel_executor(
             n_chips, n_banks, mesh=mesh, use_shard_map=use_shard_map)
+        if self.fault is not None:
+            from repro.distributed.pum import make_faulty_channel_executor
+            self._faulty_executor = make_faulty_channel_executor(
+                n_chips, n_banks, mesh=mesh, use_shard_map=use_shard_map)
+        else:
+            self._faulty_executor = None
         self.stats = ChannelStats(
             n_subarrays=n_chips * n_banks * n_subarrays,
             n_chips=n_chips, n_banks=n_banks)
@@ -252,9 +263,14 @@ class SimdramChannel:
         """Chip assignment: Ref-connected components are indivisible
         (forwarded planes never cross chips), LPT bin-packed by
         :func:`repro.core.costmodel.instr_cost_s` — the same rule the
-        chip applies to banks one level down."""
+        chip applies to banks one level down.  With fault injection,
+        chips whose banks are all blacklisted drop out of the pool."""
+        allowed = ([c for c in range(self.n_chips)
+                    if any(b._wave_capacity > 0
+                           for b in self.chips[c].banks)]
+                   if self.fault is not None else None)
         return partition_queue(queue, active, lanes, self.n_chips,
-                               self.cfg, self.style)
+                               self.cfg, self.style, allowed=allowed)
 
     def _charge_transfers(self, queue, active, lanes):
         """Model the host↔chip traffic this queue forces over the shared
@@ -294,7 +310,25 @@ class SimdramChannel:
         :func:`sequential_channel_dispatch` (same partition, one chip at
         a time) for every op, width, and style, on both the 2-D
         shard_map executor and the vmap fallback — gated in
-        benchmarks/channel_scaling.py and tests/test_channel.py."""
+        benchmarks/channel_scaling.py and tests/test_channel.py.
+
+        With a :class:`~repro.core.fault.FaultModel` attached, the queue
+        replicates across spare lanes and every super-round replays
+        under fault injection with majority-vote detection, bounded
+        retry, and chip/bank/subarray blacklist-and-repack — see
+        :mod:`repro.core.fault`.  Note the replicated lanes also inflate
+        ``transfer_bytes``: spare columns are real host↔chip traffic."""
+        queue = list(queue)
+        if self.fault is None or not queue:
+            return self._dispatch_core(queue)
+        from .fault import fault_guarded_dispatch
+        return fault_guarded_dispatch(
+            self.fault, self.stats.faults, queue, self._dispatch_core,
+            self._blacklist_units,
+            lambda: sum(b._wave_capacity for chip in self.chips
+                        for b in chip.banks))
+
+    def _dispatch_core(self, queue: Sequence[BbopInstr]) -> List:
         queue = list(queue)
         results: List = [None] * len(queue)
         if not queue:
@@ -410,8 +444,37 @@ class SimdramChannel:
         self.stats.pack_wall_s += pack_s
         for c, _ in round_by_chip:
             self.chips[c].stats.pack_wall_s += pack_s / len(round_by_chip)
-        fut = self.executor.run(jnp.asarray(states), tables)
+        fut = self._submit_super_round(states, tables, chips_entries)
         return chips_entries, fut
+
+    def _submit_super_round(self, states, tables, chips_entries):
+        """Submit one stacked super-round.  Fault-free: the async
+        executor call, untouched.  Fault-injected: the synchronous
+        detect/retry/heal loop over the channel-tier faulty executor;
+        the healed numpy stack drains through ``_harvest_super_round``
+        exactly like a device future."""
+        if self.fault is None:
+            return self.executor.run(jnp.asarray(states), tables)
+        from .fault import faulty_execute
+        slabs = [((c, b), entries, self.chips[c].banks[b]._fault_rt)
+                 for c, entries_by_bank in chips_entries
+                 for b, entries in entries_by_bank]
+        return faulty_execute(
+            self.fault, self._faulty_executor.run, states, tables,
+            slabs, self.stats.faults, self.cfg)
+
+    def _blacklist_units(self, units) -> int:
+        """Retire persistently-failing subarrays (``units`` are
+        ``(chip, bank, sid)`` tuples); returns how many are newly
+        blacklisted."""
+        new = 0
+        for u in units:
+            c, b, sid = int(u[-3]), int(u[-2]), int(u[-1])
+            bl = self.chips[c].banks[b]._blacklist
+            if sid not in bl:
+                bl.add(sid)
+                new += 1
+        return new
 
     def _build_super_round_tables(self, chip_keys, n_cmds: int) -> np.ndarray:
         """Materialize one super-round's stacked tables (TABLE_CACHE

@@ -110,12 +110,17 @@ class ChipStats(BankStats):
 
 
 def partition_queue(queue, active, lanes, n_banks: int,
-                    cfg: DramConfig = DDR4, style: str = "mig"
+                    cfg: DramConfig = DDR4, style: str = "mig",
+                    allowed: Optional[Sequence[int]] = None
                     ) -> Dict[int, int]:
     """Assign instructions to banks: Ref-connected components are
     indivisible (forwarded planes never cross banks), weighted by
     :func:`repro.core.costmodel.instr_cost_s`, and bin-packed
-    longest-processing-time-first onto the least-loaded bank."""
+    longest-processing-time-first onto the least-loaded bank.
+
+    ``allowed`` restricts the candidate banks (the fault layer passes
+    the non-blacklisted set so degraded dispatches repack around retired
+    banks); ``None`` means all ``n_banks``."""
     parent = {i: i for i in active}
 
     def find(x):
@@ -137,11 +142,14 @@ def partition_queue(queue, active, lanes, n_banks: int,
                                cfg, style) for i in members)
         for root, members in comps.items()
     }
+    pool = list(range(n_banks)) if allowed is None else sorted(allowed)
+    if not pool:
+        raise ValueError("partition_queue: no banks allowed")
     load = np.zeros(n_banks)
     bank_of: Dict[int, int] = {}
     for root, members in sorted(
             comps.items(), key=lambda kv: (-cost[kv[0]], kv[0])):
-        b = int(np.argmin(load))
+        b = pool[int(np.argmin(load[pool]))]
         load[b] += cost[root]
         for i in members:
             bank_of[i] = b
@@ -207,7 +215,8 @@ class SimdramChip:
     def __init__(self, n_banks: int = 4, n_subarrays: int = 4,
                  cfg: DramConfig = DDR4, style: str = "mig",
                  fuse_ratio: int = 32, packing: str = "reorder",
-                 mesh=None, use_shard_map: Optional[bool] = None):
+                 mesh=None, use_shard_map: Optional[bool] = None,
+                 fault=None, fault_seed: Tuple[int, ...] = ()):
         if n_banks < 1:
             raise ValueError("n_banks must be >= 1")
         from repro.distributed.pum import make_chip_executor
@@ -215,21 +224,32 @@ class SimdramChip:
         self.n_subarrays = n_subarrays
         self.cfg = cfg
         self.style = style
+        self.fault = fault if (fault is not None and fault.enabled) else None
         self.banks = [
             Bank(n_subarrays=n_subarrays, cfg=cfg, style=style,
                  engine="interp", fuse=True, fuse_ratio=fuse_ratio,
-                 packing=packing)
-            for _ in range(n_banks)
+                 packing=packing, fault=self.fault,
+                 fault_seed=tuple(fault_seed) + (b,))
+            for b in range(n_banks)
         ]
         self.executor = make_chip_executor(n_banks, mesh=mesh,
                                            use_shard_map=use_shard_map)
+        if self.fault is not None:
+            from repro.distributed.pum import make_faulty_chip_executor
+            self._faulty_executor = make_faulty_chip_executor(
+                n_banks, mesh=mesh, use_shard_map=use_shard_map)
+        else:
+            self._faulty_executor = None
         self.stats = ChipStats(n_subarrays=n_banks * n_subarrays,
                                n_banks=n_banks)
 
     # -- scheduling --------------------------------------------------------
     def _partition(self, queue, active, lanes) -> Dict[int, int]:
+        allowed = ([b for b in range(self.n_banks)
+                    if self.banks[b]._wave_capacity > 0]
+                   if self.fault is not None else None)
         return partition_queue(queue, active, lanes, self.n_banks,
-                               self.cfg, self.style)
+                               self.cfg, self.style, allowed=allowed)
 
     # -- dispatch ----------------------------------------------------------
     def dispatch(self, queue: Sequence[BbopInstr]) -> List:
@@ -259,7 +279,22 @@ class SimdramChip:
         :func:`sequential_dispatch` (same partition, one bank at a time)
         and to the grouped single-bank baseline, for every op, width,
         style, and executor (shard_map or vmap fallback) — gated in
-        benchmarks/chip_scaling.py and tests/test_chip.py."""
+        benchmarks/chip_scaling.py and tests/test_chip.py.
+
+        With a :class:`~repro.core.fault.FaultModel` attached, the queue
+        replicates across spare lanes and each chip round replays under
+        fault injection with majority-vote detection, bounded retry, and
+        bank/subarray blacklist-and-repack — see :mod:`repro.core.fault`."""
+        queue = list(queue)
+        if self.fault is None or not queue:
+            return self._dispatch_core(queue)
+        from .fault import fault_guarded_dispatch
+        return fault_guarded_dispatch(
+            self.fault, self.stats.faults, queue, self._dispatch_core,
+            self._blacklist_units,
+            lambda: sum(b._wave_capacity for b in self.banks))
+
+    def _dispatch_core(self, queue: Sequence[BbopInstr]) -> List:
         queue = list(queue)
         results: List = [None] * len(queue)
         if not queue:
@@ -384,8 +419,35 @@ class SimdramChip:
         self.stats.pack_wall_s += pack_s
         for b, _ in round_waves:
             self.banks[b].stats.pack_wall_s += pack_s / len(round_waves)
-        fut = self.executor.run(jnp.asarray(states), tables)
+        fut = self._submit_round(states, tables, entries_by_bank)
         return entries_by_bank, fut
+
+    def _submit_round(self, states, tables, entries_by_bank):
+        """Submit one stacked chip round.  Fault-free: the async
+        executor call, untouched.  Fault-injected: the synchronous
+        detect/retry/heal loop over the chip-tier faulty executor; the
+        healed numpy stack drains through ``_harvest_round`` exactly
+        like a device future."""
+        if self.fault is None:
+            return self.executor.run(jnp.asarray(states), tables)
+        from .fault import faulty_execute
+        slabs = [((b,), entries, self.banks[b]._fault_rt)
+                 for b, entries in entries_by_bank]
+        return faulty_execute(
+            self.fault, self._faulty_executor.run, states, tables,
+            slabs, self.stats.faults, self.cfg)
+
+    def _blacklist_units(self, units) -> int:
+        """Retire persistently-failing subarrays (``units`` are
+        ``(bank, sid)`` tuples); returns how many are newly
+        blacklisted."""
+        new = 0
+        for u in units:
+            b, sid = int(u[-2]), int(u[-1])
+            if sid not in self.banks[b]._blacklist:
+                self.banks[b]._blacklist.add(sid)
+                new += 1
+        return new
 
     def _build_round_tables(self, bank_keys, n_cmds: int) -> np.ndarray:
         """Materialize one chip round's stacked tables (TABLE_CACHE

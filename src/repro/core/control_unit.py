@@ -336,6 +336,129 @@ def hetero_batched_interpreter():
     return run
 
 
+# ---------------------------------------------------------------------------
+# fault-injected replay (repro.core.fault)
+# ---------------------------------------------------------------------------
+#
+# Same scan interpreter, with the paper's §5 failure modes woven into the
+# array program (masks + jax.random only — no per-element Python branching,
+# so every vmap/shard_map axis above is preserved):
+#
+#   - per-activation TRA bit flips: each AP command XORs a Bernoulli(p)
+#     bit mask into its MAJ result (the charge-sharing misread the
+#     reliability Monte-Carlo prices as ``tra_failure_rate``);
+#   - stuck-at columns: ``stuck1``/``stuck0`` word masks force bits on
+#     every row the scan writes (and the initial state), modeling
+#     manufacturing-defective bitlines;
+#   - dead subarrays: a whole unit's output XORs random garbage, modeling
+#     row-decoder / sense-amp block failures.
+#
+# Flip keys ride in the scan carry, so a single seeded key per subarray
+# reproduces the whole command stream's fault pattern deterministically.
+
+def faulty_bank_replay(states, tables, keys, stuck0, stuck1, dead, p_flip):
+    """Fault-injected :func:`hetero_batched_interpreter` body.
+
+    Args:
+        states: (n_subarrays, n_rows, n_words) uint32.
+        tables: (n_subarrays, n_cmds, 13) int32.
+        keys:   (n_subarrays, 2) uint32 — per-subarray PRNG keys.
+        stuck0/stuck1: (n_subarrays, n_words) uint32 — stuck-at-0/1
+            column masks (bit set = that column is defective).
+        dead:   (n_subarrays,) bool — whole-subarray failures.
+        p_flip: scalar per-activation per-bit flip probability.
+
+    Returns:
+        ``(out_states, flip_counts)`` — executed states with faults
+        applied, and the number of injected AP bit flips per subarray.
+    """
+
+    def one(state, table, key, s0, s1, dd):
+        k_noise, k_scan = jax.random.split(jnp.asarray(key, jnp.uint32))
+        state = (state | s1[None, :]) & ~s0[None, :]
+        weights = jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32)
+
+        def step(carry, cmd):
+            st, k, nf = carry
+            k, kf = jax.random.split(k)
+            is_ap = cmd[0].astype(jnp.uint32)
+
+            def read(r, n):
+                v = st[r]
+                return v ^ (n.astype(jnp.uint32) * jnp.uint32(0xFFFFFFFF))
+
+            v0 = read(cmd[1], cmd[2])
+            v1 = read(cmd[3], cmd[4])
+            v2 = read(cmd[5], cmd[6])
+            maj = (v0 & v1) | (v0 & v2) | (v1 & v2)
+            val = jnp.where(is_ap.astype(bool), maj, v0)
+            flips = jax.random.bernoulli(kf, p_flip, (st.shape[1], 32))
+            flip = jnp.sum(flips * weights, axis=1,
+                           dtype=jnp.uint32) * is_ap
+            val = val ^ flip
+            nf = nf + jnp.sum(jax.lax.population_count(flip),
+                              dtype=jnp.uint32)
+
+            def write(s, r, n):
+                out = val ^ (n.astype(jnp.uint32) * jnp.uint32(0xFFFFFFFF))
+                out = (out | s1) & ~s0
+                return s.at[r].set(out)
+
+            st = write(st, cmd[7], cmd[8])
+            st = write(st, cmd[9], cmd[10])
+            st = write(st, cmd[11], cmd[12])
+            return (st, k, nf), None
+
+        (out, _, nf), _ = jax.lax.scan(
+            step, (state, k_scan, jnp.uint32(0)), table)
+        garbage = jax.random.bits(k_noise, out.shape, jnp.uint32)
+        out = jnp.where(dd, out ^ garbage, out)
+        return out, nf
+
+    return jax.vmap(one)(states, tables, keys, stuck0, stuck1, dead)
+
+
+@functools.lru_cache(maxsize=1)
+def faulty_batched_interpreter():
+    """Jitted :func:`faulty_bank_replay` — the bank-tier faulty wave
+    executor.  ``p_flip`` is a traced scalar, so sweeping σ never
+    recompiles."""
+    return jax.jit(faulty_bank_replay)
+
+
+def faulty_chip_replay(states, tables, keys, stuck0, stuck1, dead, p_flip):
+    """Fault-injected :func:`chip_replay`: one more vmapped (bank) axis
+    over :func:`faulty_bank_replay` — same shard_map story as the
+    fault-free path, because faults are just more per-unit arrays."""
+    return jax.vmap(
+        lambda st, tb, k, a, b, d: faulty_bank_replay(
+            st, tb, k, a, b, d, p_flip)
+    )(states, tables, keys, stuck0, stuck1, dead)
+
+
+@functools.lru_cache(maxsize=1)
+def faulty_chip_batched_interpreter():
+    """Jitted single-device :func:`faulty_chip_replay` (vmap fallback)."""
+    return jax.jit(faulty_chip_replay)
+
+
+def faulty_channel_replay(states, tables, keys, stuck0, stuck1, dead,
+                          p_flip):
+    """Fault-injected :func:`channel_replay`: one more vmapped (chip)
+    axis over :func:`faulty_chip_replay`."""
+    return jax.vmap(
+        lambda st, tb, k, a, b, d: faulty_chip_replay(
+            st, tb, k, a, b, d, p_flip)
+    )(states, tables, keys, stuck0, stuck1, dead)
+
+
+@functools.lru_cache(maxsize=1)
+def faulty_channel_batched_interpreter():
+    """Jitted single-device :func:`faulty_channel_replay` (vmap
+    fallback)."""
+    return jax.jit(faulty_channel_replay)
+
+
 def chip_replay(states: jnp.ndarray, tables: jnp.ndarray) -> jnp.ndarray:
     """Un-jitted chip-level replay body: (n_banks, n_subarrays, n_rows,
     n_words) states × (n_banks, n_subarrays, n_cmds, 13) tables — one

@@ -18,7 +18,8 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 from .isa import compile_op
 from .timing import (DDR4, CPU_BASELINE, DramConfig, HostConfig,
-                     host_throughput_gops, uprogram_latency_s)
+                     host_throughput_gops, host_transfer_s,
+                     uprogram_latency_s)
 from .transpose import transpose_cost_s
 
 
@@ -64,6 +65,20 @@ def instr_cost_s(
     _, uprog = compile_op(op, n_bits, style)
     invs = max(1, -(-lanes // cfg.columns_per_subarray))
     return invs * uprogram_latency_s(uprog, cfg)
+
+
+def vote_cost_s(
+    n_lanes: int, out_bits_total: int, replicas: int,
+    cfg: DramConfig = DDR4,
+) -> float:
+    """Modeled seconds one majority-vote (or checksum-compare) round over
+    an entry's outputs costs: the detector must read every replica of
+    every output bit back across the channel before it can compare —
+    ``n_lanes × replicas × out_bits_total`` bits at channel bandwidth.
+    Charged by the fault layer per entry per vote round and folded into
+    ``FaultStats.overhead_s``."""
+    bits = n_lanes * replicas * max(0, out_bits_total)
+    return host_transfer_s(-(-bits // 8), cfg)
 
 
 def channel_transfer_bytes(

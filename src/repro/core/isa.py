@@ -143,6 +143,7 @@ class SimdramDevice:
     cfg: DramConfig = field(default_factory=lambda: DDR4)
     backend: str = "bitplane"
     style: str = "mig"
+    fault: Optional[object] = None        # FaultModel, or None = perfect DRAM
     calls: List[CallStats] = field(default_factory=list)
     _bank: Optional[object] = field(default=None, repr=False)
     _chip: Optional[object] = field(default=None, repr=False)
@@ -155,7 +156,7 @@ class SimdramDevice:
             from .bank import Bank
             self._bank = Bank(
                 n_subarrays=self.cfg.n_banks * self.cfg.subarrays_per_bank,
-                cfg=self.cfg, style=self.style)
+                cfg=self.cfg, style=self.style, fault=self.fault)
         return self._bank
 
     def chip(self):
@@ -167,7 +168,7 @@ class SimdramDevice:
             self._chip = SimdramChip(
                 n_banks=self.cfg.n_banks,
                 n_subarrays=self.cfg.subarrays_per_bank,
-                cfg=self.cfg, style=self.style)
+                cfg=self.cfg, style=self.style, fault=self.fault)
         return self._chip
 
     def channel(self):
@@ -181,7 +182,7 @@ class SimdramDevice:
                 n_chips=self.cfg.n_chips,
                 n_banks=self.cfg.n_banks,
                 n_subarrays=self.cfg.subarrays_per_bank,
-                cfg=self.cfg, style=self.style)
+                cfg=self.cfg, style=self.style, fault=self.fault)
         return self._channel
 
     def _account(self, name: str, n_bits: int, uprog: UProgram, elements: int):
@@ -300,8 +301,13 @@ class SimdramDevice:
         and the subarray-level DRAM oracle, cross-checked in
         tests/test_fused_dispatch.py, tests/test_chip.py,
         tests/test_channel.py and tests/test_apps.py."""
-        from .bank import plan_queue
+        from .bank import plan_queue, validate_queue
         queue = list(queue)     # tolerate iterator queues
+        if not queue:
+            raise ValueError(
+                "SimdramDevice.dispatch: empty queue — build at least one "
+                "BbopInstr before dispatching")
+        validate_queue(queue, self.style)
         engines = {"channel": self.channel, "chip": self.chip,
                    "bank": self.bank}
         if self.backend not in engines:

@@ -167,6 +167,17 @@ def channel_throughput_gops(
         up, cfg, n_subarrays=n_chips * n_banks * n_subarrays)
 
 
+# --- fault-tolerance overhead -------------------------------------------------
+
+def fault_replay_overhead_s(base_s: float, extra_replays: int) -> float:
+    """Modeled seconds the fault layer spends on redundant replays of one
+    replay unit (wave / chip round / channel super-round): every replay
+    beyond the first — checksum double-runs and bounded retries — costs
+    the unit's base latency again, because the command broadcast and
+    activation sequence are identical each time."""
+    return base_s * max(0, extra_replays)
+
+
 # --- CPU / GPU analytic comparison points ------------------------------------
 # Bulk bitwise/elementwise kernels on CPU/GPU are DRAM-bandwidth-bound; the
 # paper's baselines follow the same logic.  An n-bit binary op streams

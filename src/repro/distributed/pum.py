@@ -45,7 +45,11 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core.control_unit import (channel_batched_interpreter,
                                      channel_replay,
-                                     chip_batched_interpreter, chip_replay)
+                                     chip_batched_interpreter, chip_replay,
+                                     faulty_channel_batched_interpreter,
+                                     faulty_channel_replay,
+                                     faulty_chip_batched_interpreter,
+                                     faulty_chip_replay)
 
 from .sharding import fit_spec
 
@@ -117,6 +121,47 @@ def _sharded_executor(mesh: Mesh) -> Callable:
     return jax.jit(shard_map(
         chip_replay, mesh=mesh,
         in_specs=(bank_spec, bank_spec), out_specs=bank_spec,
+        check_rep=False))
+
+
+def make_faulty_chip_executor(
+    n_banks: int,
+    mesh: Optional[Mesh] = None,
+    use_shard_map: Optional[bool] = None,
+) -> ChipExecutor:
+    """Fault-injected twin of :func:`make_chip_executor`: the callable
+    takes ``(states, tables, keys, stuck0, stuck1, dead, p_flip)`` and
+    returns ``(executed states, per-subarray flip counts)``.  The fault
+    operands are just more per-bank arrays, so they shard over the same
+    ``data`` axis as the state slabs and the mesh-selection logic is
+    identical."""
+    if use_shard_map is False:
+        return ChipExecutor(faulty_chip_batched_interpreter(), None, False)
+    if mesh is None:
+        mesh = pum_mesh(n_banks)
+    has_data = mesh is not None and "data" in tuple(mesh.axis_names)
+    spec = fit_spec(mesh, (n_banks,), "data") if has_data else P(None)
+    fits = has_data and spec[0] == "data" and mesh.shape["data"] > 1
+    if not fits:
+        if use_shard_map:
+            raise ValueError(
+                f"shard_map requested but no multi-device mesh fits "
+                f"n_banks={n_banks} (devices={jax.device_count()})")
+        return ChipExecutor(faulty_chip_batched_interpreter(), mesh, False)
+    return ChipExecutor(_sharded_faulty_executor(mesh), mesh, True)
+
+
+@functools.lru_cache(maxsize=None)
+def _sharded_faulty_executor(mesh: Mesh) -> Callable:
+    from jax.experimental.shard_map import shard_map
+
+    bank_spec = P("data", None, None, None)
+    unit2 = P("data", None, None)      # keys (banks, subs, 2), masks (banks, subs, words)
+    unit1 = P("data", None)            # dead flags / flip counts (banks, subs)
+    return jax.jit(shard_map(
+        faulty_chip_replay, mesh=mesh,
+        in_specs=(bank_spec, bank_spec, unit2, unit2, unit2, unit1, P()),
+        out_specs=(bank_spec, unit1),
         check_rep=False))
 
 
@@ -212,4 +257,51 @@ def _sharded_channel_executor(mesh: Mesh) -> Callable:
     return jax.jit(shard_map(
         channel_replay, mesh=mesh,
         in_specs=(chip_spec, chip_spec), out_specs=chip_spec,
+        check_rep=False))
+
+
+def make_faulty_channel_executor(
+    n_chips: int,
+    n_banks: int,
+    mesh: Optional[Mesh] = None,
+    use_shard_map: Optional[bool] = None,
+) -> ChannelExecutor:
+    """Fault-injected twin of :func:`make_channel_executor`: the callable
+    takes ``(states, tables, keys, stuck0, stuck1, dead, p_flip)`` and
+    returns ``(executed states, per-subarray flip counts)``, with the
+    fault operands sharded over the same ``("channel", "data")`` grid as
+    the chip/bank slabs."""
+    if use_shard_map is False:
+        return ChannelExecutor(
+            faulty_channel_batched_interpreter(), None, False)
+    if mesh is None:
+        mesh = channel_mesh(n_chips, n_banks)
+    has_axes = mesh is not None and {"channel", "data"} <= set(
+        mesh.axis_names)
+    spec = (fit_spec(mesh, (n_chips, n_banks), "channel", "data")
+            if has_axes else P(None, None))
+    fits = (has_axes and spec[0] == "channel" and spec[1] == "data"
+            and mesh.devices.size > 1)
+    if not fits:
+        if use_shard_map:
+            raise ValueError(
+                f"shard_map requested but no multi-device (channel, data) "
+                f"mesh fits n_chips={n_chips} × n_banks={n_banks} "
+                f"(devices={jax.device_count()})")
+        return ChannelExecutor(
+            faulty_channel_batched_interpreter(), mesh, False)
+    return ChannelExecutor(_sharded_faulty_channel_executor(mesh), mesh, True)
+
+
+@functools.lru_cache(maxsize=None)
+def _sharded_faulty_channel_executor(mesh: Mesh) -> Callable:
+    from jax.experimental.shard_map import shard_map
+
+    chip_spec = P("channel", "data", None, None, None)
+    unit2 = P("channel", "data", None, None)   # keys / stuck masks
+    unit1 = P("channel", "data", None)         # dead flags / flip counts
+    return jax.jit(shard_map(
+        faulty_channel_replay, mesh=mesh,
+        in_specs=(chip_spec, chip_spec, unit2, unit2, unit2, unit1, P()),
+        out_specs=(chip_spec, unit1),
         check_rep=False))

@@ -24,6 +24,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.fault import FaultExhaustedError
 from repro.models.config import ModelConfig
 from repro.models.transformer import (decode_step, init_caches, lm_forward)
 
@@ -93,6 +94,7 @@ class PumServeOffload:
             chip = SimdramChip(n_banks=4, n_subarrays=2)
         self.chip = chip
         self.n_bits = n_bits
+        self.host_fallbacks = 0
         hi = (1 << n_bits) - 1
         self.stages = tuple(stages) if stages is not None else (
             PumStage("min", hi), PumStage("max", 0))
@@ -145,7 +147,17 @@ class PumServeOffload:
         q, lo, scale = self._quantize(x)
         queue: list = []
         heads = [self._chain(q[b], queue) for b in range(q.shape[0])]
-        out = self.chip.dispatch(queue)
+        try:
+            out = self.chip.dispatch(queue)
+        except FaultExhaustedError:
+            # the chip ran out of fault-free subarrays mid-serve: fall
+            # back to the numpy oracle for this step (same pipeline,
+            # same values) and keep serving
+            self.host_fallbacks += 1
+            faults = getattr(self.chip.stats, "faults", None)
+            if faults is not None:
+                faults.host_fallbacks += 1
+            return self.reference(logits)
         y = np.stack([np.asarray(out[h]).astype(np.uint64)
                       & ((1 << self.n_bits) - 1) for h in heads])
         return self._dequantize(x, q, y, lo, scale)
