@@ -193,7 +193,9 @@ def table_hetero_dispatch(
     the μProgram-compaction margin.
     """
     from repro.core.control_unit import TABLE_CACHE, trace_counts
+    from repro.core.telemetry import REGISTRY, publish_stats
 
+    REGISTRY.reset()
     print("# hetero_dispatch: name,us_per_call,derived(ratio_vs_grouped)")
     report: Dict = {
         "config": {"n_subarrays": n_subarrays, "lanes": lanes,
@@ -251,6 +253,8 @@ def table_hetero_dispatch(
                       "fused_batches": sf.fused_batches,
                       "modeled_latency_s": sf.total_latency_s,
                       "replay_latency_s": sf.latency_s,
+                      "throughput_gops": sf.throughput_gops,
+                      "throughput_total_gops": sf.throughput_total_gops,
                       "transpose_s": sf.transpose_s,
                       "measured_queue_us": us_f,
                       "measured_pack_us": sf.pack_wall_s * 1e6,
@@ -284,6 +288,7 @@ def table_hetero_dispatch(
             "measured_speedup": us_g / max(us_f, 1e-30),
         }
         report["scenarios"][name] = row
+        publish_stats(sf, f"bank.{name}")
         print(f"hetero/{name}/fused,{us_f / n_q:.0f},{row['replay_ratio']:.2f}"
               f"  # {sf.batches} vs {sg.batches} replays, modeled "
               f"{sf.total_latency_s * 1e6:.1f} vs "
@@ -291,6 +296,9 @@ def table_hetero_dispatch(
               f"{sf.transpositions_skipped} transpositions skipped, "
               f"measured x{row['measured_speedup']:.2f}")
         print(f"hetero/{name}/grouped,{us_g / n_q:.0f},1.00")
+    # registry as single source of truth: the engine stats land in the
+    # artifact via the metrics registry, not hand-copied fields
+    report["registry"] = REGISTRY.snapshot("bank.")
     comp = report["compaction"]
     print(f"# compaction: {comp['activations_uncompacted']} -> "
           f"{comp['activations_compacted']} activations "

@@ -21,13 +21,22 @@ This benchmark drives that curve through the channel subsystem
     ``SimdramChip.dispatch`` across ALL 16 ops in both MIG and AIG
     styles (exits non-zero on divergence — the CI acceptance gate), plus
     the compile-once gate (a repeated dispatch must retrace nothing and
-    rebuild no tables).
+    rebuild no tables);
+  - **telemetry gates** (``--trace``): a dispatch under the dual-clock
+    tracer must reconcile bit-for-bit with the channel's Stats totals
+    (``channel.replay`` ↔ ``latency_s``, ``channel.transfer`` ↔
+    ``transfer_s``; transpose mirrors to 1e-12), produce a
+    Perfetto-loadable Chrome trace, and — with the tracer disabled —
+    be strictly free: identical results, identical modeled stats, zero
+    new XLA traces (the same discipline as ``fault.py``'s
+    ``enabled=False`` gate in benchmarks/fault_sweep.py).
 
 Output follows the harness contract: ``name,us_per_call,derived`` CSV
 rows.
 
   python -m benchmarks.channel_scaling            # full sweep
   python -m benchmarks.channel_scaling --smoke    # CI configuration
+  python -m benchmarks.channel_scaling --smoke --trace TRACE_channel.json
 """
 
 from __future__ import annotations
@@ -77,6 +86,103 @@ def _gate_queue(style: str, lanes: int, widths: Sequence[int] = (8,)):
     return queue
 
 
+def telemetry_gates(n_chips: int, n_banks: int, n_subarrays: int,
+                    lanes: int, n_instrs: int, widths: Sequence[int],
+                    trace_json: str | None = None) -> Dict:
+    """The dual-clock tracer's CI gates on a real channel dispatch.
+
+    1. **reconciliation**: with tracing enabled, the per-category modeled
+       charge sums must equal the :class:`ChannelStats` accumulators —
+       bit-for-bit for ``channel.replay``/``channel.transfer`` (the
+       charges replay the exact FP addition order), 1e-12-close for the
+       transpose mirror (chip/channel mirror bank transposes via
+       before/after diffs);
+    2. **export**: the span tree serializes to a Chrome trace with both
+       clock track groups (written to ``trace_json`` when given);
+    3. **strictly free when disabled**: a dispatch without the tracer
+       must produce bit-exact results, identical modeled stats, and
+       ZERO new XLA traces relative to the traced run — the telemetry
+       layer must never leak into jit.
+
+    Exits non-zero on any violation; returns the report block.
+    """
+    from repro import obs
+    from repro.core.control_unit import trace_counts
+
+    mk = lambda: _mix_queue(lanes, n_instrs, widths, seed=0)  # noqa: E731
+    channel = SimdramChannel(n_chips=n_chips, n_banks=n_banks,
+                             n_subarrays=n_subarrays)
+    channel.dispatch(mk())                        # warm the executables
+    channel.reset_stats()
+    r_off = channel.dispatch(mk())                # tracer disabled
+    lat_off, transfer_off = channel.stats.latency_s, channel.stats.transfer_s
+    tr0 = trace_counts()
+
+    channel.reset_stats()
+    with obs.enabled() as tr:
+        r_on = channel.dispatch(mk())
+        st = channel.stats
+        if tr.modeled_total("channel.replay") != st.latency_s:
+            raise SystemExit(
+                f"TELEMETRY RECONCILIATION FAILED: channel.replay charges "
+                f"{tr.modeled_total('channel.replay')} != stats.latency_s "
+                f"{st.latency_s}")
+        if tr.modeled_total("channel.transfer") != st.transfer_s:
+            raise SystemExit(
+                f"TELEMETRY RECONCILIATION FAILED: channel.transfer charges "
+                f"{tr.modeled_total('channel.transfer')} != stats.transfer_s "
+                f"{st.transfer_s}")
+        paid = tr.modeled_total("transpose")
+        saved = tr.modeled_total("transpose_saved")
+        if not (np.isclose(paid, st.transpose_s, rtol=1e-12, atol=0.0)
+                and np.isclose(saved, st.transpose_s_saved, rtol=1e-12,
+                               atol=0.0)):
+            raise SystemExit(
+                f"TELEMETRY RECONCILIATION FAILED: transpose charges "
+                f"({paid}, {saved}) != stats "
+                f"({st.transpose_s}, {st.transpose_s_saved})")
+        n_spans = tr.n_spans
+        if trace_json:
+            trace = obs.write_chrome_trace(trace_json)
+        else:
+            trace = obs.chrome_trace()
+    tr1 = trace_counts()
+
+    # strictly-free gate: tracing must never touch XLA, and the
+    # disabled path must have been the exact same program
+    new_traces = sum(tr1.values()) - sum(tr0.values())
+    if new_traces:
+        raise SystemExit(
+            f"TELEMETRY RETRACED: enabling the tracer triggered "
+            f"{new_traces} new XLA traces (must be zero)")
+    _assert_bit_exact(r_on, r_off, "telemetry on-vs-off")
+    if (channel.stats.latency_s != lat_off
+            or channel.stats.transfer_s != transfer_off):
+        raise SystemExit(
+            "TELEMETRY CHANGED MODELED STATS: traced dispatch accrued "
+            "different latency/transfer than the untraced one")
+    if obs.active_tracer() is not None:
+        raise SystemExit("TELEMETRY LEAKED: tracer still active after "
+                         "the enabled() scope")
+
+    block = {
+        "zero_overhead": True,
+        "new_traces": 0,
+        "bit_exact": True,
+        "replay_reconciled_bitexact": True,
+        "transfer_reconciled_bitexact": True,
+        "transpose_reconciled": True,
+        "n_spans": n_spans,
+        "trace_events": len(trace["traceEvents"]),
+    }
+    if trace_json:
+        block["trace_file"] = trace_json
+        print(f"# wrote {trace_json} (load in https://ui.perfetto.dev)")
+    print(f"channel/telemetry,0.00,1.00  # {n_spans} spans reconcile "
+          f"bit-for-bit with ChannelStats; disabled tracer adds 0 traces")
+    return block
+
+
 def table_channel_scaling(
     chip_counts: Sequence[int] = CHIP_COUNTS,
     n_banks: int = 4,
@@ -88,9 +194,10 @@ def table_channel_scaling(
     gate_chips: int = 2,
     gate_widths: Sequence[int] = (8, 16, 32),
     out_json: str | None = "BENCH_channel.json",
+    trace_json: str | None = None,
 ) -> Dict:
     """Modeled curve + measured-vs-modeled calibration + transfer bound
-    + bit-exact gate."""
+    + bit-exact gate + telemetry gates."""
     report: Dict = {
         "config": {"chip_counts": list(chip_counts), "n_banks": n_banks,
                    "n_subarrays": n_subarrays, "lanes": lanes,
@@ -119,7 +226,9 @@ def table_channel_scaling(
 
     # -- measured vs modeled on a heterogeneous mix ------------------------
     from repro.core.control_unit import TABLE_CACHE, trace_counts
+    from repro.core.telemetry import REGISTRY, publish_stats
 
+    REGISTRY.reset()
     print("# channel_scaling/dispatch: name,us_per_call,derived"
           "(modeled_speedup_vs_sequential)")
     for nc in chip_counts:
@@ -182,11 +291,13 @@ def table_channel_scaling(
             "imbalance": st.imbalance,
             "utilization": [float(u) for u in st.utilization],
             "throughput_gops": st.throughput_gops,
+            "throughput_total_gops": st.throughput_total_gops,
             "sharded": channel.executor.sharded,
             "devices": (int(channel.executor.mesh.devices.size)
                         if channel.executor.sharded else 1),
         }
         report["scaling"][str(nc)] = row
+        publish_stats(st, f"channel.chip{nc}")
         print(f"channel/mix/chip{nc},{wall_us / len(queue):.0f},"
               f"{row['modeled_speedup']:.2f}"
               f"  # modeled {st.latency_s * 1e6:.1f} vs sequential "
@@ -215,6 +326,13 @@ def table_channel_scaling(
               f"  # {len(ALL_OPS)} ops x {list(gate_widths)}b bit-exact "
               f"vs sequential chips")
 
+    # -- telemetry gates: reconcile, export, strictly-free-when-off --------
+    report["telemetry"] = telemetry_gates(
+        n_chips=max(chip_counts), n_banks=n_banks, n_subarrays=n_subarrays,
+        lanes=lanes, n_instrs=n_instrs, widths=widths,
+        trace_json=trace_json)
+    report["registry"] = REGISTRY.snapshot("channel.")
+
     if out_json:
         with open(out_json, "w") as f:
             json.dump(report, f, indent=2, sort_keys=True)
@@ -230,6 +348,9 @@ if __name__ == "__main__":
                    help="fast CI configuration (1/2 chips, 64 lanes)")
     p.add_argument("--json", default="BENCH_channel.json",
                    help="output path for the channel bench report")
+    p.add_argument("--trace", default=None, metavar="TRACE_JSON",
+                   help="also write the telemetry gate's Perfetto trace "
+                        "(Chrome trace-event JSON) to this path")
     args = p.parse_args()
     if args.smoke:
         # gate widths {8, 16} only: 32b mul/div synthesis takes minutes
@@ -237,6 +358,6 @@ if __name__ == "__main__":
         table_channel_scaling(chip_counts=(1, 2), n_banks=2,
                               n_subarrays=2, lanes=64, n_instrs=8,
                               gate_lanes=32, gate_widths=(8, 16),
-                              out_json=args.json)
+                              out_json=args.json, trace_json=args.trace)
     else:
-        table_channel_scaling(out_json=args.json)
+        table_channel_scaling(out_json=args.json, trace_json=args.trace)

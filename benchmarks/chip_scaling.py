@@ -102,7 +102,9 @@ def table_chip_scaling(
 
     # -- measured vs modeled on a heterogeneous mix ------------------------
     from repro.core.control_unit import TABLE_CACHE, trace_counts
+    from repro.core.telemetry import REGISTRY, publish_stats
 
+    REGISTRY.reset()
     print("# chip_scaling/dispatch: name,us_per_call,derived"
           "(modeled_speedup_vs_sequential)")
     for nb in bank_counts:
@@ -154,11 +156,13 @@ def table_chip_scaling(
             "imbalance": st.imbalance,
             "utilization": [float(u) for u in st.utilization],
             "throughput_gops": st.throughput_gops,
+            "throughput_total_gops": st.throughput_total_gops,
             "sharded": chip.executor.sharded,
             "devices": (chip.executor.mesh.shape["data"]
                         if chip.executor.sharded else 1),
         }
         report["scaling"][str(nb)] = row
+        publish_stats(st, f"chip.bank{nb}")
         print(f"chip/mix/bank{nb},{wall_us / len(queue):.0f},"
               f"{row['modeled_speedup']:.2f}"
               f"  # modeled {st.latency_s * 1e6:.1f} vs sequential "
@@ -181,6 +185,7 @@ def table_chip_scaling(
         print(f"chip/gate/{style},{gate_us / len(queue):.0f},1.00"
               f"  # {len(ALL_OPS)} ops bit-exact vs sequential banks")
 
+    report["registry"] = REGISTRY.snapshot("chip.")
     if out_json:
         with open(out_json, "w") as f:
             json.dump(report, f, indent=2, sort_keys=True)

@@ -70,6 +70,9 @@ def table_fault_sweep(
     out_json: str | None = "BENCH_faults.json",
 ) -> Dict:
     """Bit-exact gate + σ×spares sweep + zero-cost-off gate + breakdown."""
+    from repro.core.telemetry import REGISTRY, publish_stats
+
+    REGISTRY.reset()
     report: Dict = {
         "config": {"sigmas": list(sigmas), "spare_lanes": list(spare_lanes),
                    "lanes": lanes, "n_instrs": n_instrs,
@@ -96,6 +99,7 @@ def table_fault_sweep(
         gate_us = (time.perf_counter() - t0) * 1e6
         _assert_bit_exact(faulty, clean, f"gate/{style}")
         fs = chip.stats.faults.as_dict()
+        publish_stats(chip.stats.faults, f"faults.{style}")
         report["gate"][style] = {"ops": len(ALL_OPS), "bit_exact": True,
                                  **fs}
         print(f"fault/gate/{style},{gate_us / len(queue):.0f},"
@@ -183,6 +187,8 @@ def table_fault_sweep(
         bd = tra_failure_breakdown(sigma, n_trials=p_trials)
         report["reliability"][f"{sigma:.2f}"] = bd
         print(f"fault/breakdown/sigma={sigma:.2f},0.00,{bd['overall']:.2e}")
+
+    report["registry"] = REGISTRY.snapshot("faults.")
 
     if out_json:
         with open(out_json, "w") as f:

@@ -203,8 +203,10 @@ def table_apps(mode: str = "fast",
     CPU/GPU comparison points derive from the dispatched op stream via
     the bandwidth-bound host model.
     """
-    from repro.apps.runtime import LADDER, engine_stats
+    from repro.apps.runtime import LADDER, engine_stats, engine_stats_object
+    from repro.core.telemetry import REGISTRY, publish_stats
 
+    REGISTRY.reset()
     cfg = (DramConfig(n_banks=16, subarrays_per_bank=2, n_chips=4)
            if mode == "full" else
            DramConfig(n_banks=4, subarrays_per_bank=2, n_chips=2))
@@ -228,6 +230,9 @@ def table_apps(mode: str = "fast",
             outputs[be] = np.asarray(r["output"])
             t = dev.totals()
             eng = engine_stats(dev)
+            stats_obj = engine_stats_object(dev)
+            if stats_obj is not None:
+                publish_stats(stats_obj, f"apps.{name}.{be}")
             tiers[be] = {
                 "verified": bool(r["verified"]),
                 "modeled": {
@@ -275,6 +280,7 @@ def table_apps(mode: str = "fast",
     report["gate"]["passed"] = True
     print(f"apps/GATE_bit_exact_x{len(LADDER)},0,1")
 
+    report["registry"] = REGISTRY.snapshot("apps.")
     rows = report["apps"].values()
     for key in ("speedup_vs_ambit", "speedup_vs_cpu", "speedup_vs_gpu"):
         report["summary"][f"avg_{key}"] = float(np.mean([r[key] for r in rows]))

@@ -34,7 +34,7 @@ _MODULE = re.compile(r"`((?:repro|benchmarks)(?:\.\w+)+)`")
 # `python -m benchmarks.channel_scaling [args]` inside code fences
 _PYTHON_M = re.compile(r"python -m ([\w.]+)")
 # generated at bench time; allowed to be absent from a fresh checkout
-_GENERATED = re.compile(r"^BENCH_\w+\.json$")
+_GENERATED = re.compile(r"^(?:BENCH|TRACE)_\w+\.json$")
 
 
 def _module_file(dotted: str):

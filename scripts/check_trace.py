@@ -1,0 +1,133 @@
+#!/usr/bin/env python
+"""Schema gate for telemetry Chrome traces (CI artifact validation).
+
+``scripts/ci.sh`` has the channel smoke bench emit a Perfetto trace
+(``benchmarks/channel_scaling.py --trace TRACE_channel.json``); this
+script fails the build if that artifact is not a loadable Chrome
+trace-event file with the dual-clock structure the telemetry layer
+promises:
+
+  - ``traceEvents`` is a list of objects, each with a valid ``ph``;
+  - every duration event (``ph == "X"``) carries name/cat/pid/tid and
+    finite, non-negative ``ts``/``dur``;
+  - BOTH track groups exist: pid 1 (measured host wall) and pid 2
+    (modeled DRAM clock), each announced by a ``process_name`` metadata
+    event;
+  - every thread (lane) used by an X event is announced by a
+    ``thread_name`` metadata event;
+  - ``otherData.modeled_totals_s`` is a category -> seconds dict with
+    finite values (the reconciliation surface).
+
+Usage:
+  python scripts/check_trace.py TRACE_channel.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import sys
+
+MEASURED_PID = 1
+MODELED_PID = 2
+VALID_PH = {"X", "M", "B", "E", "i", "C"}
+
+
+def check_trace(trace: dict) -> list:
+    """Return a list of violation strings (empty = valid)."""
+    errors = []
+    events = trace.get("traceEvents")
+    if not isinstance(events, list):
+        return ["traceEvents is missing or not a list"]
+    if not events:
+        return ["traceEvents is empty"]
+
+    process_names = {}
+    thread_names = set()
+    used_threads = set()
+    x_pids = set()
+    for i, ev in enumerate(events):
+        if not isinstance(ev, dict):
+            errors.append(f"event[{i}] is not an object")
+            continue
+        ph = ev.get("ph")
+        if ph not in VALID_PH:
+            errors.append(f"event[{i}] has invalid ph {ph!r}")
+            continue
+        if ph == "M":
+            if ev.get("name") == "process_name":
+                process_names[ev.get("pid")] = ev.get(
+                    "args", {}).get("name")
+            elif ev.get("name") == "thread_name":
+                thread_names.add((ev.get("pid"), ev.get("tid")))
+            continue
+        if ph != "X":
+            continue
+        x_pids.add(ev.get("pid"))
+        used_threads.add((ev.get("pid"), ev.get("tid")))
+        for field in ("name", "cat"):
+            if not isinstance(ev.get(field), str) or not ev.get(field):
+                errors.append(f"event[{i}] X missing {field}")
+        for field in ("ts", "dur"):
+            v = ev.get(field)
+            if not isinstance(v, (int, float)) or not math.isfinite(v):
+                errors.append(f"event[{i}] {field}={v!r} not finite")
+            elif field == "dur" and v < 0:
+                errors.append(f"event[{i}] dur={v} negative")
+        for field in ("pid", "tid"):
+            if not isinstance(ev.get(field), int):
+                errors.append(f"event[{i}] {field} not an int")
+
+    for pid, label in ((MEASURED_PID, "measured"), (MODELED_PID, "modeled")):
+        if pid not in process_names:
+            errors.append(f"missing process_name metadata for the "
+                          f"{label} track group (pid {pid})")
+    if MEASURED_PID not in x_pids:
+        errors.append("no duration events in the measured track group")
+    if MODELED_PID not in x_pids:
+        errors.append("no duration events in the modeled track group")
+    for key in used_threads - thread_names:
+        errors.append(f"thread (pid={key[0]}, tid={key[1]}) used by an "
+                      "X event but never announced via thread_name")
+
+    totals = trace.get("otherData", {}).get("modeled_totals_s")
+    if not isinstance(totals, dict) or not totals:
+        errors.append("otherData.modeled_totals_s missing or empty")
+    else:
+        for cat, v in totals.items():
+            if not isinstance(v, (int, float)) or not math.isfinite(v) \
+                    or v < 0:
+                errors.append(
+                    f"modeled_totals_s[{cat!r}]={v!r} not a finite "
+                    "non-negative number")
+    return errors
+
+
+def main() -> int:
+    p = argparse.ArgumentParser(
+        description="validate a telemetry Chrome trace artifact")
+    p.add_argument("trace", help="Chrome trace-event JSON file")
+    args = p.parse_args()
+    try:
+        with open(args.trace) as fh:
+            trace = json.load(fh)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"TRACE GATE FAILED: cannot load {args.trace}: {e}")
+        return 1
+    errors = check_trace(trace)
+    if errors:
+        print(f"TRACE GATE FAILED — {len(errors)} violation(s) in "
+              f"{args.trace}:")
+        for e in errors[:20]:
+            print(f"  {e}")
+        return 1
+    n_x = sum(1 for ev in trace["traceEvents"] if ev.get("ph") == "X")
+    print(f"TRACE GATE OK — {args.trace}: "
+          f"{len(trace['traceEvents'])} events ({n_x} spans), both clock "
+          "track groups present, Perfetto-loadable")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

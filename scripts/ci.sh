@@ -54,10 +54,20 @@ XLA_FLAGS=--xla_force_host_platform_device_count=8 \
 
 echo "== channel-scaling smoke bench (8 forced host devices: 2-D mesh) =="
 # exits non-zero if channel dispatch diverges from sequential per-chip
-# execution (all 16 ops, MIG + AIG) or if a repeated dispatch retraces
-# XLA / rebuilds tables; BENCH_channel.json is a CI artifact
+# execution (all 16 ops, MIG + AIG), if a repeated dispatch retraces
+# XLA / rebuilds tables, or if the telemetry gates fail (traced spans
+# must reconcile bit-for-bit with ChannelStats; a disabled tracer must
+# add zero traces and change nothing); BENCH_channel.json and the
+# Perfetto trace TRACE_channel.json are CI artifacts
 XLA_FLAGS=--xla_force_host_platform_device_count=8 \
-    python -m benchmarks.channel_scaling --smoke --json BENCH_channel.json
+    python -m benchmarks.channel_scaling --smoke --json BENCH_channel.json \
+    --trace TRACE_channel.json
+
+echo "== telemetry trace schema gate (Perfetto-loadable dual-clock trace) =="
+# exits non-zero if TRACE_channel.json is not a valid Chrome trace-event
+# file with both clock track groups (pid 1 measured, pid 2 modeled),
+# named lanes, and finite modeled totals
+python scripts/check_trace.py TRACE_channel.json
 
 echo "== apps-on-the-ladder smoke gate (8 forced host devices) =="
 # exits non-zero if any of the seven paper app kernels produces a

@@ -120,14 +120,22 @@ def gather(results: Sequence, shards, n: int) -> np.ndarray:
     return out
 
 
+def engine_stats_object(dev: SimdramDevice):
+    """The backend engine's live Stats object — ``None`` for the
+    engine-less sequential backends.  Callers that want the registry
+    form pass this to :func:`repro.core.telemetry.publish_stats`."""
+    if dev.backend == "bank":
+        return dev.bank().stats
+    if dev.backend == "chip":
+        return dev.chip().stats
+    if dev.backend == "channel":
+        return dev.channel().stats
+    return None
+
+
 def engine_stats(dev: SimdramDevice) -> Optional[Dict]:
     """The backend engine's own stats dict (wave fusion, rounds,
     transfers, measured wall) — ``None`` for the engine-less sequential
     backends, whose only model is the device-level :meth:`totals`."""
-    if dev.backend == "bank":
-        return dev.bank().stats.as_dict()
-    if dev.backend == "chip":
-        return dev.chip().stats.as_dict()
-    if dev.backend == "channel":
-        return dev.channel().stats.as_dict()
-    return None
+    stats = engine_stats_object(dev)
+    return stats.as_dict() if stats is not None else None

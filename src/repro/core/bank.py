@@ -65,6 +65,7 @@ from .control_unit import (CMD_WIDTH, TABLE_CACHE, batched_interpreter,
 from .costmodel import critical_path_s, forwarding_saving_s, instr_cost_s
 from .energy import uprogram_energy_nj
 from .isa import _round_up, compile_op
+from .telemetry import active_tracer, spec_as_dict
 from .timing import DDR4, DramConfig, fused_replay_latency_s, uprogram_latency_s
 
 ROW_BUCKET = 16     # state-row granularity shared across ops of one width
@@ -138,9 +139,44 @@ class BankStats:
         if not concurrent:
             self.latency_s += cost.latency_s
 
+    # serialization spec consumed by repro.core.telemetry.spec_as_dict:
+    # each tier declares only its OWN keys; subclasses inherit these and
+    # append, so the three tiers emit a consistent superset by
+    # construction instead of three hand-copied as_dict bodies.
+    _FIELD_SPEC = (
+        ("n_subarrays", "int"),
+        ("bbops", "int"),
+        ("batches", "int"),
+        ("fused_batches", "int"),
+        ("transpositions_skipped", "int"),
+        ("transpose_s_saved", "float"),
+        ("transpose_s", "float"),
+        ("total_latency_s", "float"),
+        ("aap", "int"),
+        ("ap", "int"),
+        ("elements", "int"),
+        ("latency_s", "float"),
+        ("energy_nj", "float"),
+        ("pack_wall_s", "float"),
+        ("wall_s", "float"),
+        ("throughput_gops", "float"),
+        ("throughput_total_gops", "float"),
+        ("faults", "stats_if_any"),
+    )
+
     @property
     def throughput_gops(self) -> float:
+        """Elements over *replay* latency only — the paper's headline
+        figure, blind to transposition and fault overhead."""
         return self.elements / self.latency_s / 1e9 if self.latency_s else 0.0
+
+    @property
+    def throughput_total_gops(self) -> float:
+        """Elements over :attr:`total_latency_s` — the honest end-to-end
+        figure: paid transpositions and fault overhead included.  BENCH
+        artifacts and ``check_perf.py`` baselines gate on this one."""
+        t = self.total_latency_s
+        return self.elements / t / 1e9 if t else 0.0
 
     @property
     def total_latency_s(self) -> float:
@@ -154,28 +190,11 @@ class BankStats:
         return self.latency_s + self.transpose_s + self.faults.overhead_s
 
     def as_dict(self) -> Dict[str, float]:
-        return {
-            "n_subarrays": self.n_subarrays,
-            "bbops": self.bbops,
-            "batches": self.batches,
-            "fused_batches": self.fused_batches,
-            "transpositions_skipped": self.transpositions_skipped,
-            "transpose_s_saved": self.transpose_s_saved,
-            "transpose_s": self.transpose_s,
-            "total_latency_s": self.total_latency_s,
-            "aap": self.aap,
-            "ap": self.ap,
-            "elements": self.elements,
-            "latency_s": self.latency_s,
-            "energy_nj": self.energy_nj,
-            "pack_wall_s": self.pack_wall_s,
-            "wall_s": self.wall_s,
-            "throughput_gops": self.throughput_gops,
-            # only when the fault layer actually did something, so
-            # fault-free benchmark snapshots keep their schema
-            **({"faults": self.faults.as_dict()} if self.faults.any
-               else {}),
-        }
+        """Serialize via the merged ``_FIELD_SPEC`` (one definition for
+        all three tiers; ``faults`` appears only when the fault layer
+        actually did something, so fault-free benchmark snapshots keep
+        their schema)."""
+        return spec_as_dict(self)
 
 
 @dataclass(frozen=True)
@@ -474,12 +493,33 @@ class Bank:
         self.stats = BankStats(n_subarrays)
         self._rr_next = 0     # round-robin allocation cursor (grouped path)
         self._lane_load = np.zeros(n_subarrays, np.int64)  # fused-slot loads
+        self._lane = "bank"   # telemetry track label; chip/channel relabel
 
     @property
     def _wave_capacity(self) -> int:
         """Subarrays a wave may still occupy: everything not blacklisted
         by the fault layer (all of them while injection is off)."""
         return self.n_subarrays - len(self._blacklist)
+
+    # -- telemetry: modeled-clock charges ----------------------------------
+    # Each helper updates the Stats accumulator AND mirrors the identical
+    # value into the active tracer's charge log in the same call, so the
+    # tracer's left-fold per-category sum replays the Stats field's exact
+    # FP addition order (bit-for-bit reconciliation).  With the tracer
+    # disabled these collapse to the bare `+=` the code always did.
+
+    def _pay_transpose(self, seconds: float) -> None:
+        self.stats.transpose_s += seconds
+        tr = active_tracer()
+        if tr is not None:
+            tr.charge("transpose", seconds)
+
+    def _save_transpose(self, seconds: float, skipped: int = 1) -> None:
+        self.stats.transpositions_skipped += skipped
+        self.stats.transpose_s_saved += seconds
+        tr = active_tracer()
+        if tr is not None:
+            tr.charge("transpose_saved", seconds)
 
     # -- core: one op, up to n_subarrays operand sets, one replay ----------
     def execute_batch(
@@ -496,6 +536,23 @@ class Bank:
         the vmapped interpreter is invoked once.  Returns one result per
         set (array, or tuple of arrays for multi-output ops).
         """
+        tr = active_tracer()
+        if tr is None:
+            return self._execute_batch(name, n_bits, operand_sets,
+                                       signed_out, subarray_ids)
+        with tr.span("bank.execute_batch", cat="replay", lane=self._lane,
+                     op=name, n_bits=n_bits, sets=len(operand_sets)):
+            return self._execute_batch(name, n_bits, operand_sets,
+                                       signed_out, subarray_ids)
+
+    def _execute_batch(
+        self,
+        name: str,
+        n_bits: int,
+        operand_sets: Sequence[Sequence[np.ndarray]],
+        signed_out: bool = False,
+        subarray_ids: Optional[Sequence[int]] = None,
+    ) -> List:
         if len(operand_sets) > self.n_subarrays:
             raise ValueError(
                 f"{len(operand_sets)} operand sets > {self.n_subarrays} "
@@ -521,7 +578,7 @@ class Bank:
         # transposition unit for each conversion
         for n in lanes:
             for w in (*spec.operand_bits, *spec.out_bits):
-                self.stats.transpose_s += forwarding_saving_s(n, w, self.cfg)
+                self._pay_transpose(forwarding_saving_s(n, w, self.cfg))
         self._account(uprog, operand_sets, lanes, subarray_ids)
         return results
 
@@ -581,9 +638,12 @@ class Bank:
         k = len(operand_sets)
         if subarray_ids is None:
             subarray_ids = range(k)
-        self._account_wave(
+        c = self._account_wave(
             [(uprog, n, sid) for n, sid in zip(lanes, subarray_ids)],
             fused=False)
+        tr = active_tracer()
+        if tr is not None:
+            tr.charge("bank.replay", c.latency_s)
 
     def _account_wave(self, entries, fused: bool) -> WaveCost:
         """Charge one replay of ``entries`` = [(uprog, lanes, sid), ...]
@@ -652,14 +712,23 @@ class Bank:
         results: List = [None] * len(queue)
         if not queue:
             return results           # clean no-op: stats stay zeroed
+        tr = active_tracer()
+        root = (tr.begin("bank.dispatch", cat="dispatch", lane=self._lane,
+                         instrs=len(queue)) if tr is not None else None)
         t0 = time.perf_counter()
-        plan = self._plan(queue)
+        if tr is not None:
+            with tr.span("bank.plan", cat="plan"):
+                plan = self._plan(queue)
+        else:
+            plan = self._plan(queue)
         self.stats.bbops += len(queue)
         if self.fuse and self.engine == "interp":
             self._dispatch_fused(queue, plan, results)
         else:
             self._dispatch_grouped(queue, plan, results)
         self.stats.wall_s += time.perf_counter() - t0
+        if root is not None:
+            tr.end(root)
         return results
 
     # -- dispatch planning -------------------------------------------------
@@ -697,6 +766,7 @@ class Bank:
 
         waves = self._build_waves(queue, active, stage, lanes)
         run = hetero_batched_interpreter()
+        tr = active_tracer()
         pending: Optional[Tuple[List[_Slot], jnp.ndarray]] = None
         for wave in waves:
             if pending is not None:
@@ -709,14 +779,23 @@ class Bank:
                                        needed, results)
                     pending = None
             t_pack = time.perf_counter()
+            sp_pack = (tr.begin("bank.pack_wave", cat="pack")
+                       if tr is not None else None)
             states, tables, entries = self._pack_wave(
                 queue, wave, lanes, planes_cache)
+            if sp_pack is not None:
+                tr.end(sp_pack, slots=len(entries))
             self.stats.pack_wall_s += time.perf_counter() - t_pack
+            sp_replay = (tr.begin("bank.replay", cat="replay")
+                         if tr is not None else None)
             fut = self._submit_wave(run, states, tables, entries)  # async
-            self._account_wave(
+            c = self._account_wave(
                 [(e.uprog, e.lanes, e.sid) for e in entries],
                 fused=len({(queue[i].op, queue[i].n_bits,
                             queue[i].signed_out) for i in wave}) > 1)
+            if sp_replay is not None:
+                tr.charge("bank.replay", c.latency_s, span=sp_replay)
+                tr.end(sp_replay, slots=len(entries))
             if pending is not None:
                 # double buffering: wave k is harvested only after wave
                 # k+1 was packed and submitted, so host pack overlapped
@@ -725,7 +804,11 @@ class Bank:
                                    results)
             pending = (entries, fut)
         if pending is not None:
-            jax.block_until_ready(pending[1])     # drain the pipeline
+            if tr is not None:
+                with tr.span("bank.drain", cat="drain"):
+                    jax.block_until_ready(pending[1])  # drain the pipeline
+            else:
+                jax.block_until_ready(pending[1])     # drain the pipeline
             self._harvest_wave(queue, pending, planes_cache, needed, results)
 
     def _submit_wave(self, run, states, tables, entries):
@@ -1010,21 +1093,19 @@ class Bank:
                         len(uprog.in_rows[k]), words,
                         sign_extend=queue[o.producer].signed_out)
                     horiz.append(None)
-                    self.stats.transpositions_skipped += 1
-                    self.stats.transpose_s_saved += forwarding_saving_s(
-                        lanes[i], spec.operand_bits[k], self.cfg)
+                    self._save_transpose(forwarding_saving_s(
+                        lanes[i], spec.operand_bits[k], self.cfg))
                 elif isinstance(o, VerticalOperand):
                     vert[k] = _adapt_planes(
                         o.planes, len(uprog.in_rows[k]), words,
                         sign_extend=False)
                     horiz.append(None)
-                    self.stats.transpositions_skipped += 1
-                    self.stats.transpose_s_saved += forwarding_saving_s(
-                        o.lanes, spec.operand_bits[k], self.cfg)
+                    self._save_transpose(forwarding_saving_s(
+                        o.lanes, spec.operand_bits[k], self.cfg))
                 else:
                     horiz.append(np.asarray(o))
-                    self.stats.transpose_s += forwarding_saving_s(
-                        lanes[i], spec.operand_bits[k], self.cfg)
+                    self._pay_transpose(forwarding_saving_s(
+                        lanes[i], spec.operand_bits[k], self.cfg))
             st = load_state(uprog, horiz, cols, n_rows=n_rows,
                             out=states[sid])
             for k, planes in vert.items():
@@ -1049,8 +1130,14 @@ class Bank:
         (``keep_vertical``, v2h skipped) or horizontal via
         :func:`read_outputs`."""
         entries, fut = pending
-        self._harvest_out(queue, entries, np.asarray(fut), planes_cache,
-                          needed, results)
+        tr = active_tracer()
+        if tr is None:
+            self._harvest_out(queue, entries, np.asarray(fut), planes_cache,
+                              needed, results)
+            return
+        with tr.span("bank.unpack", cat="unpack", slots=len(entries)):
+            self._harvest_out(queue, entries, np.asarray(fut), planes_cache,
+                              needed, results)
 
     def _harvest_out(self, queue, entries, out, planes_cache, needed,
                      results):
@@ -1068,17 +1155,17 @@ class Bank:
                 words = -(-e.lanes // 32)
                 outs = [VerticalOperand(sub[rows][:, :words].copy(), e.lanes)
                         for rows in per_out_rows]
-                self.stats.transpositions_skipped += len(outs)
-                self.stats.transpose_s_saved += sum(
-                    forwarding_saving_s(e.lanes, w, self.cfg)
-                    for w in e.spec.out_bits)
+                self._save_transpose(
+                    sum(forwarding_saving_s(e.lanes, w, self.cfg)
+                        for w in e.spec.out_bits),
+                    skipped=len(outs))
                 results[e.qi] = outs[0] if len(outs) == 1 else tuple(outs)
             else:
                 outs = read_outputs(
                     e.spec.out_bits, e.uprog, sub, e.lanes, ins.signed_out)
-                self.stats.transpose_s += sum(
+                self._pay_transpose(sum(
                     forwarding_saving_s(e.lanes, w, self.cfg)
-                    for w in e.spec.out_bits)
+                    for w in e.spec.out_bits))
                 results[e.qi] = outs[0] if len(outs) == 1 else tuple(outs)
 
     # -- grouped baseline dispatcher ---------------------------------------
@@ -1132,8 +1219,8 @@ class Bank:
                     vals = vals.to_values(signed=prod.signed_out)
                 ops.append(np.asarray(vals))
             elif isinstance(o, VerticalOperand):
-                self.stats.transpose_s += forwarding_saving_s(
-                    o.lanes, int(o.planes.shape[0]), self.cfg)
+                self._pay_transpose(forwarding_saving_s(
+                    o.lanes, int(o.planes.shape[0]), self.cfg))
                 ops.append(o.to_values())
             else:
                 ops.append(np.asarray(o))
@@ -1144,9 +1231,9 @@ class Bank:
         outs = result if isinstance(result, tuple) else (result,)
         vos = [VerticalOperand.from_values(np.asarray(v), w)
                for v, w in zip(outs, spec.out_bits)]
-        self.stats.transpose_s += sum(
+        self._pay_transpose(sum(
             forwarding_saving_s(vo.lanes, w, self.cfg)
-            for vo, w in zip(vos, spec.out_bits))
+            for vo, w in zip(vos, spec.out_bits)))
         return vos[0] if len(vos) == 1 else tuple(vos)
 
     def reset_stats(self):

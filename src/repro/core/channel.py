@@ -58,6 +58,7 @@ from .bank import (BankStats, BbopInstr, Ref, VerticalOperand, _Slot,
 from .chip import SimdramChip, partition_queue
 from .control_unit import CMD_WIDTH, TABLE_CACHE
 from .costmodel import channel_transfer_bytes, transfer_crossover_chips
+from .telemetry import active_tracer
 from .timing import DDR4, DramConfig, channel_round_latency_s, host_transfer_s
 
 # chip-stats fields the channel mirrors by before/after diffing when it
@@ -92,6 +93,22 @@ class ChannelStats(BankStats):
     transfer_bytes: int = 0                      # host↔chip traffic modeled
     transfer_s: float = 0.0                      # … priced at channel_bw_gbs
     chip_busy_s: np.ndarray = field(default=None)  # type: ignore
+
+    # channel-tier additions to the inherited BankStats spec (see
+    # repro.core.telemetry.spec_as_dict — keys merge across the MRO)
+    _FIELD_SPEC = (
+        ("n_chips", "int"),
+        ("n_banks", "int"),
+        ("super_rounds", "int"),
+        ("transfer_bytes", "int"),
+        ("transfer_s", "float"),
+        ("transfer_bound", "bool"),
+        ("crossover_chips", "float"),
+        ("chip_busy_s", "float_list"),
+        ("chip_programs", "int_list"),
+        ("utilization", "float_list"),
+        ("imbalance", "float"),
+    )
 
     def __post_init__(self):
         super().__post_init__()
@@ -143,22 +160,6 @@ class ChannelStats(BankStats):
         return transfer_crossover_chips(
             float(self.chip_busy_s.sum()), self.transfer_s)
 
-    def as_dict(self) -> Dict[str, float]:
-        d = super().as_dict()
-        d.update({
-            "n_chips": self.n_chips,
-            "n_banks": self.n_banks,
-            "super_rounds": self.super_rounds,
-            "transfer_bytes": int(self.transfer_bytes),
-            "transfer_s": self.transfer_s,
-            "transfer_bound": self.transfer_bound,
-            "crossover_chips": self.crossover_chips,
-            "chip_busy_s": [float(x) for x in self.chip_busy_s],
-            "chip_programs": [int(x) for x in self.chip_programs],
-            "utilization": [float(x) for x in self.utilization],
-            "imbalance": self.imbalance,
-        })
-        return d
 
 
 def sequential_channel_dispatch(
@@ -257,6 +258,11 @@ class SimdramChannel:
         self.stats = ChannelStats(
             n_subarrays=n_chips * n_banks * n_subarrays,
             n_chips=n_chips, n_banks=n_banks)
+        self._lane = "channel"       # telemetry track label
+        for c, chip in enumerate(self.chips):
+            chip._lane = f"chip{c}"
+            for b, bank in enumerate(chip.banks):
+                bank._lane = f"chip{c}/bank{b}"
 
     # -- scheduling --------------------------------------------------------
     def _partition(self, queue, active, lanes) -> Dict[int, int]:
@@ -287,7 +293,13 @@ class SimdramChannel:
             out_bits = [] if ins.keep_vertical else list(spec.out_bits)
             nbytes += channel_transfer_bytes(lanes[i], in_bits, out_bits)
         self.stats.transfer_bytes += nbytes
-        self.stats.transfer_s += host_transfer_s(nbytes, self.cfg)
+        transfer_s = host_transfer_s(nbytes, self.cfg)
+        self.stats.transfer_s += transfer_s
+        tr = active_tracer()
+        if tr is not None:
+            ev = tr.event("channel.transfer", cat="transfer",
+                          lane=self._lane, bytes=nbytes)
+            tr.charge("channel.transfer", transfer_s, span=ev)
 
     # -- dispatch ----------------------------------------------------------
     def dispatch(self, queue: Sequence[BbopInstr]) -> List:
@@ -333,9 +345,16 @@ class SimdramChannel:
         results: List = [None] * len(queue)
         if not queue:
             return results           # clean no-op: stats stay zeroed
+        tr = active_tracer()
+        root = (tr.begin("channel.dispatch", cat="dispatch",
+                         lane=self._lane, instrs=len(queue))
+                if tr is not None else None)
         t0 = time.perf_counter()
         self.stats.bbops += len(queue)
+        sp = tr.begin("channel.plan", cat="plan") if tr is not None else None
         lanes, stage, needed = plan_queue(queue, self.style)
+        if sp is not None:
+            tr.end(sp)
         planes_cache: Dict[Tuple[int, int], np.ndarray] = {}
         active = []
         for i in range(len(queue)):
@@ -346,9 +365,13 @@ class SimdramChannel:
                 active.append(i)
         if not active:               # all-zero-lane queue: no replay
             self.stats.wall_s += time.perf_counter() - t0
+            if root is not None:
+                tr.end(root)
             return results
 
         self._charge_transfers(queue, active, lanes)
+        sp = (tr.begin("channel.schedule", cat="plan")
+              if tr is not None else None)
         chip_of = self._partition(queue, active, lanes)
         waves: List[List[List[List[int]]]] = []   # [chip][bank][round]
         for c, chip in enumerate(self.chips):
@@ -364,6 +387,8 @@ class SimdramChannel:
                     lanes)
                 for b in range(self.n_banks)
             ])
+        if sp is not None:
+            tr.end(sp, chips=len(set(chip_of.values())))
         n_super = max(len(w) for per_chip in waves for w in per_chip)
         pending: Optional[Tuple[List, jnp.ndarray]] = None
         for r in range(n_super):
@@ -395,10 +420,16 @@ class SimdramChannel:
                                           needed, results)
             pending = (chips_entries, fut)
         if pending is not None:
-            jax.block_until_ready(pending[1])     # drain the pipeline
+            if tr is not None:
+                with tr.span("channel.drain", cat="drain"):
+                    jax.block_until_ready(pending[1])  # drain the pipeline
+            else:
+                jax.block_until_ready(pending[1])     # drain the pipeline
             self._harvest_super_round(queue, pending, planes_cache, needed,
                                       results)
         self.stats.wall_s += time.perf_counter() - t0
+        if root is not None:
+            tr.end(root)
         return results
 
     def _pack_super_round(self, queue, round_by_chip, lanes, planes_cache):
@@ -413,7 +444,11 @@ class SimdramChannel:
         :data:`repro.core.control_unit.TABLE_CACHE`, keyed by the whole
         super-round's composition: a repeated super-round pays zero
         host-side table work."""
+        tr = active_tracer()
         t_pack = time.perf_counter()
+        sp = (tr.begin("channel.pack_super_round", cat="pack",
+                       chips=len(round_by_chip))
+              if tr is not None else None)
         dims = [self.chips[c]._round_dims(queue, rw, lanes)
                 for c, rw in round_by_chip]
         n_rows = max(d[0] for d in dims)
@@ -426,9 +461,14 @@ class SimdramChannel:
         chip_keys: List = [None] * self.n_chips
         for c, rw in round_by_chip:
             chip = self.chips[c]
+            sp_c = (tr.begin("chip.pack_round", cat="pack",
+                             lane=chip._lane, banks=len(rw))
+                    if tr is not None else None)
             snap = [getattr(chip.stats, f) for f in _TRANSPOSE]
             st, bank_keys, entries_by_bank = chip._pack_round_states(
                 queue, rw, lanes, planes_cache, n_rows, n_cmds, cols)
+            if sp_c is not None:
+                tr.end(sp_c)
             for f, v0 in zip(_TRANSPOSE, snap):
                 setattr(self.stats, f,
                         getattr(self.stats, f)
@@ -440,11 +480,18 @@ class SimdramChannel:
             ("channel", self.n_chips, self.n_banks, self.n_subarrays,
              n_cmds, tuple(chip_keys)),
             lambda: self._build_super_round_tables(chip_keys, n_cmds))
+        if sp is not None:
+            tr.end(sp)
         pack_s = time.perf_counter() - t_pack
         self.stats.pack_wall_s += pack_s
         for c, _ in round_by_chip:
             self.chips[c].stats.pack_wall_s += pack_s / len(round_by_chip)
+        sp = (tr.begin("channel.replay", cat="replay",
+                       chips=len(round_by_chip))
+              if tr is not None else None)
         fut = self._submit_super_round(states, tables, chips_entries)
+        if sp is not None:
+            tr.end(sp)
         return chips_entries, fut
 
     def _submit_super_round(self, states, tables, chips_entries):
@@ -511,15 +558,36 @@ class SimdramChannel:
             for f, v0 in zip(_MIRROR, snap):
                 setattr(st, f, getattr(st, f) + getattr(chip.stats, f) - v0)
             st.chip_busy_s[c] += chip.stats.latency_s - lat0
+            tr = active_tracer()
+            if tr is not None:
+                # per-chip modeled busy time on the chip's own lane (the
+                # super-round charges the max across chips)
+                ev = tr.event("chip.round", cat="replay", lane=chip._lane)
+                tr.charge("chip.busy", chip.stats.latency_s - lat0, span=ev)
             st.subarray_programs[c * per_chip:(c + 1) * per_chip] += (
                 chip.stats.subarray_programs - progs0)
             chip_rounds.append(bank_waves)
-        st.latency_s += channel_round_latency_s(chip_rounds, self.cfg)
+        round_s = channel_round_latency_s(chip_rounds, self.cfg)
+        st.latency_s += round_s
+        tr = active_tracer()
+        if tr is not None:
+            tr.charge("channel.replay", round_s)
 
     def _harvest_super_round(self, queue, pending, planes_cache, needed,
                              results):
         """Materialize one completed super-round, chip slab by chip slab
         (forwarded planes publish per chip — chains are chip-local)."""
+        tr = active_tracer()
+        if tr is not None:
+            with tr.span("channel.unpack", cat="unpack"):
+                self._harvest_super_round_impl(queue, pending, planes_cache,
+                                               needed, results)
+            return
+        self._harvest_super_round_impl(queue, pending, planes_cache, needed,
+                                       results)
+
+    def _harvest_super_round_impl(self, queue, pending, planes_cache, needed,
+                                  results):
         chips_entries, fut = pending
         out = np.asarray(fut)
         for c, entries_by_bank in chips_entries:

@@ -48,6 +48,7 @@ from .bank import (Bank, BankStats, BbopInstr, Ref, _Slot,
                    _build_stacked_tables, plan_queue)
 from .control_unit import CMD_WIDTH, TABLE_CACHE
 from .costmodel import instr_cost_s
+from .telemetry import active_tracer
 from .timing import DDR4, DramConfig, chip_round_latency_s
 
 
@@ -70,6 +71,17 @@ class ChipStats(BankStats):
     n_banks: int = 1
     rounds: int = 0                              # stacked chip replays
     bank_busy_s: np.ndarray = field(default=None)  # type: ignore
+
+    # chip-tier additions to the inherited BankStats spec (see
+    # repro.core.telemetry.spec_as_dict — keys merge across the MRO)
+    _FIELD_SPEC = (
+        ("n_banks", "int"),
+        ("rounds", "int"),
+        ("bank_busy_s", "float_list"),
+        ("bank_programs", "int_list"),
+        ("utilization", "float_list"),
+        ("imbalance", "float"),
+    )
 
     def __post_init__(self):
         super().__post_init__()
@@ -96,17 +108,6 @@ class ChipStats(BankStats):
             return 0.0
         return float(self.bank_busy_s.max() / self.bank_busy_s.mean())
 
-    def as_dict(self) -> Dict[str, float]:
-        d = super().as_dict()
-        d.update({
-            "n_banks": self.n_banks,
-            "rounds": self.rounds,
-            "bank_busy_s": [float(x) for x in self.bank_busy_s],
-            "bank_programs": [int(x) for x in self.bank_programs],
-            "utilization": [float(x) for x in self.utilization],
-            "imbalance": self.imbalance,
-        })
-        return d
 
 
 def partition_queue(queue, active, lanes, n_banks: int,
@@ -242,6 +243,9 @@ class SimdramChip:
             self._faulty_executor = None
         self.stats = ChipStats(n_subarrays=n_banks * n_subarrays,
                                n_banks=n_banks)
+        self._lane = "chip"          # telemetry track label
+        for b, bank in enumerate(self.banks):
+            bank._lane = f"bank{b}"
 
     # -- scheduling --------------------------------------------------------
     def _partition(self, queue, active, lanes) -> Dict[int, int]:
@@ -299,9 +303,15 @@ class SimdramChip:
         results: List = [None] * len(queue)
         if not queue:
             return results           # clean no-op: stats stay zeroed
+        tr = active_tracer()
+        root = (tr.begin("chip.dispatch", cat="dispatch", lane=self._lane,
+                         instrs=len(queue)) if tr is not None else None)
         t0 = time.perf_counter()
         self.stats.bbops += len(queue)
+        sp = tr.begin("chip.plan", cat="plan") if tr is not None else None
         lanes, stage, needed = plan_queue(queue, self.style)
+        if sp is not None:
+            tr.end(sp)
         planes_cache: Dict[Tuple[int, int], np.ndarray] = {}
         active = []
         for i in range(len(queue)):
@@ -312,8 +322,11 @@ class SimdramChip:
                 active.append(i)
         if not active:               # all-zero-lane queue: no replay
             self.stats.wall_s += time.perf_counter() - t0
+            if root is not None:
+                tr.end(root)
             return results
 
+        sp = tr.begin("chip.schedule", cat="plan") if tr is not None else None
         bank_of = self._partition(queue, active, lanes)
         for i in active:
             self.banks[bank_of[i]].stats.bbops += 1
@@ -322,6 +335,8 @@ class SimdramChip:
                 queue, [i for i in active if bank_of[i] == b], stage, lanes)
             for b in range(self.n_banks)
         ]
+        if sp is not None:
+            tr.end(sp, banks=len(set(bank_of.values())))
         n_rounds = max(len(w) for w in waves_by_bank)
         pending: Optional[Tuple[List[Tuple[int, List[_Slot]]], jnp.ndarray]] = None
         for r in range(n_rounds):
@@ -348,9 +363,15 @@ class SimdramChip:
                                     results)
             pending = (entries_by_bank, fut)
         if pending is not None:
-            jax.block_until_ready(pending[1])     # drain the pipeline
+            if tr is not None:
+                with tr.span("chip.drain", cat="drain"):
+                    jax.block_until_ready(pending[1])  # drain the pipeline
+            else:
+                jax.block_until_ready(pending[1])     # drain the pipeline
             self._harvest_round(queue, pending, planes_cache, needed, results)
         self.stats.wall_s += time.perf_counter() - t0
+        if root is not None:
+            tr.end(root)
         return results
 
     def _round_dims(self, queue, round_waves, lanes) -> Tuple[int, int, int]:
@@ -379,14 +400,19 @@ class SimdramChip:
             (self.n_banks, self.n_subarrays, n_rows, cols // 32), np.uint32)
         entries_by_bank: List[Tuple[int, List[_Slot]]] = []
         bank_keys: List = [None] * self.n_banks
+        tr = active_tracer()
         for b, wave in round_waves:
             bank = self.banks[b]
+            sp = (tr.begin("bank.pack_wave", cat="pack", lane=bank._lane)
+                  if tr is not None else None)
             skips0 = bank.stats.transpositions_skipped
             saved0 = bank.stats.transpose_s_saved
             paid0 = bank.stats.transpose_s
             st, wave_key, entries = bank._pack_wave(
                 queue, wave, lanes, planes_cache,
                 n_rows=n_rows, n_cmds=n_cmds, cols=cols, with_tables=False)
+            if sp is not None:
+                tr.end(sp, slots=len(entries))
             self.stats.transpositions_skipped += (
                 bank.stats.transpositions_skipped - skips0)
             self.stats.transpose_s_saved += (
@@ -407,7 +433,10 @@ class SimdramChip:
         compile-once :data:`repro.core.control_unit.TABLE_CACHE`, keyed
         by the whole round's composition: a repeated round pays zero
         host-side table work."""
+        tr = active_tracer()
         t_pack = time.perf_counter()
+        sp = (tr.begin("chip.pack_round", cat="pack", banks=len(round_waves))
+              if tr is not None else None)
         n_rows, n_cmds, cols = self._round_dims(queue, round_waves, lanes)
         states, bank_keys, entries_by_bank = self._pack_round_states(
             queue, round_waves, lanes, planes_cache, n_rows, n_cmds, cols)
@@ -415,11 +444,17 @@ class SimdramChip:
             ("chip", self.n_banks, self.n_subarrays, n_cmds,
              tuple(bank_keys)),
             lambda: self._build_round_tables(bank_keys, n_cmds))
+        if sp is not None:
+            tr.end(sp)
         pack_s = time.perf_counter() - t_pack
         self.stats.pack_wall_s += pack_s
         for b, _ in round_waves:
             self.banks[b].stats.pack_wall_s += pack_s / len(round_waves)
+        sp = (tr.begin("chip.replay", cat="replay", banks=len(round_waves))
+              if tr is not None else None)
         fut = self._submit_round(states, tables, entries_by_bank)
+        if sp is not None:
+            tr.end(sp)
         return entries_by_bank, fut
 
     def _submit_round(self, states, tables, entries_by_bank):
@@ -482,15 +517,38 @@ class SimdramChip:
                 [(e.uprog, e.lanes, e.sid) for e in entries], fused=fused)
             st.add_wave(c, fused, concurrent=True)
             st.bank_busy_s[b] += c.latency_s
+            tr = active_tracer()
+            if tr is not None:
+                # per-bank modeled busy time on the bank's own lane (the
+                # round charges the max across banks; this shows each
+                # bank's term of it)
+                ev = tr.event("bank.wave", cat="replay",
+                              lane=self.banks[b]._lane, slots=len(entries))
+                tr.charge("bank.busy", c.latency_s, span=ev)
             for e in entries:
                 st.subarray_programs[b * self.n_subarrays + e.sid] += 1
             bank_waves.append((c.uprogs, c.invocations))
-        st.latency_s += chip_round_latency_s(bank_waves, self.cfg)
+        round_s = chip_round_latency_s(bank_waves, self.cfg)
+        st.latency_s += round_s
+        tr = active_tracer()
+        if tr is not None:
+            tr.charge("chip.replay", round_s)
         return bank_waves
 
     def _harvest_round(self, queue, pending, planes_cache, needed, results):
         """Materialize one completed chip round, bank slab by bank slab
         (forwarded planes published per bank — chains are bank-local)."""
+        tr = active_tracer()
+        if tr is not None:
+            with tr.span("chip.unpack", cat="unpack"):
+                self._harvest_round_impl(queue, pending, planes_cache,
+                                         needed, results)
+            return
+        self._harvest_round_impl(queue, pending, planes_cache, needed,
+                                 results)
+
+    def _harvest_round_impl(self, queue, pending, planes_cache, needed,
+                            results):
         entries_by_bank, fut = pending
         out = np.asarray(fut)
         for b, entries in entries_by_bank:

@@ -27,6 +27,7 @@ Port semantics match :class:`repro.core.subarray.Subarray` exactly: a
 from __future__ import annotations
 
 import functools
+import time
 from typing import Dict, Sequence, Tuple
 
 import jax
@@ -243,11 +244,18 @@ class TableCache:
     def get(self, key, build):
         """Return the cached device array for ``key``, building (and
         device-committing) it on first use via ``build()``."""
+        from .telemetry import active_tracer
+        tr = active_tracer()
         t = self._store.get(key)
         if t is None:
             self.misses += 1
+            t0 = time.perf_counter() if tr is not None else 0.0
             arr = build()
             t = self._store[key] = jax.device_put(arr)
+            if tr is not None:
+                tr.event("table_cache.miss", cat="cache", tier=key[0],
+                         wall_s=time.perf_counter() - t0,
+                         bytes=int(arr.nbytes))
             self.bytes += int(arr.nbytes)
             while self.bytes > self.max_bytes and len(self._store) > 1:
                 _, old = self._store.popitem(last=False)
@@ -256,6 +264,8 @@ class TableCache:
         else:
             self.hits += 1
             self._store.move_to_end(key)
+            if tr is not None:
+                tr.event("table_cache.hit", cat="cache", tier=key[0])
         return t
 
     def stats(self) -> Dict[str, int]:

@@ -59,6 +59,7 @@ import numpy as np
 from .control_unit import output_plane_rows
 from .costmodel import vote_cost_s
 from .subarray import pack_bits, unpack_bits
+from .telemetry import active_tracer, spec_as_dict
 from .timing import DDR4, DramConfig, fault_replay_overhead_s
 
 # stuck-at column patterns are drawn once per subarray over the physical
@@ -179,6 +180,18 @@ class FaultStats:
     host_fallbacks: int = 0
     overhead_s: float = 0.0
 
+    _FIELD_SPEC = (
+        ("injected", "int"),
+        ("checks", "int"),
+        ("detected", "int"),
+        ("corrected", "int"),
+        ("retries", "int"),
+        ("redispatches", "int"),
+        ("remapped", "int"),
+        ("host_fallbacks", "int"),
+        ("overhead_s", "float"),
+    )
+
     @property
     def any(self) -> bool:
         return any((self.injected, self.checks, self.detected,
@@ -187,17 +200,7 @@ class FaultStats:
                     self.overhead_s > 0.0))
 
     def as_dict(self) -> Dict[str, float]:
-        return {
-            "injected": int(self.injected),
-            "checks": int(self.checks),
-            "detected": int(self.detected),
-            "corrected": int(self.corrected),
-            "retries": int(self.retries),
-            "redispatches": int(self.redispatches),
-            "remapped": int(self.remapped),
-            "host_fallbacks": int(self.host_fallbacks),
-            "overhead_s": float(self.overhead_s),
-        }
+        return spec_as_dict(self)
 
 
 def _pack_col_mask(bits: np.ndarray) -> np.ndarray:
@@ -364,6 +367,11 @@ def faulty_execute(model: FaultModel, run: Callable, states: np.ndarray,
     runs_per_attempt = 2 if r == 1 else 1
     unit_shape = states.shape[:-2]
     n_words = states.shape[-1]
+    tr = active_tracer()
+    sp = None
+    if tr is not None:
+        sp = tr.begin("fault.execute", cat="fault", slabs=len(slabs),
+                      replicas=r)
 
     s0 = np.zeros(unit_shape + (n_words,), np.uint32)
     s1 = np.zeros(unit_shape + (n_words,), np.uint32)
@@ -408,13 +416,18 @@ def faulty_execute(model: FaultModel, run: Callable, states: np.ndarray,
             out_dev, nflips = run(states_dev, tables_dev,
                                   jnp.asarray(keys), s0_dev, s1_dev,
                                   dead_dev, p)
-            stats.injected += int(np.sum(np.asarray(nflips),
-                                         dtype=np.int64))
+            flips = int(np.sum(np.asarray(nflips), dtype=np.int64))
+            stats.injected += flips
+            if sp is not None:
+                tr.event("fault.inject", cat="fault", attempt=attempt,
+                         flips=flips)
             outs.append(np.asarray(out_dev))
             total_runs += 1
         last_out = outs[-1]
         if attempt:
             stats.retries += 1
+            if sp is not None:
+                tr.event("fault.retry", cat="fault", attempt=attempt)
 
         for j, (idx, e) in enumerate(ents):
             if acc_ok[j].all():
@@ -442,22 +455,33 @@ def faulty_execute(model: FaultModel, run: Callable, states: np.ndarray,
                 acc_vals[j][o][newly] = v[newly]
             acc_ok[j] |= newly
 
-        stats.overhead_s += sum(
+        vote_s = sum(
             vote_cost_s(e.lanes // r, sum(e.spec.out_bits), r, cfg)
             for j, (_, e) in enumerate(ents) if not acc_ok[j].all()
         ) + sum(
             vote_cost_s(e.lanes // r, sum(e.spec.out_bits), r, cfg)
             for j, (_, e) in enumerate(ents) if acc_ok[j].all())
+        stats.overhead_s += vote_s
+        if sp is not None:
+            tr.event("fault.vote", cat="fault", attempt=attempt,
+                     undecided=sum(1 for ok in acc_ok if not ok.all()))
+            tr.charge("fault", vote_s, span=sp)
         if all(ok.all() for ok in acc_ok):
             break
     else:
         bad = [idx + (e.sid,) for j, (idx, e) in enumerate(ents)
                if not acc_ok[j].all()]
-        stats.overhead_s += fault_replay_overhead_s(
-            base_s, total_runs - 1)
+        replay_s = fault_replay_overhead_s(base_s, total_runs - 1)
+        stats.overhead_s += replay_s
+        if sp is not None:
+            tr.charge("fault", replay_s, span=sp)
+            tr.end(sp, runs=total_runs, persistent_units=len(bad))
         raise _PersistentFault(bad)
 
-    stats.overhead_s += fault_replay_overhead_s(base_s, total_runs - 1)
+    replay_s = fault_replay_overhead_s(base_s, total_runs - 1)
+    stats.overhead_s += replay_s
+    if sp is not None:
+        tr.charge("fault", replay_s, span=sp)
 
     # heal: write the voted values back into the output planes (repeated
     # across replicas) so harvest and plane forwarding read clean data
@@ -468,6 +492,8 @@ def faulty_execute(model: FaultModel, run: Callable, states: np.ndarray,
         for o, rows in enumerate(rows_of[j]):
             vals = np.tile(acc_vals[j][o], r)
             sub[list(rows)] = pack_bits(vals, e.spec.out_bits[o], n_cols)
+    if sp is not None:
+        tr.end(sp, runs=total_runs)
     return final
 
 
@@ -489,17 +515,32 @@ def fault_guarded_dispatch(model: FaultModel, stats: FaultStats, queue,
         return []
     r = model.replicas
     rep = replicate_queue(queue, r)
+    tr = active_tracer()
+    depth0 = tr.depth if tr is not None else 0
     for _ in range(model.max_redispatches + 1):
         if capacity() <= 0:
+            if tr is not None:
+                tr.incident("fault_exhausted", cause="no_capacity",
+                            redispatches=stats.redispatches)
             raise FaultExhaustedError(
                 "no fault-free subarrays left to repack onto")
         try:
             res = dispatch_core(rep)
         except _PersistentFault as pf:
+            if tr is not None:
+                # close the spans the aborted dispatch left open so the
+                # re-dispatch does not nest under a stale tree
+                tr.unwind(depth0)
             stats.redispatches += 1
             stats.remapped += int(blacklist_units(pf.units))
+            if tr is not None:
+                tr.event("fault.redispatch", cat="fault",
+                         blacklisted=len(pf.units))
             continue
         return dereplicate_results(res, r)
+    if tr is not None:
+        tr.incident("fault_exhausted", cause="redispatch_budget",
+                    redispatches=stats.redispatches)
     raise FaultExhaustedError(
         f"persistent faults survived {model.max_redispatches + 1} "
         "dispatch attempts")

@@ -302,12 +302,29 @@ class SimdramDevice:
         tests/test_fused_dispatch.py, tests/test_chip.py,
         tests/test_channel.py and tests/test_apps.py."""
         from .bank import plan_queue, validate_queue
+        from .telemetry import active_tracer
         queue = list(queue)     # tolerate iterator queues
         if not queue:
             raise ValueError(
                 "SimdramDevice.dispatch: empty queue — build at least one "
                 "BbopInstr before dispatching")
-        validate_queue(queue, self.style)
+        tr = active_tracer()
+        if tr is None:
+            validate_queue(queue, self.style)
+            return self._dispatch_validated(queue)
+        root = tr.begin("device.dispatch", cat="dispatch",
+                        backend=self.backend, instrs=len(queue))
+        try:
+            with tr.span("device.validate", cat="plan"):
+                validate_queue(queue, self.style)
+            return self._dispatch_validated(queue)
+        finally:
+            # defensive LIFO pop in end() also closes anything an
+            # exception (e.g. FaultExhaustedError) left open beneath
+            tr.end(root)
+
+    def _dispatch_validated(self, queue) -> List:
+        from .bank import plan_queue
         engines = {"channel": self.channel, "chip": self.chip,
                    "bank": self.bank}
         if self.backend not in engines:

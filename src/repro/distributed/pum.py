@@ -54,6 +54,17 @@ from repro.core.control_unit import (channel_batched_interpreter,
 from .sharding import fit_spec
 
 
+def _note_executor(kind: str, mesh: Optional[Mesh], sharded: bool) -> None:
+    """Record which replay executor a tier got (shard_map vs the vmap
+    fallback, and over how many devices) in the active trace, so a
+    Perfetto timeline says how the replay actually partitioned."""
+    from repro.core.telemetry import active_tracer
+    tr = active_tracer()
+    if tr is not None:
+        tr.event("pum.executor", cat="plan", kind=kind, sharded=sharded,
+                 devices=int(mesh.devices.size) if mesh is not None else 1)
+
+
 def pum_mesh(n_banks: int, devices: Optional[Sequence] = None) -> Optional[Mesh]:
     """1-D ``("data",)`` mesh over the largest device prefix whose size
     divides ``n_banks`` (equal bank slabs per device).  ``None`` when
@@ -80,6 +91,16 @@ class ChipExecutor:
     mesh: Optional[Mesh]
     sharded: bool
 
+    def describe(self) -> dict:
+        """Flat summary for telemetry / benchmark artifacts."""
+        return {
+            "sharded": bool(self.sharded),
+            "devices": int(self.mesh.devices.size) if self.mesh is not None
+            else 1,
+            "axes": list(self.mesh.axis_names) if self.mesh is not None
+            else [],
+        }
+
 
 def make_chip_executor(
     n_banks: int,
@@ -95,6 +116,7 @@ def make_chip_executor(
     the single-device vmap fallback (the bit-exactness reference).
     """
     if use_shard_map is False:
+        _note_executor("chip", None, False)
         return ChipExecutor(chip_batched_interpreter(), None, False)
     if mesh is None:
         mesh = pum_mesh(n_banks)
@@ -106,7 +128,9 @@ def make_chip_executor(
             raise ValueError(
                 f"shard_map requested but no multi-device mesh fits "
                 f"n_banks={n_banks} (devices={jax.device_count()})")
+        _note_executor("chip", mesh, False)
         return ChipExecutor(chip_batched_interpreter(), mesh, False)
+    _note_executor("chip", mesh, True)
     return ChipExecutor(_sharded_executor(mesh), mesh, True)
 
 
@@ -136,6 +160,7 @@ def make_faulty_chip_executor(
     ``data`` axis as the state slabs and the mesh-selection logic is
     identical."""
     if use_shard_map is False:
+        _note_executor("chip.faulty", None, False)
         return ChipExecutor(faulty_chip_batched_interpreter(), None, False)
     if mesh is None:
         mesh = pum_mesh(n_banks)
@@ -147,7 +172,9 @@ def make_faulty_chip_executor(
             raise ValueError(
                 f"shard_map requested but no multi-device mesh fits "
                 f"n_banks={n_banks} (devices={jax.device_count()})")
+        _note_executor("chip.faulty", mesh, False)
         return ChipExecutor(faulty_chip_batched_interpreter(), mesh, False)
+    _note_executor("chip.faulty", mesh, True)
     return ChipExecutor(_sharded_faulty_executor(mesh), mesh, True)
 
 
@@ -211,6 +238,16 @@ class ChannelExecutor:
     mesh: Optional[Mesh]
     sharded: bool
 
+    def describe(self) -> dict:
+        """Flat summary for telemetry / benchmark artifacts."""
+        return {
+            "sharded": bool(self.sharded),
+            "devices": int(self.mesh.devices.size) if self.mesh is not None
+            else 1,
+            "axes": list(self.mesh.axis_names) if self.mesh is not None
+            else [],
+        }
+
 
 def make_channel_executor(
     n_chips: int,
@@ -228,6 +265,7 @@ def make_channel_executor(
     vmap fallback (the bit-exactness reference).
     """
     if use_shard_map is False:
+        _note_executor("channel", None, False)
         return ChannelExecutor(channel_batched_interpreter(), None, False)
     if mesh is None:
         mesh = channel_mesh(n_chips, n_banks)
@@ -243,7 +281,9 @@ def make_channel_executor(
                 f"shard_map requested but no multi-device (channel, data) "
                 f"mesh fits n_chips={n_chips} × n_banks={n_banks} "
                 f"(devices={jax.device_count()})")
+        _note_executor("channel", mesh, False)
         return ChannelExecutor(channel_batched_interpreter(), mesh, False)
+    _note_executor("channel", mesh, True)
     return ChannelExecutor(_sharded_channel_executor(mesh), mesh, True)
 
 
@@ -272,6 +312,7 @@ def make_faulty_channel_executor(
     fault operands sharded over the same ``("channel", "data")`` grid as
     the chip/bank slabs."""
     if use_shard_map is False:
+        _note_executor("channel.faulty", None, False)
         return ChannelExecutor(
             faulty_channel_batched_interpreter(), None, False)
     if mesh is None:
@@ -288,8 +329,10 @@ def make_faulty_channel_executor(
                 f"shard_map requested but no multi-device (channel, data) "
                 f"mesh fits n_chips={n_chips} × n_banks={n_banks} "
                 f"(devices={jax.device_count()})")
+        _note_executor("channel.faulty", mesh, False)
         return ChannelExecutor(
             faulty_channel_batched_interpreter(), mesh, False)
+    _note_executor("channel.faulty", mesh, True)
     return ChannelExecutor(_sharded_faulty_channel_executor(mesh), mesh, True)
 
 

@@ -141,12 +141,18 @@ class PumServeOffload:
         return np.where(noop, x, deq)
 
     def __call__(self, logits) -> np.ndarray:
+        from repro.core.telemetry import REGISTRY, active_tracer
         x = np.asarray(logits, np.float32)
         if x.size == 0:
             return x             # no slots / no vocab: nothing to offload
         q, lo, scale = self._quantize(x)
         queue: list = []
         heads = [self._chain(q[b], queue) for b in range(q.shape[0])]
+        tr = active_tracer()
+        sp = None
+        if tr is not None:
+            sp = tr.begin("serve.offload", cat="serve", rows=q.shape[0],
+                          instrs=len(queue))
         try:
             out = self.chip.dispatch(queue)
         except FaultExhaustedError:
@@ -154,12 +160,22 @@ class PumServeOffload:
             # back to the numpy oracle for this step (same pipeline,
             # same values) and keep serving
             self.host_fallbacks += 1
+            REGISTRY.counter("serve.host_fallbacks").inc()
             faults = getattr(self.chip.stats, "faults", None)
             if faults is not None:
                 faults.host_fallbacks += 1
+            if sp is not None:
+                tr.incident("serve_host_fallback", rows=int(q.shape[0]),
+                            host_fallbacks=self.host_fallbacks)
+                with tr.span("serve.host_fallback", cat="serve"):
+                    ref = self.reference(logits)
+                tr.end(sp, fallback=True)
+                return ref
             return self.reference(logits)
         y = np.stack([np.asarray(out[h]).astype(np.uint64)
                       & ((1 << self.n_bits) - 1) for h in heads])
+        if sp is not None:
+            tr.end(sp)
         return self._dequantize(x, q, y, lo, scale)
 
     def reference(self, logits) -> np.ndarray:
