@@ -21,8 +21,16 @@ from . import bank_scaling as B
 from . import chip_scaling as C
 from . import fault_sweep as F
 from . import paper_tables as T
+from . import serving_soak as S
 
 TABLES = {
+    "serving": lambda full, smoke=False: S.table_serving_soak(
+        loads=(8, 32) if full else (4, 12),
+        sigmas=(0.0, 0.12, 0.15) if full else (0.0, 0.15),
+        rounds=6 if full else 3,
+        lanes=128 if full else 32,
+        p_trials=200_000 if full else 20_000,
+        out_json=None),
     "fault_sweep": lambda full, smoke=False: F.table_fault_sweep(
         sigmas=(0.12, 0.15, 0.18) if full else (0.15, 0.18),
         spare_lanes=(1, 2) if full else (1,),

@@ -1,0 +1,333 @@
+"""Serving soak: the multi-tenant front-end under load, faults, deadlines.
+
+PRs 1–8 built the ladder and made single dispatches resilient; this
+benchmark soaks the *service* built on top of it
+(:class:`repro.serving.ServingFrontend`) and emits ``BENCH_serving.json``:
+
+  - **offered-load × fault-σ sweep**: deterministic multi-tenant traffic
+    (mixed ops/widths, priorities, a tight-deadline fraction, deliberate
+    queue overflow) drains through coalesced waves; per scenario the
+    report carries goodput, modeled p50/p99 latency, admission rejects,
+    deadline misses, retries and host fallbacks — and the soak
+    invariant: **zero lost tickets, zero duplicated resolutions**, every
+    completed ticket bit-exact against the host oracle;
+  - **breaker trip-and-recover gate**: a persistent dead subarray
+    (zero spare budget) trips the per-tenant circuit breaker to
+    host-oracle fallback, the cooldown half-opens it, and the probe
+    window must succeed on DRAM (the engine blacklisted the dead unit)
+    — closing the breaker again;
+  - **disabled-frontend zero-overhead gate**: with ``repro.serving``
+    imported, a plain ``channel.dispatch`` (and one with a live
+    ``cancel`` hook) must add zero new XLA traces, keep bit-identical
+    results and identical modeled latency — the layer is strictly free
+    when unused.
+
+Output follows the harness contract: ``name,us_per_call,derived`` CSV
+rows.
+
+  python -m benchmarks.serving_soak            # full soak
+  python -m benchmarks.serving_soak --smoke    # CI configuration
+"""
+
+from __future__ import annotations
+
+import json
+import math
+import time
+from typing import Dict, List, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.bank import BbopInstr, flatten_result
+from repro.core.channel import SimdramChannel
+from repro.core.fault import FaultModel
+from repro.core.ops_library import get_op
+from repro.core.telemetry import REGISTRY
+from repro.serving import (AdmissionRejected, DeadlineExceeded,
+                           ServingFrontend)
+from repro.train.serve import bbop_host_oracle
+
+LOADS = (8, 32)
+SIGMAS = (0.0, 0.12, 0.15)
+
+# mixed-arity pool: binary, unary, and one multi-output op so the soak
+# exercises every fan-out shape the front-end supports
+OPS_POOL = ("addition", "subtraction", "multiplication", "min", "max",
+            "relu", "bitcount", "division")
+TENANTS = ("alice", "bob", "carol")
+GENEROUS_S = 10.0      # never missed at soak scale
+TIGHT_S = 1e-7         # always shorter than one wave's modeled latency
+
+
+def _exact(got, want) -> bool:
+    if isinstance(want, tuple):
+        return (isinstance(got, tuple) and len(got) == len(want)
+                and all(np.array_equal(np.asarray(a).reshape(-1),
+                                       np.asarray(b).reshape(-1))
+                        for a, b in zip(got, want)))
+    return np.array_equal(np.asarray(got).reshape(-1),
+                          np.asarray(want).reshape(-1))
+
+
+def _traffic(rng: np.random.Generator, n: int, lanes: int,
+             widths: Sequence[int] = (8, 16)):
+    """n deterministic requests: (op, n_bits, operands)."""
+    out = []
+    for _ in range(n):
+        op = OPS_POOL[int(rng.integers(len(OPS_POOL)))]
+        n_bits = int(widths[int(rng.integers(len(widths)))])
+        spec = get_op(op, n_bits)
+        operands = tuple(
+            np.asarray(rng.integers(0, 1 << min(n_bits, 16), size=lanes),
+                       np.int64)
+            for _ in range(spec.n_operands))
+        out.append((op, n_bits, operands))
+    return out
+
+
+def _soak_scenario(load: int, sigma: float, rounds: int, lanes: int,
+                   p_trials: int) -> Dict:
+    """One offered-load × σ point; returns the report entry."""
+    REGISTRY.reset()
+    fault = None
+    if sigma > 0.0:
+        fault = FaultModel(sigma=sigma, p_trials=p_trials, spare_lanes=1,
+                           stuck_lane_rate=0.002, seed=21)
+    engine = SimdramChannel(n_chips=2, n_banks=2, n_subarrays=2,
+                            fault=fault)
+    depth = max(1, (3 * load) // 4)        # last quarter of each round
+    fe = ServingFrontend(engine, max_queue_depth=depth, window=load,
+                         max_retries=2, seed=0)
+    rng = np.random.default_rng(0)          # same traffic at every σ
+    tickets: List[Tuple] = []
+    t0 = time.perf_counter()
+    for _ in range(rounds):
+        for i, (op, n_bits, operands) in enumerate(
+                _traffic(rng, load, lanes)):
+            deadline = fe.now_s + (TIGHT_S if i % 4 == 3 else GENEROUS_S)
+            try:
+                t = fe.submit(TENANTS[i % len(TENANTS)], op, operands,
+                              n_bits, deadline_s=deadline,
+                              priority=1 if i % 5 == 0 else 0)
+            except AdmissionRejected:
+                continue                 # deliberate overflow traffic
+            tickets.append((t, op, n_bits, operands))
+        fe.drain()
+    wall_us = (time.perf_counter() - t0) * 1e6
+    s = fe.stats
+
+    # -- soak invariants ---------------------------------------------------
+    lost = ok = missed = mismatch = 0
+    for t, op, n_bits, operands in tickets:
+        if not t.done:
+            lost += 1
+            continue
+        try:
+            got = t.result(timeout=0)
+        except DeadlineExceeded:
+            missed += 1
+            continue
+        if not _exact(got, bbop_host_oracle(op, n_bits, operands)):
+            mismatch += 1
+        ok += 1
+    key = f"load={load}/sigma={sigma:.2f}"
+    if lost or mismatch:
+        raise SystemExit(f"SOAK INVARIANT BROKEN at {key}: "
+                         f"lost={lost} mismatched={mismatch}")
+    if s.admitted != len(tickets) or ok != s.completed \
+            or missed != s.deadline_missed \
+            or s.completed + s.deadline_missed != s.admitted:
+        raise SystemExit(
+            f"TICKET ACCOUNTING BROKEN at {key}: admitted={s.admitted} "
+            f"completed={s.completed} missed={s.deadline_missed} "
+            f"tickets={len(tickets)} ok={ok}")
+    # a duplicated resolution raises inside Ticket._settle and aborts the
+    # bench, so reaching here certifies duplicated == 0
+
+    hist = REGISTRY.histogram("serving.latency_modeled_s")
+    duration = max(fe.now_s, 1e-12)
+    goodput = s.completed / duration
+    entry = {
+        "goodput_rps": goodput,
+        "p50_latency_s": hist.percentile(50),
+        "p99_latency_s": hist.percentile(99),
+        "modeled_duration_s": fe.now_s,
+        "bit_exact": True,
+        "exhausted": False,            # every ticket answered
+        "lost": 0,
+        "duplicated": 0,
+        **s.as_dict(),
+    }
+    print(f"serving/{key},{wall_us / max(s.submitted, 1):.0f},"
+          f"{goodput:.1f}  # goodput_rps p50={entry['p50_latency_s']:.2e}s"
+          f" p99={entry['p99_latency_s']:.2e}s rejected={s.rejected}"
+          f" missed={s.deadline_missed} retries={s.retries}"
+          f" fallbacks={s.host_fallbacks}")
+    return entry
+
+
+def _breaker_scenario() -> Dict:
+    """Trip → shed → half-open → recover, all bit-exact.
+
+    ``seed=0`` with ``dead_unit_rate=0.3`` on a (1 chip, 2 banks,
+    2 subarrays) channel kills exactly one subarray; four distinct ops
+    force four wave slots so the first window deterministically lands on
+    it.  With zero redispatch budget the dispatch exhausts (tripping the
+    breaker to host fallback) AND blacklists the dead unit, so the probe
+    window after the cooldown repacks around it and succeeds on DRAM.
+    """
+    REGISTRY.reset()
+    model = FaultModel(p_flip=0.0, dead_unit_rate=0.3, spare_lanes=1,
+                       max_redispatches=0, seed=0)
+    engine = SimdramChannel(n_chips=1, n_banks=2, n_subarrays=2,
+                            fault=model)
+    fe = ServingFrontend(engine, max_retries=0, breaker_threshold=1,
+                         breaker_cooldown_s=1e-5, window=8, seed=0)
+    rng = np.random.default_rng(7)
+    ops4 = ("addition", "subtraction", "min", "max")
+
+    def window():
+        out = []
+        for op in ops4:
+            a = np.asarray(rng.integers(0, 256, 64), np.int64)
+            b = np.asarray(rng.integers(0, 256, 64), np.int64)
+            out.append((fe.submit("alice", op, (a, b), 8), op, (a, b)))
+        fe.drain()
+        return out
+
+    t0 = time.perf_counter()
+    tripped = window()       # exhausts → breaker trips → host fallback
+    shed = window()          # breaker OPEN → shed straight to host
+    fe.now_s += 10 * fe.breaker_cooldown_s      # cooldown elapses
+    probe = window()         # HALF_OPEN probe repacks around the
+    wall_us = (time.perf_counter() - t0) * 1e6  # blacklisted unit
+    s = fe.stats
+
+    bit_exact = all(
+        _exact(t.result(timeout=0), bbop_host_oracle(op, 8, operands))
+        for t, op, operands in tripped + shed + probe)
+    degraded_via_host = all(t.via_host for t, _, _ in tripped + shed)
+    probe_on_dram = all(not t.via_host for t, _, _ in probe)
+    verified = (s.breaker_trips >= 1 and s.breaker_recoveries >= 1
+                and bit_exact and degraded_via_host and probe_on_dram)
+    if not verified:
+        raise SystemExit(
+            f"BREAKER GATE FAILED: trips={s.breaker_trips} "
+            f"recoveries={s.breaker_recoveries} bit_exact={bit_exact} "
+            f"degraded_via_host={degraded_via_host} "
+            f"probe_on_dram={probe_on_dram}")
+    entry = {
+        "verified": True,
+        "bit_exact": True,
+        "breaker_trips": int(s.breaker_trips),
+        "breaker_recoveries": int(s.breaker_recoveries),
+        "host_fallbacks": int(s.host_fallbacks),
+        "completed": int(s.completed),
+        "lost": 0,
+        "duplicated": 0,
+    }
+    print(f"serving/breaker,{wall_us / max(s.submitted, 1):.0f},"
+          f"{s.breaker_trips}  # trip -> shed({s.host_fallbacks} host) "
+          f"-> half-open -> recover({s.breaker_recoveries}), bit-exact")
+    return entry
+
+
+def _disabled_gate() -> Dict:
+    """With repro.serving imported, the plain dispatch path (and one
+    with a live never-true cancel hook) must stay byte-identical: zero
+    new XLA traces, bit-exact results, identical modeled latency."""
+    from repro.core.control_unit import trace_counts
+
+    def queue():
+        rng = np.random.default_rng(3)
+        q = []
+        for op, n_bits in (("addition", 8), ("multiplication", 8),
+                           ("min", 16), ("relu", 16)):
+            spec = get_op(op, n_bits)
+            q.append(BbopInstr(op, tuple(
+                np.asarray(rng.integers(0, 1 << 8, 64), np.uint64)
+                for _ in range(spec.n_operands)), n_bits))
+        return q
+
+    shape = dict(n_chips=2, n_banks=2, n_subarrays=2)
+    plain = SimdramChannel(**shape)
+    r_plain = plain.dispatch(queue())
+    tr0 = trace_counts()
+    fresh = SimdramChannel(**shape)
+    r_fresh = fresh.dispatch(queue())                    # cancel=None
+    hooked = SimdramChannel(**shape)
+    r_hooked = hooked.dispatch(queue(), cancel=lambda: False)
+    new_traces = sum(trace_counts().values()) - sum(tr0.values())
+
+    def same(a, b) -> bool:
+        return all(np.array_equal(x, y)
+                   for ra, rb in zip(a, b)
+                   for x, y in zip(flatten_result(ra), flatten_result(rb)))
+
+    if new_traces:
+        raise SystemExit(f"SERVING LAYER RETRACED THE PLAIN PATH: "
+                         f"{new_traces} new traces")
+    if not (same(r_fresh, r_plain) and same(r_hooked, r_plain)):
+        raise SystemExit("SERVING LAYER PERTURBED PLAIN DISPATCH RESULTS")
+    if not math.isclose(fresh.stats.total_latency_s,
+                        plain.stats.total_latency_s) \
+            or not math.isclose(hooked.stats.total_latency_s,
+                                plain.stats.total_latency_s):
+        raise SystemExit("SERVING LAYER CHANGED MODELED LATENCY "
+                         f"(plain={plain.stats.total_latency_s} "
+                         f"fresh={fresh.stats.total_latency_s} "
+                         f"hooked={hooked.stats.total_latency_s})")
+    print("serving/disabled,0.00,0  # frontend unused: 0 new traces, "
+          "bit-exact, identical modeled latency (cancel hook included)")
+    return {"zero_overhead": True, "new_traces": 0, "bit_exact": True}
+
+
+def table_serving_soak(
+    loads: Sequence[int] = LOADS,
+    sigmas: Sequence[float] = SIGMAS,
+    rounds: int = 6,
+    lanes: int = 128,
+    p_trials: int = 200_000,
+    out_json: str | None = "BENCH_serving.json",
+) -> Dict:
+    """Load×σ soak + breaker trip/recover gate + zero-overhead gate."""
+    report: Dict = {
+        "config": {"loads": list(loads), "sigmas": list(sigmas),
+                   "rounds": rounds, "lanes": lanes, "p_trials": p_trials,
+                   "n_chips": 2, "n_banks": 2, "n_subarrays": 2},
+        "sweep": {},
+        "breaker": {},
+        "disabled": {},
+    }
+    print("# serving_soak/sweep: name,us_per_call,derived(goodput_rps)")
+    for load in loads:
+        for sigma in sigmas:
+            key = f"load={load}/sigma={sigma:.2f}"
+            report["sweep"][key] = _soak_scenario(load, sigma, rounds,
+                                                  lanes, p_trials)
+    report["breaker"] = _breaker_scenario()
+    report["disabled"] = _disabled_gate()
+    report["registry"] = REGISTRY.snapshot("serving.")
+
+    if out_json:
+        with open(out_json, "w") as f:
+            json.dump(report, f, indent=2, sort_keys=True)
+        print(f"# wrote {out_json}")
+    return report
+
+
+if __name__ == "__main__":
+    import argparse
+
+    p = argparse.ArgumentParser()
+    p.add_argument("--smoke", action="store_true",
+                   help="fast CI configuration (fewer load/σ points, "
+                        "small lanes)")
+    p.add_argument("--json", default="BENCH_serving.json",
+                   help="output path for the serving bench report")
+    args = p.parse_args()
+    if args.smoke:
+        table_serving_soak(loads=(4, 12), sigmas=(0.0, 0.15), rounds=3,
+                           lanes=32, p_trials=20_000, out_json=args.json)
+    else:
+        table_serving_soak(out_json=args.json)

@@ -2,8 +2,9 @@
 """Evidence-gated perf CI: compare fresh BENCH_*.json against baselines.
 
 The smoke benches in scripts/ci.sh regenerate ``BENCH_dispatch.json``,
-``BENCH_chip.json``, ``BENCH_channel.json``, ``BENCH_apps.json`` and
-``BENCH_faults.json`` on every run; this script diffs them against the
+``BENCH_chip.json``, ``BENCH_channel.json``, ``BENCH_apps.json``,
+``BENCH_faults.json`` and ``BENCH_serving.json`` on every run; this
+script diffs them against the
 committed baselines in ``benchmarks/baselines/`` and fails the build on
 a perf or correctness regression.  The verdict is machine-readable:
 ``PERF_VERDICT.json`` lists every comparison that ran and every
@@ -18,7 +19,7 @@ Rules (applied per leaf key, walking both JSON trees in lockstep):
     latency / transfer / transpose / fault overhead — must satisfy
     ``current <= baseline * (1 + tol)``;
   - **throughput (higher is better)**: keys ending ``gops``,
-    ``speedup`` or ``_saved`` must satisfy
+    ``speedup``, ``_saved`` or ``_rps`` (serving goodput) must satisfy
     ``current >= baseline * (1 - tol)``;
   - **replay-economy counters (lower is better)**: ``replays``,
     ``rounds``, ``super_rounds``, ``bank_waves``, ``batches``,
@@ -57,12 +58,15 @@ REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 BASELINE_DIR = os.path.join(REPO, "benchmarks", "baselines")
 BENCH_FILES = ("BENCH_dispatch.json", "BENCH_chip.json",
                "BENCH_channel.json", "BENCH_apps.json",
-               "BENCH_faults.json")
+               "BENCH_faults.json", "BENCH_serving.json")
 
 LOWER_COUNTERS = {
     "replays", "rounds", "super_rounds", "bank_waves", "batches",
     "fused_batches", "transfer_bytes", "new_traces_per_dispatch",
     "table_cache_misses_per_dispatch", "transpositions",
+    # serving-soak invariants: a baseline of 0 lost / 0 duplicated
+    # tickets means any nonzero value fails the build
+    "lost", "duplicated",
 }
 TRUE_STAYS_TRUE = {"bit_exact", "verified", "zero_overhead"}
 FALSE_STAYS_FALSE = {"exhausted"}
@@ -88,7 +92,7 @@ def _classify(key: str):
     if key in LOWER_COUNTERS:
         return "counter_le"
     if key.endswith("gops") or key.endswith("speedup") \
-            or key.endswith("_saved"):
+            or key.endswith("_saved") or key.endswith("_rps"):
         return "higher_better"
     if key.endswith("_s"):
         return "lower_better"

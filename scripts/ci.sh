@@ -84,6 +84,14 @@ echo "== fault-injection smoke gate (2 forced devices: sharded faulty replay) ==
 XLA_FLAGS=--xla_force_host_platform_device_count=2 \
     python -m benchmarks.fault_sweep --smoke --json BENCH_faults.json
 
+echo "== serving soak gate (2 forced devices: multi-tenant front-end) =="
+# exits non-zero if the soak loses or duplicates a ticket, any completed
+# ticket diverges from the host oracle, the breaker fails to trip and
+# recover through half-open, or the unused frontend adds traces /
+# modeled latency to plain dispatch; BENCH_serving.json is a CI artifact
+XLA_FLAGS=--xla_force_host_platform_device_count=2 \
+    python -m benchmarks.serving_soak --smoke --json BENCH_serving.json
+
 echo "== evidence-gated perf verdict (fresh BENCH_* vs benchmarks/baselines) =="
 # machine-readable verdict in PERF_VERDICT.json; exits non-zero when a
 # modeled latency / throughput / replay-economy counter regresses past

@@ -64,7 +64,8 @@ from .control_unit import (CMD_WIDTH, TABLE_CACHE, batched_interpreter,
                            read_outputs, shape_bucket, table_bucket)
 from .costmodel import critical_path_s, forwarding_saving_s, instr_cost_s
 from .energy import uprogram_energy_nj
-from .isa import _round_up, compile_op
+from .isa import (DispatchCancelled, DispatchGuard, _round_up, check_cancel,
+                  compile_op)
 from .telemetry import active_tracer, spec_as_dict
 from .timing import DDR4, DramConfig, fused_replay_latency_s, uprogram_latency_s
 
@@ -491,6 +492,7 @@ class Bank:
         else:
             self._fault_rt = None
         self.stats = BankStats(n_subarrays)
+        self._guard = DispatchGuard(type(self).__name__)
         self._rr_next = 0     # round-robin allocation cursor (grouped path)
         self._lane_load = np.zeros(n_subarrays, np.int64)  # fused-slot loads
         self._lane = "bank"   # telemetry track label; chip/channel relabel
@@ -677,7 +679,7 @@ class Bank:
                          for i in range(len(results[0])))
         return np.concatenate(results, axis=-1)
 
-    def dispatch(self, queue: Sequence[BbopInstr]) -> List:
+    def dispatch(self, queue: Sequence[BbopInstr], cancel=None) -> List:
         """Drain a queue of bbops; results come back in queue order and
         costs accumulate in :attr:`stats`.
 
@@ -698,16 +700,28 @@ class Bank:
         interpreter — detection, bounded retry, blacklist-and-repack,
         and finally :class:`~repro.core.fault.FaultExhaustedError` when
         the redundancy budget runs out (see :mod:`repro.core.fault`).
-        """
-        queue = list(queue)
-        if self.fault is None or not queue:
-            return self._dispatch_core(queue)
-        from .fault import fault_guarded_dispatch
-        return fault_guarded_dispatch(
-            self.fault, self.stats.faults, queue, self._dispatch_core,
-            self._blacklist_units, lambda: self._wave_capacity)
 
-    def _dispatch_core(self, queue: Sequence[BbopInstr]) -> List:
+        ``cancel`` (optional zero-arg callable) is polled at wave
+        boundaries; returning True aborts with
+        :class:`~repro.core.isa.DispatchCancelled`.  Concurrent calls
+        on one engine raise ``RuntimeError`` (see
+        :class:`~repro.core.isa.DispatchGuard`).
+        """
+        with self._guard:
+            queue = list(queue)
+            if self.fault is None or not queue:
+                return self._dispatch_core(queue, cancel=cancel)
+            from .fault import fault_guarded_dispatch
+            return fault_guarded_dispatch(
+                self.fault, self.stats.faults, queue,
+                lambda q: self._dispatch_core(q, cancel=cancel),
+                self._blacklist_units, lambda: self._wave_capacity,
+                tier="bank",
+                blacklist_snapshot=lambda: tuple(
+                    (s,) for s in sorted(self._blacklist)))
+
+    def _dispatch_core(self, queue: Sequence[BbopInstr],
+                       cancel=None) -> List:
         queue = list(queue)
         results: List = [None] * len(queue)
         if not queue:
@@ -723,9 +737,9 @@ class Bank:
             plan = self._plan(queue)
         self.stats.bbops += len(queue)
         if self.fuse and self.engine == "interp":
-            self._dispatch_fused(queue, plan, results)
+            self._dispatch_fused(queue, plan, results, cancel=cancel)
         else:
-            self._dispatch_grouped(queue, plan, results)
+            self._dispatch_grouped(queue, plan, results, cancel=cancel)
         self.stats.wall_s += time.perf_counter() - t0
         if root is not None:
             tr.end(root)
@@ -754,7 +768,7 @@ class Bank:
                 planes_cache[(i, o)] = np.zeros((w, 0), np.uint32)
 
     # -- fused dataflow dispatcher -----------------------------------------
-    def _dispatch_fused(self, queue, plan, results):
+    def _dispatch_fused(self, queue, plan, results, cancel=None):
         lanes, stage, needed = plan
         planes_cache: Dict[Tuple[int, int], np.ndarray] = {}
         active = []
@@ -769,6 +783,7 @@ class Bank:
         tr = active_tracer()
         pending: Optional[Tuple[List[_Slot], jnp.ndarray]] = None
         for wave in waves:
+            check_cancel(cancel, "bank wave boundary")
             if pending is not None:
                 # stage barrier: if this wave forwards planes from the
                 # still-in-flight wave, drain it before packing
@@ -1169,7 +1184,7 @@ class Bank:
                 results[e.qi] = outs[0] if len(outs) == 1 else tuple(outs)
 
     # -- grouped baseline dispatcher ---------------------------------------
-    def _dispatch_grouped(self, queue, plan, results):
+    def _dispatch_grouped(self, queue, plan, results, cancel=None):
         """Per-(op, width, signedness) grouped replay (the pre-fusion
         path, kept as the bit-exactness baseline and for the bitplane /
         pallas engines).  Ref and VerticalOperand operands are
@@ -1178,6 +1193,7 @@ class Bank:
         lanes, stage, needed = plan
         planes_cache: Dict[Tuple[int, int], np.ndarray] = {}
         for s in sorted(set(stage)):
+            check_cancel(cancel, "bank stage boundary")
             groups: Dict[Tuple[str, int, bool], List[int]] = {}
             for i in (i for i in range(len(queue)) if stage[i] == s):
                 if lanes[i] == 0:

@@ -53,6 +53,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .isa import DispatchGuard, check_cancel
 from .bank import (BankStats, BbopInstr, Ref, VerticalOperand, _Slot,
                    cached_table, plan_queue)
 from .chip import SimdramChip, partition_queue
@@ -258,6 +259,7 @@ class SimdramChannel:
         self.stats = ChannelStats(
             n_subarrays=n_chips * n_banks * n_subarrays,
             n_chips=n_chips, n_banks=n_banks)
+        self._guard = DispatchGuard("SimdramChannel")
         self._lane = "channel"       # telemetry track label
         for c, chip in enumerate(self.chips):
             chip._lane = f"chip{c}"
@@ -302,7 +304,7 @@ class SimdramChannel:
             tr.charge("channel.transfer", transfer_s, span=ev)
 
     # -- dispatch ----------------------------------------------------------
-    def dispatch(self, queue: Sequence[BbopInstr]) -> List:
+    def dispatch(self, queue: Sequence[BbopInstr], cancel=None) -> List:
         """Drain a bbop queue across all chips.
 
         Args:
@@ -329,18 +331,33 @@ class SimdramChannel:
         under fault injection with majority-vote detection, bounded
         retry, and chip/bank/subarray blacklist-and-repack — see
         :mod:`repro.core.fault`.  Note the replicated lanes also inflate
-        ``transfer_bytes``: spare columns are real host↔chip traffic."""
-        queue = list(queue)
-        if self.fault is None or not queue:
-            return self._dispatch_core(queue)
-        from .fault import fault_guarded_dispatch
-        return fault_guarded_dispatch(
-            self.fault, self.stats.faults, queue, self._dispatch_core,
-            self._blacklist_units,
-            lambda: sum(b._wave_capacity for chip in self.chips
-                        for b in chip.banks))
+        ``transfer_bytes``: spare columns are real host↔chip traffic.
 
-    def _dispatch_core(self, queue: Sequence[BbopInstr]) -> List:
+        ``cancel`` (optional zero-arg callable) is polled at super-round
+        boundaries; returning True aborts with
+        :class:`~repro.core.isa.DispatchCancelled`.  Concurrent calls
+        on one engine raise ``RuntimeError``
+        (:class:`~repro.core.isa.DispatchGuard`) — concurrent callers
+        belong behind :class:`repro.serving.ServingFrontend`."""
+        with self._guard:
+            queue = list(queue)
+            if self.fault is None or not queue:
+                return self._dispatch_core(queue, cancel=cancel)
+            from .fault import fault_guarded_dispatch
+            return fault_guarded_dispatch(
+                self.fault, self.stats.faults, queue,
+                lambda q: self._dispatch_core(q, cancel=cancel),
+                self._blacklist_units,
+                lambda: sum(b._wave_capacity for chip in self.chips
+                            for b in chip.banks),
+                tier="channel",
+                blacklist_snapshot=lambda: tuple(sorted(
+                    (c, b, s) for c in range(self.n_chips)
+                    for b in range(self.n_banks)
+                    for s in self.chips[c].banks[b]._blacklist)))
+
+    def _dispatch_core(self, queue: Sequence[BbopInstr],
+                       cancel=None) -> List:
         queue = list(queue)
         results: List = [None] * len(queue)
         if not queue:
@@ -392,6 +409,7 @@ class SimdramChannel:
         n_super = max(len(w) for per_chip in waves for w in per_chip)
         pending: Optional[Tuple[List, jnp.ndarray]] = None
         for r in range(n_super):
+            check_cancel(cancel, "channel super-round boundary")
             round_by_chip = []
             for c in range(self.n_chips):
                 rw = [(b, waves[c][b][r]) for b in range(self.n_banks)

@@ -44,6 +44,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .isa import DispatchGuard, check_cancel
 from .bank import (Bank, BankStats, BbopInstr, Ref, _Slot,
                    _build_stacked_tables, plan_queue)
 from .control_unit import CMD_WIDTH, TABLE_CACHE
@@ -243,6 +244,7 @@ class SimdramChip:
             self._faulty_executor = None
         self.stats = ChipStats(n_subarrays=n_banks * n_subarrays,
                                n_banks=n_banks)
+        self._guard = DispatchGuard("SimdramChip")
         self._lane = "chip"          # telemetry track label
         for b, bank in enumerate(self.banks):
             bank._lane = f"bank{b}"
@@ -256,7 +258,7 @@ class SimdramChip:
                                self.cfg, self.style, allowed=allowed)
 
     # -- dispatch ----------------------------------------------------------
-    def dispatch(self, queue: Sequence[BbopInstr]) -> List:
+    def dispatch(self, queue: Sequence[BbopInstr], cancel=None) -> List:
         """Drain a bbop queue across all banks.
 
         Args:
@@ -288,17 +290,30 @@ class SimdramChip:
         With a :class:`~repro.core.fault.FaultModel` attached, the queue
         replicates across spare lanes and each chip round replays under
         fault injection with majority-vote detection, bounded retry, and
-        bank/subarray blacklist-and-repack — see :mod:`repro.core.fault`."""
-        queue = list(queue)
-        if self.fault is None or not queue:
-            return self._dispatch_core(queue)
-        from .fault import fault_guarded_dispatch
-        return fault_guarded_dispatch(
-            self.fault, self.stats.faults, queue, self._dispatch_core,
-            self._blacklist_units,
-            lambda: sum(b._wave_capacity for b in self.banks))
+        bank/subarray blacklist-and-repack — see :mod:`repro.core.fault`.
 
-    def _dispatch_core(self, queue: Sequence[BbopInstr]) -> List:
+        ``cancel`` (optional zero-arg callable) is polled at round
+        boundaries; returning True aborts with
+        :class:`~repro.core.isa.DispatchCancelled`.  Concurrent calls
+        on one engine raise ``RuntimeError``
+        (:class:`~repro.core.isa.DispatchGuard`)."""
+        with self._guard:
+            queue = list(queue)
+            if self.fault is None or not queue:
+                return self._dispatch_core(queue, cancel=cancel)
+            from .fault import fault_guarded_dispatch
+            return fault_guarded_dispatch(
+                self.fault, self.stats.faults, queue,
+                lambda q: self._dispatch_core(q, cancel=cancel),
+                self._blacklist_units,
+                lambda: sum(b._wave_capacity for b in self.banks),
+                tier="chip",
+                blacklist_snapshot=lambda: tuple(sorted(
+                    (b, s) for b in range(self.n_banks)
+                    for s in self.banks[b]._blacklist)))
+
+    def _dispatch_core(self, queue: Sequence[BbopInstr],
+                       cancel=None) -> List:
         queue = list(queue)
         results: List = [None] * len(queue)
         if not queue:
@@ -340,6 +355,7 @@ class SimdramChip:
         n_rounds = max(len(w) for w in waves_by_bank)
         pending: Optional[Tuple[List[Tuple[int, List[_Slot]]], jnp.ndarray]] = None
         for r in range(n_rounds):
+            check_cancel(cancel, "chip round boundary")
             round_waves = [(b, waves_by_bank[b][r])
                            for b in range(self.n_banks)
                            if r < len(waves_by_bank[b])]

@@ -71,8 +71,43 @@ _PHYS_COLUMNS = 65536
 class FaultExhaustedError(RuntimeError):
     """Dispatch could not produce a trusted result: every retry tier
     (wave re-replay, unit blacklist + repack) was exhausted, or no
-    fault-free capacity remains.  The serving offload catches this and
-    falls back to the host oracle."""
+    fault-free capacity remains.  The serving tiers catch this and fall
+    back to the host oracle.
+
+    Carries structured context so incident records and breaker decisions
+    never have to parse the message: ``cause`` (``"no_capacity"`` or
+    ``"redispatch_budget"``), ``tier`` (``"bank"``/``"chip"``/
+    ``"channel"`` — empty for legacy raises), ``blacklist`` (the tier's
+    blacklisted unit coordinates at raise time), ``retries`` /
+    ``redispatches`` (the :class:`FaultStats` counters at raise time)
+    and ``capacity`` (fault-free subarrays remaining)."""
+
+    def __init__(self, message: str, *, cause: str = "",
+                 tier: str = "",
+                 blacklist: Sequence[Tuple[int, ...]] = (),
+                 retries: int = 0, redispatches: int = 0,
+                 capacity: int = 0):
+        super().__init__(message)
+        self.cause = cause
+        self.tier = tier
+        self.blacklist = tuple(tuple(int(x) for x in u) for u in blacklist)
+        self.retries = int(retries)
+        self.redispatches = int(redispatches)
+        self.capacity = int(capacity)
+
+    def context(self) -> Dict[str, object]:
+        """The structured exhaustion context as flat, JSON-able fields —
+        what incident records and serving-tier breakers attach instead
+        of the bare message."""
+        return {
+            "cause": self.cause,
+            "tier": self.tier,
+            "blacklist": [list(u) for u in self.blacklist],
+            "blacklisted_units": len(self.blacklist),
+            "retries": self.retries,
+            "redispatches": self.redispatches,
+            "capacity": self.capacity,
+        }
 
 
 class _PersistentFault(Exception):
@@ -504,12 +539,21 @@ def faulty_execute(model: FaultModel, run: Callable, states: np.ndarray,
 def fault_guarded_dispatch(model: FaultModel, stats: FaultStats, queue,
                            dispatch_core: Callable,
                            blacklist_units: Callable,
-                           capacity: Callable) -> List:
+                           capacity: Callable,
+                           tier: str = "",
+                           blacklist_snapshot: Optional[Callable] = None
+                           ) -> List:
     """The per-tier dispatch wrapper: replicate the queue, drain it
     through ``dispatch_core`` (whose replays inject faults and may raise
     :class:`_PersistentFault`), blacklist failing units and repack, and
     give up with :class:`FaultExhaustedError` when the redispatch budget
-    or the fault-free capacity runs out."""
+    or the fault-free capacity runs out.
+
+    ``tier`` names the caller (``"bank"``/``"chip"``/``"channel"``) and
+    ``blacklist_snapshot`` returns its blacklisted unit coordinates —
+    both feed the structured :class:`FaultExhaustedError` context and
+    the flight-recorder incident so post-mortems see *where* the
+    redundancy budget died, not just that it did."""
     queue = list(queue)
     if not queue:
         return []
@@ -517,13 +561,21 @@ def fault_guarded_dispatch(model: FaultModel, stats: FaultStats, queue,
     rep = replicate_queue(queue, r)
     tr = active_tracer()
     depth0 = tr.depth if tr is not None else 0
+
+    def _exhaust(cause: str, message: str) -> FaultExhaustedError:
+        err = FaultExhaustedError(
+            message, cause=cause, tier=tier,
+            blacklist=blacklist_snapshot() if blacklist_snapshot else (),
+            retries=stats.retries, redispatches=stats.redispatches,
+            capacity=int(capacity()))
+        if tr is not None:
+            tr.incident("fault_exhausted", **err.context())
+        return err
+
     for _ in range(model.max_redispatches + 1):
         if capacity() <= 0:
-            if tr is not None:
-                tr.incident("fault_exhausted", cause="no_capacity",
-                            redispatches=stats.redispatches)
-            raise FaultExhaustedError(
-                "no fault-free subarrays left to repack onto")
+            raise _exhaust("no_capacity",
+                           "no fault-free subarrays left to repack onto")
         try:
             res = dispatch_core(rep)
         except _PersistentFault as pf:
@@ -538,9 +590,7 @@ def fault_guarded_dispatch(model: FaultModel, stats: FaultStats, queue,
                          blacklisted=len(pf.units))
             continue
         return dereplicate_results(res, r)
-    if tr is not None:
-        tr.incident("fault_exhausted", cause="redispatch_budget",
-                    redispatches=stats.redispatches)
-    raise FaultExhaustedError(
+    raise _exhaust(
+        "redispatch_budget",
         f"persistent faults survived {model.max_redispatches + 1} "
         "dispatch attempts")

@@ -33,6 +33,7 @@ throughput/energy numbers from real executions.
 from __future__ import annotations
 
 import functools
+import threading
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -125,6 +126,60 @@ def compile_shift(n_bits: int, k: int) -> Tuple[None, UProgram]:
     )
 
 
+class DispatchCancelled(RuntimeError):
+    """A dispatch was abandoned at a wave/round boundary because the
+    caller's ``cancel`` callback reported the work is no longer wanted
+    (deadline expired, tenant stream closed).  No results are produced;
+    modeled costs already charged for completed waves stay charged."""
+
+
+class DispatchGuard:
+    """Non-blocking re-entrancy guard for the dispatch entry points.
+
+    The fused dispatchers keep double-buffered pack state (in-flight
+    wave futures, plane caches, round-robin cursors) on the engine
+    object while a queue drains, so a second concurrent ``dispatch`` on
+    the same engine would silently interleave with — and corrupt — the
+    first.  The guard turns that into an immediate, clear
+    ``RuntimeError`` naming the busy entry point.  Callers that need
+    concurrency go through :mod:`repro.serving`, which serializes
+    admission into shared waves instead.
+    """
+
+    __slots__ = ("_name", "_lock", "_owner")
+
+    def __init__(self, name: str):
+        self._name = name
+        self._lock = threading.Lock()
+        self._owner: Optional[int] = None
+
+    def __enter__(self) -> "DispatchGuard":
+        if not self._lock.acquire(blocking=False):
+            raise RuntimeError(
+                f"{self._name}.dispatch re-entered while another dispatch "
+                f"is in flight on this engine (owner thread "
+                f"{self._owner}); engines keep double-buffered pack state "
+                f"and are not re-entrant — serialize callers, use one "
+                f"engine per thread, or submit through "
+                f"repro.serving.ServingFrontend")
+        self._owner = threading.get_ident()
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        self._owner = None
+        self._lock.release()
+        return False
+
+
+def check_cancel(cancel: Optional[object], where: str) -> None:
+    """Raise :class:`DispatchCancelled` if ``cancel`` (a zero-arg
+    callable, or None) reports the in-flight dispatch should stop.
+    Engines call this at wave / round / super-round boundaries — the
+    granularity at which abandoning work is safe and cheap."""
+    if cancel is not None and cancel():
+        raise DispatchCancelled(f"dispatch cancelled at {where}")
+
+
 @dataclass
 class CallStats:
     op: str
@@ -148,6 +203,8 @@ class SimdramDevice:
     _bank: Optional[object] = field(default=None, repr=False)
     _chip: Optional[object] = field(default=None, repr=False)
     _channel: Optional[object] = field(default=None, repr=False)
+    _guard: DispatchGuard = field(
+        default_factory=lambda: DispatchGuard("SimdramDevice"), repr=False)
 
     def bank(self):
         """The device's bank-level engine (one compute subarray per bank,
@@ -264,7 +321,7 @@ class SimdramDevice:
                             signed_out)
         return outs[0] if len(outs) == 1 else tuple(outs)
 
-    def dispatch(self, queue) -> List:
+    def dispatch(self, queue, cancel=None) -> List:
         """Drain a queue of bbops through the fused dataflow dispatcher.
 
         Args:
@@ -273,6 +330,10 @@ class SimdramDevice:
                 fine).  ``Ref`` operands must point at earlier entries;
                 heterogeneous ops fuse into one replay per wave and
                 ``Ref``/``VerticalOperand`` operands forward vertically.
+            cancel: optional zero-arg callable polled at wave / round /
+                instruction boundaries; returning True aborts the drain
+                with :class:`DispatchCancelled` (the serving front-end
+                uses this to stop work whose deadline already expired).
 
         Returns:
             One result per instruction in queue order — an int64 array
@@ -303,39 +364,40 @@ class SimdramDevice:
         tests/test_channel.py and tests/test_apps.py."""
         from .bank import plan_queue, validate_queue
         from .telemetry import active_tracer
-        queue = list(queue)     # tolerate iterator queues
-        if not queue:
-            raise ValueError(
-                "SimdramDevice.dispatch: empty queue — build at least one "
-                "BbopInstr before dispatching")
-        tr = active_tracer()
-        if tr is None:
-            validate_queue(queue, self.style)
-            return self._dispatch_validated(queue)
-        root = tr.begin("device.dispatch", cat="dispatch",
-                        backend=self.backend, instrs=len(queue))
-        try:
-            with tr.span("device.validate", cat="plan"):
+        with self._guard:
+            queue = list(queue)     # tolerate iterator queues
+            if not queue:
+                raise ValueError(
+                    "SimdramDevice.dispatch: empty queue — build at least "
+                    "one BbopInstr before dispatching")
+            tr = active_tracer()
+            if tr is None:
                 validate_queue(queue, self.style)
-            return self._dispatch_validated(queue)
-        finally:
-            # defensive LIFO pop in end() also closes anything an
-            # exception (e.g. FaultExhaustedError) left open beneath
-            tr.end(root)
+                return self._dispatch_validated(queue, cancel)
+            root = tr.begin("device.dispatch", cat="dispatch",
+                            backend=self.backend, instrs=len(queue))
+            try:
+                with tr.span("device.validate", cat="plan"):
+                    validate_queue(queue, self.style)
+                return self._dispatch_validated(queue, cancel)
+            finally:
+                # defensive LIFO pop in end() also closes anything an
+                # exception (e.g. FaultExhaustedError) left open beneath
+                tr.end(root)
 
-    def _dispatch_validated(self, queue) -> List:
+    def _dispatch_validated(self, queue, cancel=None) -> List:
         from .bank import plan_queue
         engines = {"channel": self.channel, "chip": self.chip,
                    "bank": self.bank}
         if self.backend not in engines:
-            return self._dispatch_sequential(queue)
-        results = engines[self.backend]().dispatch(queue)
+            return self._dispatch_sequential(queue, cancel)
+        results = engines[self.backend]().dispatch(queue, cancel=cancel)
         for ins, n in zip(queue, plan_queue(queue, self.style)[0]):
             _, uprog = compile_op(ins.op, ins.n_bits, self.style)
             self._account(ins.op, ins.n_bits, uprog, n)
         return results
 
-    def _dispatch_sequential(self, queue) -> List:
+    def _dispatch_sequential(self, queue, cancel=None) -> List:
         """Per-instruction queue drain for the engine-less backends.
 
         ``Ref`` operands materialize horizontally (the producer's
@@ -349,6 +411,7 @@ class SimdramDevice:
         from .bank import Ref, VerticalOperand, cached_table
         results: List = [None] * len(queue)
         for i, ins in enumerate(queue):
+            check_cancel(cancel, f"instruction {i}")
             spec, _, _ = cached_table(ins.op, ins.n_bits, self.style)
             operands = []
             for o, w in zip(ins.operands, spec.operand_bits):

@@ -45,6 +45,7 @@ so the three tiers cannot drift apart key-by-key.
 from __future__ import annotations
 
 import json
+import math
 import time
 from collections import deque
 from contextlib import contextmanager
@@ -349,13 +350,19 @@ class _Gauge:
 
 
 class _Histogram:
-    __slots__ = ("count", "total", "min", "max")
+    __slots__ = ("count", "total", "min", "max", "_samples")
+
+    # every observation up to this many is kept exactly; beyond it the
+    # reservoir decimates (keep-every-other), so percentile() stays
+    # O(bounded) memory while count/total/min/max remain exact
+    MAX_SAMPLES = 65536
 
     def __init__(self) -> None:
         self.count = 0
         self.total = 0.0
         self.min = float("inf")
         self.max = float("-inf")
+        self._samples: List[float] = []
 
     def observe(self, v: float) -> None:
         v = float(v)
@@ -363,10 +370,24 @@ class _Histogram:
         self.total += v
         self.min = min(self.min, v)
         self.max = max(self.max, v)
+        self._samples.append(v)
+        if len(self._samples) > self.MAX_SAMPLES:
+            self._samples = self._samples[::2]
 
     @property
     def mean(self) -> float:
         return self.total / self.count if self.count else 0.0
+
+    def percentile(self, q: float) -> float:
+        """Nearest-rank percentile of the retained samples (exact until
+        ``MAX_SAMPLES`` observations; decimated estimate beyond).
+        ``q`` in [0, 100]; 0.0 on an empty histogram."""
+        if not self._samples:
+            return 0.0
+        s = sorted(self._samples)
+        rank = max(0, min(len(s) - 1,
+                          int(math.ceil(q / 100.0 * len(s))) - 1))
+        return s[rank]
 
 
 class MetricsRegistry:

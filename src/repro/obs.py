@@ -56,6 +56,9 @@ __all__ = [
     "write_jsonl",
     "span",
     "charge",
+    "count",
+    "gauge",
+    "observe",
     "incident",
     "incidents",
     "reset",
@@ -78,6 +81,23 @@ def charge(cat: str, seconds: float) -> None:
     tr = active_tracer()
     if tr is not None:
         tr.charge(cat, seconds)
+
+
+def count(name: str, delta: int = 1) -> None:
+    """Bump a registry counter (always on — the registry is process-wide
+    and does not depend on the tracer being enabled)."""
+    REGISTRY.counter(name).inc(delta)
+
+
+def gauge(name: str, value: float) -> None:
+    """Set a registry gauge to ``value``."""
+    REGISTRY.gauge(name).set(value)
+
+
+def observe(name: str, value: float) -> None:
+    """Record ``value`` in a registry histogram (mean/min/max and
+    nearest-rank percentiles via ``REGISTRY.histogram(name)``)."""
+    REGISTRY.histogram(name).observe(value)
 
 
 def incident(reason: str, **attrs: Any):

@@ -53,6 +53,36 @@ def make_serve_step(cfg: ModelConfig, unroll: bool = False):
     return serve_step
 
 
+def bbop_host_oracle(op: str, n_bits: int, operands,
+                     signed_out: bool = False):
+    """Host-CPU oracle for ONE bbop — the exact semantics every engine
+    tier implements: operands truncate to their spec widths (low-bits
+    packing), outputs wrap to their out widths, ``signed_out``
+    reinterprets them as two's complement.
+
+    This is the graceful-degradation path: :class:`PumServeOffload` and
+    the serving front-end's circuit breaker both answer from it when
+    the DRAM ladder exhausts its fault budget, and the soak benchmark
+    pins every coalesced-wave result against it bit-exactly.
+
+    Returns an int64 array per output (tuple for multi-output ops) —
+    the same result forms as :meth:`repro.core.isa.SimdramDevice.bbop`.
+    """
+    from repro.core.isa import _np_signed
+    from repro.core.ops_library import get_op
+    spec = get_op(op, n_bits)
+    args = []
+    for o, w in zip(operands, spec.operand_bits):
+        v = np.asarray(o).astype(np.int64)
+        if w < 63:
+            v = v & ((1 << w) - 1)
+        args.append(v.astype(np.uint64))
+    outs = [o.astype(np.int64) for o in spec.oracle(*args)]
+    if signed_out:
+        outs = [_np_signed(o, w) for o, w in zip(outs, spec.out_bits)]
+    return outs[0] if len(outs) == 1 else tuple(outs)
+
+
 @dataclasses.dataclass(frozen=True)
 class PumStage:
     """One quantized elementwise serving stage: a bbop, optionally with a
@@ -155,7 +185,7 @@ class PumServeOffload:
                           instrs=len(queue))
         try:
             out = self.chip.dispatch(queue)
-        except FaultExhaustedError:
+        except FaultExhaustedError as e:
             # the chip ran out of fault-free subarrays mid-serve: fall
             # back to the numpy oracle for this step (same pipeline,
             # same values) and keep serving
@@ -166,7 +196,8 @@ class PumServeOffload:
                 faults.host_fallbacks += 1
             if sp is not None:
                 tr.incident("serve_host_fallback", rows=int(q.shape[0]),
-                            host_fallbacks=self.host_fallbacks)
+                            host_fallbacks=self.host_fallbacks,
+                            **e.context())
                 with tr.span("serve.host_fallback", cat="serve"):
                     ref = self.reference(logits)
                 tr.end(sp, fallback=True)

@@ -1,0 +1,356 @@
+"""Serving front-end: admission, coalescing, deadlines, degradation.
+
+Covers :mod:`repro.serving` end to end — cross-tenant coalesced waves
+bit-exact vs. solo dispatch (fault-free and under σ=0.15 injection),
+the zero-lost-zero-duplicated-ticket invariant under a deterministic
+soak, typed admission/deadline rejections, the per-tenant circuit
+breaker's trip → half-open → recovery cycle, cancellation mid-dispatch,
+the engine re-entrancy guard, and the structured
+``FaultExhaustedError`` context — plus the background-worker mode.
+"""
+
+import threading
+
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core.bank import Bank, BbopInstr, flatten_result
+from repro.core.channel import SimdramChannel
+from repro.core.fault import FaultExhaustedError, FaultModel
+from repro.core.isa import DispatchCancelled, SimdramDevice
+from repro.serving import (AdmissionRejected, BreakerState, CircuitBreaker,
+                           DeadlineExceeded, ServingFrontend)
+from repro.train.serve import bbop_host_oracle
+
+OPS2 = ["addition", "subtraction", "multiplication", "min", "max",
+        "greater"]
+
+
+def _channel(fault=None):
+    return SimdramChannel(n_chips=2, n_banks=2, n_subarrays=2, fault=fault)
+
+
+def _requests(rng, n, n_bits=8, tenants=3):
+    reqs = []
+    for i in range(n):
+        op = OPS2[int(rng.integers(0, len(OPS2)))]
+        lanes = int(rng.integers(1, 24))
+        a = rng.integers(0, 1 << n_bits, lanes)
+        b = rng.integers(0, 1 << n_bits, lanes)
+        reqs.append((f"tenant{i % tenants}", op, (a, b)))
+    return reqs
+
+
+def _exact(got, want):
+    got = got if isinstance(got, tuple) else (got,)
+    want = want if isinstance(want, tuple) else (want,)
+    assert len(got) == len(want)
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+
+# -- coalescing bit-exactness ---------------------------------------------
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(0, 10_000), st.integers(2, 12))
+def test_coalesced_waves_bit_exact_vs_solo(seed, n):
+    """Cross-tenant coalesced waves fan out per-tenant results identical
+    to dispatching each request alone on a fresh engine."""
+    rng = np.random.default_rng(seed)
+    reqs = _requests(rng, n)
+    fe = ServingFrontend(_channel(), window=32)
+    tickets = [fe.submit(t, op, ops_, 8) for t, op, ops_ in reqs]
+    fe.drain()
+    for ticket, (_, op, ops_) in zip(tickets, reqs):
+        solo = SimdramDevice(backend="bank").dispatch(
+            [BbopInstr(op, ops_, 8)])[0]
+        _exact(ticket.result(0), solo)
+        _exact(ticket.result(0), bbop_host_oracle(op, 8, ops_))
+
+
+@settings(max_examples=3, deadline=None)
+@given(st.integers(0, 10_000))
+def test_coalesced_waves_bit_exact_under_faults(seed):
+    """Same property at σ=0.15 with one spare lane: detection/vote/retry
+    heal every coalesced wave back to the exact fault-free answers."""
+    rng = np.random.default_rng(seed)
+    reqs = _requests(rng, 6)
+    fm = FaultModel(sigma=0.15, p_trials=20_000, spare_lanes=1,
+                    seed=seed)
+    fe = ServingFrontend(_channel(fault=fm), window=32)
+    tickets = [fe.submit(t, op, ops_, 8) for t, op, ops_ in reqs]
+    fe.drain()
+    for ticket, (_, op, ops_) in zip(tickets, reqs):
+        _exact(ticket.result(0), bbop_host_oracle(op, 8, ops_))
+
+
+def test_multi_output_and_signed_fan_out(rng):
+    """Tuple outputs and signed_out survive the slice fan-out."""
+    a = rng.integers(0, 256, 9)
+    b = rng.integers(1, 256, 9)
+    fe = ServingFrontend(_channel(), window=8)
+    td = fe.submit("t0", "division", (a, b), 8)
+    ts = fe.submit("t1", "subtraction", (a, b), 8, signed_out=True)
+    fe.drain()
+    _exact(td.result(0), bbop_host_oracle("division", 8, (a, b)))
+    _exact(ts.result(0),
+           bbop_host_oracle("subtraction", 8, (a, b), signed_out=True))
+
+
+# -- soak invariant --------------------------------------------------------
+
+def test_soak_zero_lost_zero_duplicated_tickets():
+    """Deterministic-seed soak under fault injection + deadline
+    pressure: every admitted ticket resolves exactly once."""
+    rng = np.random.default_rng(7)
+    fm = FaultModel(sigma=0.15, p_trials=20_000, spare_lanes=1, seed=7)
+    fe = ServingFrontend(_channel(fault=fm), max_queue_depth=24,
+                         window=8, seed=7)
+    tickets = []
+    for round_ in range(6):
+        for tenant, op, ops_ in _requests(rng, 8, tenants=4):
+            deadline = (fe.now_s + float(rng.uniform(1e-7, 5e-3))
+                        if rng.random() < 0.5 else None)
+            try:
+                tickets.append(
+                    (fe.submit(tenant, op, ops_, 8, deadline_s=deadline,
+                               priority=int(rng.integers(0, 3))),
+                     op, ops_))
+            except AdmissionRejected:
+                pass
+        fe.pump()
+    fe.drain()
+    st_ = fe.stats
+    assert st_.admitted == len(tickets)
+    ok = missed = 0
+    for ticket, op, ops_ in tickets:
+        assert ticket.done                       # zero lost
+        try:
+            _exact(ticket.result(0), bbop_host_oracle(op, 8, ops_))
+            ok += 1
+        except DeadlineExceeded:
+            missed += 1
+    assert ok + missed == len(tickets)
+    assert st_.completed == ok and st_.deadline_missed == missed
+    # double-resolution must raise (the duplicated-ticket guard)
+    with pytest.raises(RuntimeError, match="resolved twice"):
+        tickets[0][0]._settle(None, None)
+
+
+# -- admission / deadlines -------------------------------------------------
+
+def test_admission_rejected_carries_context(rng):
+    fe = ServingFrontend(_channel(), max_queue_depth=2)
+    a = rng.integers(0, 256, 4)
+    fe.submit("a", "addition", (a, a), 8)
+    fe.submit("a", "addition", (a, a), 8)
+    with pytest.raises(AdmissionRejected) as ei:
+        fe.submit("b", "addition", (a, a), 8)
+    assert ei.value.queue_depth == 2 and ei.value.capacity == 2
+    assert ei.value.tenant == "b"
+    assert fe.stats.rejected == 1
+    fe.drain()
+    assert fe.stats.completed == 2               # admitted ones survive
+
+
+def test_submit_validates_op_and_operands(rng):
+    fe = ServingFrontend(_channel())
+    a = rng.integers(0, 256, 4)
+    with pytest.raises(KeyError):
+        fe.submit("a", "no_such_op", (a, a), 8)
+    with pytest.raises(ValueError, match="operands"):
+        fe.submit("a", "addition", (a,), 8)
+
+
+def test_expired_deadline_rejected_not_silently_late(rng):
+    fe = ServingFrontend(_channel())
+    a = rng.integers(0, 256, 4)
+    t = fe.submit("late", "addition", (a, a), 8, deadline_s=-1.0)
+    fe.drain()
+    with pytest.raises(DeadlineExceeded) as ei:
+        t.result(0)
+    assert ei.value.tenant == "late" and ei.value.deadline_s == -1.0
+    assert fe.stats.deadline_missed == 1 and fe.stats.completed == 0
+
+
+# -- circuit breaker -------------------------------------------------------
+
+def _dead_unit_frontend():
+    """One dead subarray (seed 0, bank 0), zero redispatch budget: the
+    first window that touches it exhausts, the retry path repacks
+    around the blacklisted unit and succeeds."""
+    fm = FaultModel(p_flip=0.0, dead_unit_rate=0.3, spare_lanes=1,
+                    max_redispatches=0, seed=0)
+    ch = SimdramChannel(n_chips=1, n_banks=2, n_subarrays=2, fault=fm)
+    return ServingFrontend(ch, max_retries=0, breaker_threshold=1,
+                           breaker_cooldown_s=1e-5)
+
+
+def test_breaker_trips_to_host_oracle_and_recovers(rng):
+    fe = _dead_unit_frontend()
+    ops = ["addition", "subtraction", "min", "max"]   # 4 slots: one per
+    a = rng.integers(0, 256, 8)                       # subarray, so the
+    b = rng.integers(0, 256, 8)                       # dead one is hit
+    first = [fe.submit("alice", op, (a, b), 8) for op in ops]
+    fe.drain()
+    br = fe.breakers["alice"]
+    assert br.state == BreakerState.OPEN and br.trips == 1
+    assert all(t.via_host for t in first)             # graceful, not lost
+    assert fe.stats.breaker_trips == 1
+    # while OPEN (cooldown not yet passed) requests shed to the oracle
+    shed = fe.submit("alice", "addition", (a, b), 8)
+    fe.drain()
+    assert shed.via_host and br.state == BreakerState.OPEN
+    # cooldown passes -> HALF_OPEN probe -> DRAM answers -> CLOSED
+    fe._sleep(1e-4)
+    probe = [fe.submit("alice", op, (a, b), 8) for op in ops]
+    fe.drain()
+    assert br.state == BreakerState.CLOSED and br.recoveries == 1
+    assert not any(t.via_host for t in probe)
+    assert fe.stats.breaker_recoveries == 1
+    for t, op in zip(first + [shed] + probe, ops + ["addition"] + ops):
+        _exact(t.result(0), bbop_host_oracle(op, 8, (a, b)))
+
+
+def test_breaker_state_machine_unit():
+    br = CircuitBreaker(threshold=2, cooldown_s=1.0)
+    assert br.allow(0.0)
+    assert not br.record_failure(0.0)                 # 1st: still CLOSED
+    assert br.record_failure(0.0)                     # 2nd: trips
+    assert br.state == BreakerState.OPEN
+    assert not br.allow(0.5)                          # cooling down
+    assert br.allow(1.5)                              # -> HALF_OPEN
+    assert br.state == BreakerState.HALF_OPEN
+    assert br.record_failure(1.5)                     # probe fails: re-OPEN
+    assert br.state == BreakerState.OPEN and br.trips == 2
+    assert br.allow(3.0)
+    assert br.record_success(3.0)                     # probe ok: recovery
+    assert br.state == BreakerState.CLOSED and br.recoveries == 1
+
+
+def test_retry_with_backoff_recovers_without_tripping(rng):
+    """With retry budget, the frontend repacks around the blacklisted
+    dead unit on attempt 2 and never falls back to the host."""
+    fm = FaultModel(p_flip=0.0, dead_unit_rate=0.3, spare_lanes=1,
+                    max_redispatches=0, seed=0)
+    ch = SimdramChannel(n_chips=1, n_banks=2, n_subarrays=2, fault=fm)
+    fe = ServingFrontend(ch, max_retries=2, breaker_threshold=3, seed=5)
+    ops = ["addition", "subtraction", "min", "max"]
+    a = rng.integers(0, 256, 8)
+    b = rng.integers(0, 256, 8)
+    tickets = [fe.submit("bob", op, (a, b), 8) for op in ops]
+    fe.drain()
+    assert fe.stats.retries >= 1 and fe.stats.backoff_s > 0
+    assert fe.stats.breaker_trips == 0
+    assert not any(t.via_host for t in tickets)
+    for t, op in zip(tickets, ops):
+        _exact(t.result(0), bbop_host_oracle(op, 8, (a, b)))
+
+
+# -- structured FaultExhaustedError ---------------------------------------
+
+def test_fault_exhausted_error_carries_structured_context():
+    fm = FaultModel(p_flip=0.0, dead_unit_rate=0.3, spare_lanes=1,
+                    max_redispatches=0, seed=0)
+    ch = SimdramChannel(n_chips=1, n_banks=2, n_subarrays=2, fault=fm)
+    rng = np.random.default_rng(0)
+    a = rng.integers(0, 256, 8)
+    queue = [BbopInstr(op, (a, a), 8)
+             for op in ("addition", "subtraction", "min", "max")]
+    with pytest.raises(FaultExhaustedError) as ei:
+        ch.dispatch(queue)
+    err = ei.value
+    assert err.tier == "channel"
+    assert err.cause in ("redispatch_budget", "no_capacity")
+    assert err.redispatches >= 1
+    assert err.blacklist and all(len(u) == 3 for u in err.blacklist)
+    ctx = err.context()
+    assert ctx["tier"] == "channel"
+    assert ctx["blacklisted_units"] == len(err.blacklist)
+    assert ctx["capacity"] >= 0
+
+
+# -- cancellation / re-entrancy -------------------------------------------
+
+def test_dispatch_cancel_hook_aborts_between_rounds(rng):
+    a = rng.integers(0, 256, 8)
+    queue = [BbopInstr("addition", (a, a), 8)]
+    for engine in (_channel(), SimdramDevice(backend="bitplane")):
+        with pytest.raises(DispatchCancelled):
+            engine.dispatch(queue, cancel=lambda: True)
+    # cancel=None and cancel=False leave results identical
+    eng = _channel()
+    r1 = eng.dispatch(queue)
+    r2 = _channel().dispatch(queue, cancel=lambda: False)
+    _exact(flatten_result(r1[0]), flatten_result(r2[0]))
+
+
+def test_concurrent_dispatch_raises_clear_error(rng):
+    """A second dispatch on a busy engine raises RuntimeError instead of
+    corrupting the in-flight double-buffered state."""
+    a = rng.integers(0, 256, 8)
+    queue = [BbopInstr("addition", (a, a), 8)]
+    ch = _channel()
+    errors = []
+
+    def inner():
+        try:
+            ch.dispatch(queue)
+        except RuntimeError as e:
+            errors.append(str(e))
+
+    orig = ch._dispatch_core
+
+    def hooked(q, cancel=None):
+        t = threading.Thread(target=inner)
+        t.start()
+        t.join()
+        return orig(q, cancel=cancel)
+
+    ch._dispatch_core = hooked
+    try:
+        ch.dispatch(queue)
+    finally:
+        ch._dispatch_core = orig
+    assert len(errors) == 1
+    assert "re-entered" in errors[0] and "SimdramChannel" in errors[0]
+    # the engine is reusable afterwards
+    _exact(flatten_result(ch.dispatch(queue)[0]),
+           flatten_result(_channel().dispatch(queue)[0]))
+
+
+def test_bank_guard_also_rejects_reentry(rng):
+    a = rng.integers(0, 256, 8)
+    bank = Bank(n_subarrays=2)
+    with pytest.raises(RuntimeError, match="re-entered"):
+        with bank._guard:
+            bank.dispatch([BbopInstr("addition", (a, a), 8)])
+
+
+# -- background worker -----------------------------------------------------
+
+def test_background_worker_resolves_tickets(rng):
+    fe = ServingFrontend(_channel(), window=8)
+    fe.start()
+    try:
+        reqs = _requests(rng, 6)
+        tickets = [fe.submit(t, op, ops_, 8) for t, op, ops_ in reqs]
+        for ticket, (_, op, ops_) in zip(tickets, reqs):
+            _exact(ticket.result(timeout=30.0),
+                   bbop_host_oracle(op, 8, ops_))
+    finally:
+        fe.stop()
+    assert fe.stats.completed == 6
+
+
+def test_priority_orders_the_window(rng):
+    """With window=1, the high-priority late submission pumps first."""
+    fe = ServingFrontend(_channel(), window=1)
+    a = rng.integers(0, 256, 4)
+    lo = fe.submit("lo", "addition", (a, a), 8, priority=0)
+    hi = fe.submit("hi", "addition", (a, a), 8, priority=5)
+    fe.pump()
+    assert hi.done and not lo.done
+    fe.drain()
+    assert lo.done
