@@ -14,9 +14,19 @@ This benchmark drives that curve through the channel subsystem
     records the modeled channel latency (max-per-super-round over
     concurrent chips), the serialized per-chip baseline latency (sum
     over chips), the host wall/pack times, AND the transfer bound: the
-    host↔chip traffic priced at ``channel_bw_gbs`` (``transfer_s`` —
-    constant across chip counts, because the link is shared) plus the
-    crossover chip count where it starts to dominate;
+    host↔chip traffic priced per direction (``h2d_bw_gbs`` /
+    ``d2h_bw_gbs``), burst-rounded to ``link_burst_bytes``, split into
+    the serial charge (``transfer_s`` — constant across chip counts,
+    because the link is shared), the part the DMA double-buffer hides
+    behind replay (``transfer_overlapped_s``) and the exposed remainder
+    (``exposed_transfer_s``), plus the crossover chip count where the
+    EXPOSED time starts to dominate;
+  - **overlap gate**: a queue deep enough for several super-rounds runs
+    with the DMA overlap on and off on identical inputs; the run exits
+    non-zero unless the overlapped dispatch is bit-exact with the
+    serial one, charges the same per-direction link totals
+    bit-for-bit, exposes STRICTLY less transfer time than the serial
+    charge, and moves ``crossover_chips`` strictly outward;
   - **bit-exact gate**: channel dispatch == sequential per-chip
     ``SimdramChip.dispatch`` across ALL 16 ops in both MIG and AIG
     styles (exits non-zero on divergence — the CI acceptance gate), plus
@@ -24,8 +34,9 @@ This benchmark drives that curve through the channel subsystem
     rebuild no tables);
   - **telemetry gates** (``--trace``): a dispatch under the dual-clock
     tracer must reconcile bit-for-bit with the channel's Stats totals
-    (``channel.replay`` ↔ ``latency_s``, ``channel.transfer`` ↔
-    ``transfer_s``; transpose mirrors to 1e-12), produce a
+    (``channel.replay`` ↔ ``latency_s``, ``channel.transfer.h2d`` /
+    ``.d2h`` / ``.overlapped`` ↔ the per-direction/overlap stats
+    fields; transpose mirrors to 1e-12), produce a
     Perfetto-loadable Chrome trace, and — with the tracer disabled —
     be strictly free: identical results, identical modeled stats, zero
     new XLA traces (the same discipline as ``fault.py``'s
@@ -86,6 +97,119 @@ def _gate_queue(style: str, lanes: int, widths: Sequence[int] = (8,)):
     return queue
 
 
+def overlap_gates(n_chips: int, n_banks: int, n_subarrays: int,
+                  lanes: int = 64, repeats: int = 4) -> Dict:
+    """The DMA transfer/replay overlap CI gates.
+
+    Runs one queue deep enough for several super-rounds (``repeats`` ×
+    6 independent ops on a ``n_chips × n_banks × n_subarrays`` device —
+    the double-buffer needs a steady-state window between the fill and
+    drain edges) twice on identical inputs: once with the DMA overlap
+    engine (the ``DDR4`` default) and once with
+    ``transfer_overlap=False`` (the serial pre-DMA accounting).  Exits
+    non-zero unless:
+
+      1. the overlapped dispatch is **bit-exact** with the serial one
+         (the schedule is pure accounting — it must never touch data);
+      2. both paths charge the **same per-direction link totals**
+         bit-for-bit (``transfer_h2d_s`` / ``transfer_d2h_s`` /
+         ``transfer_bytes``) and the same replay latency;
+      3. the serial path hides nothing (``transfer_overlapped_s == 0``,
+         ``exposed_transfer_s == transfer_s``);
+      4. the overlapped path exposes **strictly less** than the serial
+         charge (``exposed_transfer_s < transfer_s``) — the headline
+         acceptance criterion;
+      5. the transfer-bound crossover moves **strictly outward**
+         (``crossover_chips`` grows: exposed time is what competes with
+         compute, so hiding transfer extends the scaling range).
+
+    Returns the report block recorded under ``"overlap"`` in
+    ``BENCH_channel.json`` (gated by scripts/check_perf.py).
+    """
+    from dataclasses import replace
+
+    from repro.core.ops_library import get_op
+
+    def mk_queue():
+        rng = np.random.default_rng(7)
+        queue = []
+        for op, n_bits in [("addition", 8), ("multiplication", 8),
+                           ("greater", 8), ("subtraction", 8),
+                           ("min", 8), ("max", 8)] * repeats:
+            spec = get_op(op, n_bits)
+            ops = tuple(rng.integers(0, 1 << w, lanes).astype(np.uint64)
+                        for w in spec.operand_bits)
+            queue.append(BbopInstr(op, ops, n_bits))
+        return queue
+
+    mk_channel = lambda cfg: SimdramChannel(  # noqa: E731
+        n_chips=n_chips, n_banks=n_banks, n_subarrays=n_subarrays, cfg=cfg)
+
+    on = mk_channel(DDR4)
+    r_on = on.dispatch(mk_queue())
+    son = on.stats
+    off = mk_channel(replace(DDR4, transfer_overlap=False))
+    r_off = off.dispatch(mk_queue())
+    soff = off.stats
+
+    if son.super_rounds < 2:
+        raise SystemExit(
+            f"OVERLAP GATE MISCONFIGURED: the scenario packed into "
+            f"{son.super_rounds} super-round(s); the double-buffer only "
+            f"bites with >= 2 (deepen the queue or shrink the device)")
+    _assert_bit_exact(r_on, r_off, "overlap on-vs-off")
+    if (son.transfer_h2d_s != soff.transfer_h2d_s
+            or son.transfer_d2h_s != soff.transfer_d2h_s
+            or son.transfer_bytes != soff.transfer_bytes
+            or son.latency_s != soff.latency_s):
+        raise SystemExit(
+            "OVERLAP CHANGED THE LINK BILL: the DMA schedule must "
+            "re-time the same per-direction charges, not re-price them "
+            f"(h2d {son.transfer_h2d_s} vs {soff.transfer_h2d_s}, "
+            f"d2h {son.transfer_d2h_s} vs {soff.transfer_d2h_s}, "
+            f"bytes {son.transfer_bytes} vs {soff.transfer_bytes}, "
+            f"replay {son.latency_s} vs {soff.latency_s})")
+    if soff.transfer_overlapped_s != 0.0 \
+            or soff.exposed_transfer_s != soff.transfer_s:
+        raise SystemExit(
+            "SERIAL PATH HID TRANSFER TIME: with transfer_overlap=False "
+            f"everything must be exposed (overlapped "
+            f"{soff.transfer_overlapped_s}, exposed "
+            f"{soff.exposed_transfer_s} vs serial {soff.transfer_s})")
+    if not son.exposed_transfer_s < soff.transfer_s:
+        raise SystemExit(
+            f"OVERLAP HID NOTHING: exposed {son.exposed_transfer_s} is "
+            f"not strictly below the serial charge {soff.transfer_s} "
+            f"across {son.super_rounds} super-rounds")
+    x_on, x_off = son.crossover_chips, soff.crossover_chips
+    if not (x_off < float("inf") and x_on > x_off):
+        raise SystemExit(
+            f"CROSSOVER DID NOT MOVE OUTWARD: overlap {x_on} vs serial "
+            f"{x_off} chips — hiding transfer must extend the "
+            f"compute-bound scaling range")
+
+    hidden_frac = son.transfer_overlapped_s / soff.transfer_s
+    block = {
+        "super_rounds": son.super_rounds,
+        "bit_exact": True,
+        "serial_transfer_s": soff.transfer_s,
+        "transfer_overlapped_s": son.transfer_overlapped_s,
+        "exposed_transfer_s": son.exposed_transfer_s,
+        "hidden_fraction": hidden_frac,
+        "total_latency_s": son.total_latency_s,
+        "serial_total_latency_s": soff.total_latency_s,
+        "crossover_chips": x_on,
+        "serial_crossover_chips": x_off,
+    }
+    print(f"channel/overlap,0.00,{hidden_frac:.2f}"
+          f"  # hid {son.transfer_overlapped_s * 1e6:.2f} of "
+          f"{soff.transfer_s * 1e6:.2f} us transfer behind "
+          f"{son.super_rounds} super-rounds; exposed "
+          f"{son.exposed_transfer_s * 1e6:.2f} us, crossover "
+          f"{x_off:.0f} -> {x_on:.0f} chips, bit-exact vs serial")
+    return block
+
+
 def telemetry_gates(n_chips: int, n_banks: int, n_subarrays: int,
                     lanes: int, n_instrs: int, widths: Sequence[int],
                     trace_json: str | None = None) -> Dict:
@@ -93,10 +217,11 @@ def telemetry_gates(n_chips: int, n_banks: int, n_subarrays: int,
 
     1. **reconciliation**: with tracing enabled, the per-category modeled
        charge sums must equal the :class:`ChannelStats` accumulators —
-       bit-for-bit for ``channel.replay``/``channel.transfer`` (the
-       charges replay the exact FP addition order), 1e-12-close for the
-       transpose mirror (chip/channel mirror bank transposes via
-       before/after diffs);
+       bit-for-bit for ``channel.replay`` and the three transfer
+       categories ``channel.transfer.h2d`` / ``.d2h`` / ``.overlapped``
+       (the charges replay the exact FP addition order), 1e-12-close
+       for the transpose mirror (chip/channel mirror bank transposes
+       via before/after diffs);
     2. **export**: the span tree serializes to a Chrome trace with both
        clock track groups (written to ``trace_json`` when given);
     3. **strictly free when disabled**: a dispatch without the tracer
@@ -115,7 +240,9 @@ def telemetry_gates(n_chips: int, n_banks: int, n_subarrays: int,
     channel.dispatch(mk())                        # warm the executables
     channel.reset_stats()
     r_off = channel.dispatch(mk())                # tracer disabled
-    lat_off, transfer_off = channel.stats.latency_s, channel.stats.transfer_s
+    off = channel.stats
+    lat_off, transfer_off = off.latency_s, off.transfer_s
+    overlapped_off = off.transfer_overlapped_s
     tr0 = trace_counts()
 
     channel.reset_stats()
@@ -127,11 +254,18 @@ def telemetry_gates(n_chips: int, n_banks: int, n_subarrays: int,
                 f"TELEMETRY RECONCILIATION FAILED: channel.replay charges "
                 f"{tr.modeled_total('channel.replay')} != stats.latency_s "
                 f"{st.latency_s}")
-        if tr.modeled_total("channel.transfer") != st.transfer_s:
+        for cat, field in (("channel.transfer.h2d", st.transfer_h2d_s),
+                           ("channel.transfer.d2h", st.transfer_d2h_s),
+                           ("channel.transfer.overlapped",
+                            st.transfer_overlapped_s)):
+            if tr.modeled_total(cat) != field:
+                raise SystemExit(
+                    f"TELEMETRY RECONCILIATION FAILED: {cat} charges "
+                    f"{tr.modeled_total(cat)} != stats {field}")
+        if st.transfer_h2d_s + st.transfer_d2h_s != st.transfer_s:
             raise SystemExit(
-                f"TELEMETRY RECONCILIATION FAILED: channel.transfer charges "
-                f"{tr.modeled_total('channel.transfer')} != stats.transfer_s "
-                f"{st.transfer_s}")
+                "TELEMETRY RECONCILIATION FAILED: per-direction transfer "
+                "charges do not sum to stats.transfer_s")
         paid = tr.modeled_total("transpose")
         saved = tr.modeled_total("transpose_saved")
         if not (np.isclose(paid, st.transpose_s, rtol=1e-12, atol=0.0)
@@ -157,10 +291,11 @@ def telemetry_gates(n_chips: int, n_banks: int, n_subarrays: int,
             f"{new_traces} new XLA traces (must be zero)")
     _assert_bit_exact(r_on, r_off, "telemetry on-vs-off")
     if (channel.stats.latency_s != lat_off
-            or channel.stats.transfer_s != transfer_off):
+            or channel.stats.transfer_s != transfer_off
+            or channel.stats.transfer_overlapped_s != overlapped_off):
         raise SystemExit(
             "TELEMETRY CHANGED MODELED STATS: traced dispatch accrued "
-            "different latency/transfer than the untraced one")
+            "different latency/transfer/overlap than the untraced one")
     if obs.active_tracer() is not None:
         raise SystemExit("TELEMETRY LEAKED: tracer still active after "
                          "the enabled() scope")
@@ -170,7 +305,7 @@ def telemetry_gates(n_chips: int, n_banks: int, n_subarrays: int,
         "new_traces": 0,
         "bit_exact": True,
         "replay_reconciled_bitexact": True,
-        "transfer_reconciled_bitexact": True,
+        "transfer_reconciled_bitexact": True,   # h2d + d2h + overlapped
         "transpose_reconciled": True,
         "n_spans": n_spans,
         "trace_events": len(trace["traceEvents"]),
@@ -197,12 +332,16 @@ def table_channel_scaling(
     trace_json: str | None = None,
 ) -> Dict:
     """Modeled curve + measured-vs-modeled calibration + transfer bound
-    + bit-exact gate + telemetry gates."""
+    + bit-exact gate + DMA overlap gates + telemetry gates."""
     report: Dict = {
         "config": {"chip_counts": list(chip_counts), "n_banks": n_banks,
                    "n_subarrays": n_subarrays, "lanes": lanes,
                    "n_instrs": n_instrs, "widths": list(widths),
-                   "channel_bw_gbs": DDR4.channel_bw_gbs},
+                   "channel_bw_gbs": DDR4.channel_bw_gbs,
+                   "h2d_bw_gbs": DDR4.h2d_bw_gbs,
+                   "d2h_bw_gbs": DDR4.d2h_bw_gbs,
+                   "link_burst_bytes": DDR4.link_burst_bytes,
+                   "transfer_overlap": DDR4.transfer_overlap},
         "modeled": {},
         "scaling": {},
         "gate": {},
@@ -269,6 +408,10 @@ def table_channel_scaling(
             "modeled_speedup": seq_latency_s / max(st.latency_s, 1e-30),
             "transfer_bytes": int(st.transfer_bytes),
             "transfer_s": st.transfer_s,
+            "transfer_h2d_s": st.transfer_h2d_s,
+            "transfer_d2h_s": st.transfer_d2h_s,
+            "transfer_overlapped_s": st.transfer_overlapped_s,
+            "exposed_transfer_s": st.exposed_transfer_s,
             "transfer_bound": st.transfer_bound,
             "crossover_chips": (st.crossover_chips
                                 if st.crossover_chips != float("inf")
@@ -303,7 +446,8 @@ def table_channel_scaling(
               f"  # modeled {st.latency_s * 1e6:.1f} vs sequential "
               f"{seq_latency_s * 1e6:.1f} us, transfer "
               f"{st.transfer_s * 1e6:.1f} us "
-              f"(crossover ~{st.crossover_chips:.1f} chips), measured "
+              f"({st.exposed_transfer_s * 1e6:.1f} exposed, crossover "
+              f"~{st.crossover_chips:.1f} chips), measured "
               f"x{row['measured_speedup']:.2f}, imbalance "
               f"{st.imbalance:.2f}, sharded={row['sharded']}")
 
@@ -325,6 +469,10 @@ def table_channel_scaling(
         print(f"channel/gate/{style},{gate_us / len(queue):.0f},1.00"
               f"  # {len(ALL_OPS)} ops x {list(gate_widths)}b bit-exact "
               f"vs sequential chips")
+
+    # -- DMA overlap gates: bit-exact, strictly-less-exposed, crossover ----
+    report["overlap"] = overlap_gates(
+        n_chips=gate_chips, n_banks=n_banks, n_subarrays=n_subarrays)
 
     # -- telemetry gates: reconcile, export, strictly-free-when-off --------
     report["telemetry"] = telemetry_gates(

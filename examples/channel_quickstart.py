@@ -8,9 +8,13 @@ Walks the PR 5 tier bottom-up:
      ``(channel, data)`` mesh when the host has enough devices; run with
      XLA_FLAGS=--xla_force_host_platform_device_count=8 to see it);
   2. ChannelStats: per-chip utilization, cross-chip imbalance, the
-     modeled-vs-measured latency pair, AND the transfer bound — the
-     host↔chip traffic priced at ``channel_bw_gbs``, shared by all
-     chips, with the crossover chip count where it starts to dominate;
+     modeled-vs-measured latency pair, AND the DMA transfer bound — the
+     host↔chip traffic priced per direction (``h2d_bw_gbs`` /
+     ``d2h_bw_gbs``, defaulting to ``channel_bw_gbs``), burst-rounded,
+     shared by all chips, and overlapped against replay so only the
+     exposed remainder reaches the end-to-end latency, with the
+     crossover chip count where it starts to dominate (see
+     examples/rank_overlap_quickstart.py for the overlap timeline);
   3. the compute-side 1/2/4-chip throughput curve from the timing
      model, against the bandwidth-bound transfer wall.
 
@@ -69,8 +73,12 @@ def main():
           f"speedup x{seq_s / st.latency_s:.2f})")
     print(f"transfer          {st.transfer_s * 1e6:8.2f} us  "
           f"({st.transfer_bytes} B over the shared "
-          f"{channel.cfg.channel_bw_gbs} GB/s channel — does NOT shrink "
+          f"{channel.cfg.channel_bw_gbs} GB/s link — does NOT shrink "
           f"with more chips)")
+    print(f"  overlapped      {st.transfer_overlapped_s * 1e6:8.2f} us  "
+          f"(hidden behind replay by the DMA double-buffer)")
+    print(f"  exposed         {st.exposed_transfer_s * 1e6:8.2f} us  "
+          f"(what reaches the end-to-end latency)")
     print(f"end-to-end        {st.total_latency_s * 1e6:8.1f} us  "
           f"(crossover ~{st.crossover_chips:.1f} chips: beyond that the "
           f"channel, not compute, is the bound)")

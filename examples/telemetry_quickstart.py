@@ -64,9 +64,18 @@ with obs.enabled() as tr:
     print(f"  channel.replay   {tr.modeled_total('channel.replay'):.6e} "
           f"== stats.latency_s  {st.latency_s:.6e}  "
           f"-> {tr.modeled_total('channel.replay') == st.latency_s}")
-    print(f"  channel.transfer {tr.modeled_total('channel.transfer'):.6e} "
-          f"== stats.transfer_s {st.transfer_s:.6e}  "
-          f"-> {tr.modeled_total('channel.transfer') == st.transfer_s}")
+    h2d = tr.modeled_total('channel.transfer.h2d')
+    d2h = tr.modeled_total('channel.transfer.d2h')
+    hid = tr.modeled_total('channel.transfer.overlapped')
+    print(f"  transfer.h2d     {h2d:.6e} "
+          f"== stats.transfer_h2d_s {st.transfer_h2d_s:.6e}  "
+          f"-> {h2d == st.transfer_h2d_s}")
+    print(f"  transfer.d2h     {d2h:.6e} "
+          f"== stats.transfer_d2h_s {st.transfer_d2h_s:.6e}  "
+          f"-> {d2h == st.transfer_d2h_s}")
+    print(f"  transfer.overlap {hid:.6e} "
+          f"== stats.transfer_overlapped_s {st.transfer_overlapped_s:.6e}  "
+          f"-> {hid == st.transfer_overlapped_s}")
 
     # -- 2. exporters -------------------------------------------------------
     trace = obs.write_chrome_trace("/tmp/simdram_trace.json")
@@ -90,6 +99,7 @@ with obs.enabled() as tr:
     snap = obs.REGISTRY.snapshot("channel.demo.")
     print(f"\n== registry ({len(snap)} gauges published) ==")
     for key in ("channel.demo.latency_s", "channel.demo.transfer_s",
+                "channel.demo.exposed_transfer_s",
                 "channel.demo.super_rounds",
                 "channel.demo.throughput_total_gops"):
         print(f"  {key} = {snap[key]:.6g}")

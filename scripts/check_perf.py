@@ -17,10 +17,16 @@ Rules (applied per leaf key, walking both JSON trees in lockstep):
     and never gates;
   - **modeled time (lower is better)**: keys ending ``_s`` — modeled
     latency / transfer / transpose / fault overhead — must satisfy
-    ``current <= baseline * (1 + tol)``;
+    ``current <= baseline * (1 + tol)``; the one exception is
+    ``transfer_overlapped_s`` (link time HIDDEN behind replay), which
+    gates higher-is-better;
   - **throughput (higher is better)**: keys ending ``gops``,
     ``speedup``, ``_saved`` or ``_rps`` (serving goodput) must satisfy
     ``current >= baseline * (1 - tol)``;
+  - **transfer-bound crossover (higher is better)**:
+    ``crossover_chips`` must not move inward beyond tol — ``null``
+    (the bench's encoding of "never transfer-bound", i.e. infinity)
+    counts as the best possible value, not as zero;
   - **replay-economy counters (lower is better)**: ``replays``,
     ``rounds``, ``super_rounds``, ``bank_waves``, ``batches``,
     ``fused_batches``, ``transfer_bytes``, ``new_traces_per_dispatch``,
@@ -68,6 +74,11 @@ LOWER_COUNTERS = {
     # tickets means any nonzero value fails the build
     "lost", "duplicated",
 }
+HIGHER_COUNTERS = {
+    # transfer-bound crossover: DMA overlap exists to push it outward,
+    # so a baseline crossover must never creep back inward
+    "crossover_chips",
+}
 TRUE_STAYS_TRUE = {"bit_exact", "verified", "zero_overhead"}
 FALSE_STAYS_FALSE = {"exhausted"}
 NONZERO_STAYS_NONZERO = {"injected", "detected", "corrected"}
@@ -91,8 +102,13 @@ def _classify(key: str):
         return "nonzero_stays_nonzero"
     if key in LOWER_COUNTERS:
         return "counter_le"
+    if key in HIGHER_COUNTERS:
+        return "crossover_ge"
     if key.endswith("gops") or key.endswith("speedup") \
-            or key.endswith("_saved") or key.endswith("_rps"):
+            or key.endswith("_saved") or key.endswith("_rps") \
+            or key == "transfer_overlapped_s":
+        # overlapped transfer is time HIDDEN behind replay — more is
+        # better, despite the ``_s`` suffix
         return "higher_better"
     if key.endswith("_s"):
         return "lower_better"
@@ -141,6 +157,10 @@ def _walk(base: Any, cur: Any, path: str, tol: float,
     elif rule == "counter_le":
         if _num(cur) > _num(base):
             bad = "counter exceeded baseline"
+    elif rule == "crossover_ge":
+        # None encodes infinity ("never transfer-bound"), not zero
+        if _num_inf(cur) < _num_inf(base) * (1.0 - tol) - 1e-15:
+            bad = f"transfer-bound crossover moved inward beyond {tol:.0%}"
     elif rule == "lower_better":
         if _num(cur) > _num(base) * (1.0 + tol) + 1e-15:
             bad = f"modeled time regressed beyond {tol:.0%}"
@@ -150,6 +170,17 @@ def _walk(base: Any, cur: Any, path: str, tol: float,
     if bad:
         regressions.append({"path": path, "kind": rule, "why": bad,
                             "baseline": base, "current": cur})
+
+
+def _num_inf(x: Any) -> float:
+    """Like :func:`_num`, but for keys where the bench writes ``null``
+    to mean infinity (``crossover_chips`` when the link never binds):
+    missing/None/NaN/inf all map to +inf, the best possible value."""
+    try:
+        v = float(x)
+        return v if math.isfinite(v) else math.inf
+    except (TypeError, ValueError):
+        return math.inf
 
 
 def _num(x: Any) -> float:

@@ -48,6 +48,10 @@ echo "== chip-scaling smoke bench (4 forced host devices) =="
 XLA_FLAGS=--xla_force_host_platform_device_count=4 \
     python -m benchmarks.chip_scaling --smoke --json BENCH_chip.json
 
+echo "== rank tests under real 3-D shard_map partitioning (8 forced devices) =="
+XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+    python -m pytest tests/test_rank.py tests/test_transfer_model.py -q
+
 echo "== channel tests under real 2-D shard_map partitioning (8 forced devices) =="
 XLA_FLAGS=--xla_force_host_platform_device_count=8 \
     python -m pytest tests/test_channel.py -q
@@ -91,6 +95,12 @@ echo "== serving soak gate (2 forced devices: multi-tenant front-end) =="
 # modeled latency to plain dispatch; BENCH_serving.json is a CI artifact
 XLA_FLAGS=--xla_force_host_platform_device_count=2 \
     python -m benchmarks.serving_soak --smoke --json BENCH_serving.json
+
+echo "== core coverage floor (src/repro/core, settrace or pytest-cov) =="
+# exits non-zero when line coverage of the core engine modules over the
+# bounded core test selection drops below the ratcheting floor (see
+# scripts/check_coverage.py); COVERAGE.json is a CI artifact
+python scripts/check_coverage.py --json COVERAGE.json
 
 echo "== evidence-gated perf verdict (fresh BENCH_* vs benchmarks/baselines) =="
 # machine-readable verdict in PERF_VERDICT.json; exits non-zero when a

@@ -28,12 +28,21 @@ widening only the dispatch:
     :data:`repro.core.control_unit.TABLE_CACHE` keyed by the whole
     super-round's composition;
   - :class:`ChannelStats` extends :class:`~repro.core.bank.BankStats`
-    with per-chip utilization, the host↔chip transfer model
-    (``transfer_bytes`` / ``transfer_s`` charged against
-    ``channel_bw_gbs`` — serialized across chips, because the link is
-    shared), and the transfer-bound crossover point
+    with per-chip utilization and the DMA-style host↔chip transfer
+    model: traffic is per-direction (``h2d_bw_gbs`` in,
+    ``d2h_bw_gbs`` out, both defaulting to the symmetric
+    ``channel_bw_gbs``) and burst-granular (``link_burst_bytes`` —
+    every slice rounds UP, never undercharging), and with
+    ``cfg.transfer_overlap`` the engine double-buffers: the inputs of
+    super-round *k+1* stream in and the outputs of super-round *k−1*
+    drain out WHILE super-round *k* replays, each slot charged
+    ``max(replay, h2d, d2h)`` with an explicit fill prologue
+    (``h2d[0]``) and drain epilogue (``d2h[n−1]``).  Only the *exposed*
+    remainder (:attr:`ChannelStats.exposed_transfer_s` =
+    ``transfer_s − transfer_overlapped_s``) reaches
+    ``total_latency_s`` and the transfer-bound crossover point
     (:func:`repro.core.costmodel.transfer_crossover_chips`): the chip
-    count beyond which the channel, not compute, bounds the dispatch.
+    count beyond which the link, not compute, bounds the dispatch.
 
 Bit-exactness: channel dispatch == sequential per-chip
 ``SimdramChip.dispatch`` == sequential per-bank == grouped baseline,
@@ -58,9 +67,11 @@ from .bank import (BankStats, BbopInstr, Ref, VerticalOperand, _Slot,
                    cached_table, plan_queue)
 from .chip import SimdramChip, partition_queue
 from .control_unit import CMD_WIDTH, TABLE_CACHE
-from .costmodel import channel_transfer_bytes, transfer_crossover_chips
+from .costmodel import (transfer_bytes_d2h, transfer_bytes_h2d,
+                        transfer_crossover_chips)
 from .telemetry import active_tracer
-from .timing import DDR4, DramConfig, channel_round_latency_s, host_transfer_s
+from .timing import (DDR4, DramConfig, burst_rounded_bytes,
+                     channel_round_latency_s, d2h_transfer_s, h2d_transfer_s)
 
 # chip-stats fields the channel mirrors by before/after diffing when it
 # delegates a super-round's packing/accounting/harvest to its chips
@@ -79,20 +90,27 @@ class ChannelStats(BankStats):
     each super-round charges its slowest chip's round — while
     ``wall_s``/``pack_wall_s`` are the measured host-side counterparts.
 
-    The channel adds the transfer model: ``transfer_bytes`` is every
-    horizontal operand/result that crossed the host↔DRAM link, priced at
-    ``cfg.channel_bw_gbs`` into ``transfer_s``
-    (:func:`repro.core.timing.host_transfer_s`).  The link is shared by
-    all chips, so ``transfer_s`` does not shrink as chips are added —
-    :attr:`total_latency_s` folds it in, and :attr:`crossover_chips`
-    reports the chip count beyond which it dominates.
+    The channel adds the DMA transfer model: ``transfer_bytes`` is every
+    horizontal operand/result that crossed the host↔DRAM link,
+    burst-rounded per per-super-round slice and priced per direction
+    into ``transfer_h2d_s`` / ``transfer_d2h_s``
+    (:func:`repro.core.timing.h2d_transfer_s` /
+    :func:`repro.core.timing.d2h_transfer_s`; :attr:`transfer_s` is
+    their sum).  The link is shared by all chips, so transfer time does
+    not shrink as chips are added — but with ``cfg.transfer_overlap``
+    the double-buffered engine hides slices behind replay
+    (``transfer_overlapped_s``), and only the *exposed* remainder
+    (:attr:`exposed_transfer_s`) reaches :attr:`total_latency_s`,
+    :attr:`transfer_bound`, and :attr:`crossover_chips`.
     """
 
     n_chips: int = 1
     n_banks: int = 1
     super_rounds: int = 0                        # stacked channel replays
-    transfer_bytes: int = 0                      # host↔chip traffic modeled
-    transfer_s: float = 0.0                      # … priced at channel_bw_gbs
+    transfer_bytes: int = 0                      # host↔chip traffic (rounded)
+    transfer_h2d_s: float = 0.0                  # host→DRAM, at h2d_bw_gbs
+    transfer_d2h_s: float = 0.0                  # DRAM→host, at d2h_bw_gbs
+    transfer_overlapped_s: float = 0.0           # hidden behind replay
     chip_busy_s: np.ndarray = field(default=None)  # type: ignore
 
     # channel-tier additions to the inherited BankStats spec (see
@@ -102,7 +120,11 @@ class ChannelStats(BankStats):
         ("n_banks", "int"),
         ("super_rounds", "int"),
         ("transfer_bytes", "int"),
+        ("transfer_h2d_s", "float"),
+        ("transfer_d2h_s", "float"),
         ("transfer_s", "float"),
+        ("transfer_overlapped_s", "float"),
+        ("exposed_transfer_s", "float"),
         ("transfer_bound", "bool"),
         ("crossover_chips", "float"),
         ("chip_busy_s", "float_list"),
@@ -137,30 +159,173 @@ class ChannelStats(BankStats):
         return float(self.chip_busy_s.max() / self.chip_busy_s.mean())
 
     @property
+    def transfer_s(self) -> float:
+        """Total modeled link occupancy, both directions — what a fully
+        serialized (no-overlap) engine would expose end to end."""
+        return self.transfer_h2d_s + self.transfer_d2h_s
+
+    @property
+    def exposed_transfer_s(self) -> float:
+        """Transfer time that actually extends the modeled wall-clock:
+        total link occupancy minus what the double-buffered DMA schedule
+        hid behind super-round replay.  Equals :attr:`transfer_s`
+        bit-for-bit when ``cfg.transfer_overlap`` is off."""
+        return self.transfer_s - self.transfer_overlapped_s
+
+    @property
     def total_latency_s(self) -> float:
-        """Replay latency + paid transpositions + host↔chip transfers —
-        the end-to-end modeled wall-clock this tier is bounded by.  The
-        transfer term is what keeps the multi-chip curve sub-linear for
-        workloads whose data must cross the shared channel.  Fault-layer
+        """Replay latency + paid transpositions + *exposed* host↔chip
+        transfers — the end-to-end modeled wall-clock this tier is
+        bounded by.  The exposed transfer term is what keeps the
+        multi-chip curve sub-linear for workloads whose data must cross
+        the shared link faster than replay can hide it.  Fault-layer
         overhead (redundant replays + vote reads) folds in too — zero
         when injection is disabled."""
-        return (self.latency_s + self.transpose_s + self.transfer_s
+        return (self.latency_s + self.transpose_s + self.exposed_transfer_s
                 + self.faults.overhead_s)
 
     @property
     def transfer_bound(self) -> bool:
-        """True when the shared channel costs more than compute — adding
-        chips past this point cannot help."""
-        return self.transfer_s >= self.latency_s > 0.0
+        """True when the shared link's *exposed* (post-overlap) time
+        costs more than compute — adding chips past this point cannot
+        help."""
+        return self.exposed_transfer_s >= self.latency_s > 0.0
 
     @property
     def crossover_chips(self) -> float:
         """The transfer-bound crossover point for THIS dispatch's mix:
-        serial compute over ``transfer_s``
-        (:func:`repro.core.costmodel.transfer_crossover_chips`)."""
+        serial compute over *exposed* transfer time
+        (:func:`repro.core.costmodel.transfer_crossover_chips`) — DMA
+        overlap shrinks the denominator, moving the crossover outward."""
         return transfer_crossover_chips(
-            float(self.chip_busy_s.sum()), self.transfer_s)
+            float(self.chip_busy_s.sum()), self.exposed_transfer_s)
 
+
+
+class _DmaSchedule:
+    """One dispatch's DMA transfer schedule over the shared host link.
+
+    ``plan`` splits the queue's host↔DRAM traffic into per-super-round,
+    per-direction slices (burst-rounded — never undercharged), and
+    ``after_round`` charges them as the replay loop completes each
+    super-round.  With ``cfg.transfer_overlap`` the modeled timeline is
+    the classic double-buffered DMA pipeline::
+
+        h2d[0] │ max(replay[0], h2d[1])           │ …   fill prologue
+               │ max(replay[r], h2d[r+1], d2h[r-1]) │ …   steady state
+               │ max(replay[n-1], d2h[n-2])        │ d2h[n-1]   drain
+
+    i.e. the inputs of super-round *k+1* stream in and the outputs of
+    super-round *k−1* drain out while *k* replays (the two directions
+    are full-duplex against each other).  Each slot charges the full
+    per-direction link occupancy into the Stats accumulators and the
+    hidden portion (``h2d + d2h − exposed``) into
+    ``transfer_overlapped_s`` — constructed so ``overlapped ≥ 0``,
+    ``exposed ≤ serial``, and the overlap-off path equals the serial
+    engine *exactly* in IEEE floats, not just approximately.
+
+    The same schedule serves the channel and rank tiers (``prefix``
+    names the telemetry categories: ``{prefix}.transfer.h2d`` /
+    ``.d2h`` / ``.overlapped``); charges land at the same sites and in
+    the same order as the Stats accumulators, so the telemetry charge
+    lists left-fold to the accumulators bit-for-bit.
+    """
+
+    def __init__(self, stats: ChannelStats, cfg: DramConfig, lane: str,
+                 prefix: str = "channel"):
+        self.stats = stats
+        self.cfg = cfg
+        self.lane = lane
+        self.prefix = prefix
+        self.h2d_bytes: List[int] = []
+        self.d2h_bytes: List[int] = []
+        self.h2d_s: List[float] = []
+        self.d2h_s: List[float] = []
+
+    def plan(self, queue, active, lanes, round_of, n_rounds: int,
+             style: str):
+        """Aggregate each instruction's horizontal traffic into the slice of
+        the super-round it replays in: horizontal operands enter before
+        that round (h2d), horizontal results drain after it (d2h);
+        ``Ref``-forwarded / ``VerticalOperand`` inputs and
+        ``keep_vertical`` outputs stay PuM-resident and move nothing."""
+        h2d_raw = [0] * n_rounds
+        d2h_raw = [0] * n_rounds
+        for i in active:
+            ins = queue[i]
+            spec, _, _ = cached_table(ins.op, ins.n_bits, style)
+            in_bits = [w for o, w in zip(ins.operands, spec.operand_bits)
+                       if not isinstance(o, (Ref, VerticalOperand))]
+            out_bits = [] if ins.keep_vertical else list(spec.out_bits)
+            r = round_of[i]
+            h2d_raw[r] += transfer_bytes_h2d(lanes[i], in_bits)
+            d2h_raw[r] += transfer_bytes_d2h(lanes[i], out_bits)
+        self.h2d_bytes = [burst_rounded_bytes(b, self.cfg) for b in h2d_raw]
+        self.d2h_bytes = [burst_rounded_bytes(b, self.cfg) for b in d2h_raw]
+        self.h2d_s = [h2d_transfer_s(b, self.cfg) for b in h2d_raw]
+        self.d2h_s = [d2h_transfer_s(b, self.cfg) for b in d2h_raw]
+
+    def _charge(self, direction: str, r: int, seconds: float, nbytes: int):
+        """Charge one non-empty slice into the Stats accumulator and the
+        matching telemetry category (zero-byte slices are skipped in
+        BOTH, keeping the left-fold reconciliation exact)."""
+        if nbytes <= 0:
+            return
+        self.stats.transfer_bytes += nbytes
+        if direction == "h2d":
+            self.stats.transfer_h2d_s += seconds
+        else:
+            self.stats.transfer_d2h_s += seconds
+        tr = active_tracer()
+        if tr is not None:
+            cat = f"{self.prefix}.transfer.{direction}"
+            ev = tr.event(cat, cat="transfer", lane=self.lane,
+                          round=r, bytes=nbytes)
+            tr.charge(cat, seconds, span=ev)
+
+    def after_round(self, r: int, round_s: float):
+        """Account the DMA slot that ran alongside replay of super-round
+        ``r``: stream in round ``r+1``'s inputs, drain round ``r−1``'s
+        outputs, plus the fill prologue (``r == 0``) and drain epilogue
+        (``r == n−1``) which are fully exposed."""
+        n = len(self.h2d_s)
+        if r == 0:
+            self._charge("h2d", 0, self.h2d_s[0], self.h2d_bytes[0])
+        t_in = self.h2d_s[r + 1] if r + 1 < n else 0.0
+        t_out = self.d2h_s[r - 1] if r >= 1 else 0.0
+        if r + 1 < n:
+            self._charge("h2d", r + 1, t_in, self.h2d_bytes[r + 1])
+        if r >= 1:
+            self._charge("d2h", r - 1, t_out, self.d2h_bytes[r - 1])
+        if self.cfg.transfer_overlap:
+            # exposed slack of this slot; by case analysis on the max,
+            # hidden >= 0 and exposed <= t_in + t_out hold EXACTLY in
+            # floating point (no isclose anywhere downstream)
+            exposed = max(round_s, t_in, t_out) - round_s
+            hidden = (t_in + t_out) - exposed
+            if hidden > 0.0:
+                self.stats.transfer_overlapped_s += hidden
+                tr = active_tracer()
+                if tr is not None:
+                    cat = f"{self.prefix}.transfer.overlapped"
+                    ev = tr.event(cat, cat="transfer", lane=self.lane,
+                                  round=r)
+                    tr.charge(cat, hidden, span=ev)
+        if r == n - 1:
+            self._charge("d2h", n - 1, self.d2h_s[n - 1],
+                         self.d2h_bytes[n - 1])
+
+
+def _round_of(waves) -> Dict[int, int]:
+    """Map each scheduled instruction to the super-round it replays in
+    (``waves`` is the ``[chip][bank][round]`` wave plan)."""
+    out: Dict[int, int] = {}
+    for per_chip in waves:
+        for per_bank in per_chip:
+            for r, wave in enumerate(per_bank):
+                for i in wave:
+                    out[i] = r
+    return out
 
 
 def sequential_channel_dispatch(
@@ -280,28 +445,28 @@ class SimdramChannel:
         return partition_queue(queue, active, lanes, self.n_chips,
                                self.cfg, self.style, allowed=allowed)
 
-    def _charge_transfers(self, queue, active, lanes):
-        """Model the host↔chip traffic this queue forces over the shared
-        channel: every horizontal operand in, every horizontal result
-        out (:func:`repro.core.costmodel.channel_transfer_bytes`), priced
-        at ``cfg.channel_bw_gbs`` — serialized regardless of chip count,
-        because chips share the one link."""
-        nbytes = 0
-        for i in active:
-            ins = queue[i]
-            spec, _, _ = cached_table(ins.op, ins.n_bits, self.style)
-            in_bits = [w for o, w in zip(ins.operands, spec.operand_bits)
-                       if not isinstance(o, (Ref, VerticalOperand))]
-            out_bits = [] if ins.keep_vertical else list(spec.out_bits)
-            nbytes += channel_transfer_bytes(lanes[i], in_bits, out_bits)
-        self.stats.transfer_bytes += nbytes
-        transfer_s = host_transfer_s(nbytes, self.cfg)
-        self.stats.transfer_s += transfer_s
-        tr = active_tracer()
-        if tr is not None:
-            ev = tr.event("channel.transfer", cat="transfer",
-                          lane=self._lane, bytes=nbytes)
-            tr.charge("channel.transfer", transfer_s, span=ev)
+    def _schedule(self, queue, active, lanes, stage):
+        """Build the ``[chip][bank][round]`` wave plan for one dispatch:
+        Ref-connected chains bin-pack onto chips, then each chip's PR 3
+        bank partitioner and PR 4 wave schedulers take over unchanged.
+        Shared by channel dispatch and the rank tier (which calls it per
+        member channel)."""
+        chip_of = self._partition(queue, active, lanes)
+        waves: List[List[List[List[int]]]] = []   # [chip][bank][round]
+        for c, chip in enumerate(self.chips):
+            idxs = [i for i in active if chip_of[i] == c]
+            for i in idxs:
+                chip.stats.bbops += 1
+            bank_of = chip._partition(queue, idxs, lanes) if idxs else {}
+            for i in idxs:
+                chip.banks[bank_of[i]].stats.bbops += 1
+            waves.append([
+                chip.banks[b]._build_waves(
+                    queue, [i for i in idxs if bank_of[i] == b], stage,
+                    lanes)
+                for b in range(self.n_banks)
+            ])
+        return chip_of, waves
 
     # -- dispatch ----------------------------------------------------------
     def dispatch(self, queue: Sequence[BbopInstr], cancel=None) -> List:
@@ -386,27 +551,17 @@ class SimdramChannel:
                 tr.end(root)
             return results
 
-        self._charge_transfers(queue, active, lanes)
         sp = (tr.begin("channel.schedule", cat="plan")
               if tr is not None else None)
-        chip_of = self._partition(queue, active, lanes)
-        waves: List[List[List[List[int]]]] = []   # [chip][bank][round]
-        for c, chip in enumerate(self.chips):
-            idxs = [i for i in active if chip_of[i] == c]
-            for i in idxs:
-                chip.stats.bbops += 1
-            bank_of = chip._partition(queue, idxs, lanes) if idxs else {}
-            for i in idxs:
-                chip.banks[bank_of[i]].stats.bbops += 1
-            waves.append([
-                chip.banks[b]._build_waves(
-                    queue, [i for i in idxs if bank_of[i] == b], stage,
-                    lanes)
-                for b in range(self.n_banks)
-            ])
+        chip_of, waves = self._schedule(queue, active, lanes, stage)
         if sp is not None:
             tr.end(sp, chips=len(set(chip_of.values())))
         n_super = max(len(w) for per_chip in waves for w in per_chip)
+        # DMA transfer schedule: inputs of super-round k+1 and outputs
+        # of k-1 move while k replays; charged per completed slot below
+        dma = _DmaSchedule(self.stats, self.cfg, self._lane, "channel")
+        dma.plan(queue, active, lanes, _round_of(waves), n_super,
+                 self.style)
         pending: Optional[Tuple[List, jnp.ndarray]] = None
         for r in range(n_super):
             check_cancel(cancel, "channel super-round boundary")
@@ -430,7 +585,8 @@ class SimdramChannel:
                     pending = None
             chips_entries, fut = self._pack_super_round(
                 queue, round_by_chip, lanes, planes_cache)
-            self._account_super_round(queue, chips_entries)
+            round_s = self._account_super_round(queue, chips_entries)
+            dma.after_round(r, round_s)
             if pending is not None:
                 # double buffering: super-round k harvests only after
                 # super-round k+1 was packed and submitted
@@ -467,11 +623,44 @@ class SimdramChannel:
         sp = (tr.begin("channel.pack_super_round", cat="pack",
                        chips=len(round_by_chip))
               if tr is not None else None)
+        n_rows, n_cmds, cols = self._super_round_dims(queue, round_by_chip,
+                                                      lanes)
+        states, chip_keys, chips_entries = self._pack_super_round_states(
+            queue, round_by_chip, lanes, planes_cache, n_rows, n_cmds, cols)
+        tables = TABLE_CACHE.get(
+            ("channel", self.n_chips, self.n_banks, self.n_subarrays,
+             n_cmds, tuple(chip_keys)),
+            lambda: self._build_super_round_tables(chip_keys, n_cmds))
+        if sp is not None:
+            tr.end(sp)
+        pack_s = time.perf_counter() - t_pack
+        self.stats.pack_wall_s += pack_s
+        for c, _ in round_by_chip:
+            self.chips[c].stats.pack_wall_s += pack_s / len(round_by_chip)
+        sp = (tr.begin("channel.replay", cat="replay",
+                       chips=len(round_by_chip))
+              if tr is not None else None)
+        fut = self._submit_super_round(states, tables, chips_entries)
+        if sp is not None:
+            tr.end(sp)
+        return chips_entries, fut
+
+    def _super_round_dims(self, queue, round_by_chip, lanes):
+        """Max (rows, cmds, cols) over the participating chips' rounds —
+        the shared slab dims one stacked replay pads every chip to.  The
+        rank tier maxes this once more across its channels."""
         dims = [self.chips[c]._round_dims(queue, rw, lanes)
                 for c, rw in round_by_chip]
-        n_rows = max(d[0] for d in dims)
-        n_cmds = max(d[1] for d in dims)
-        cols = max(d[2] for d in dims)
+        return (max(d[0] for d in dims), max(d[1] for d in dims),
+                max(d[2] for d in dims))
+
+    def _pack_super_round_states(self, queue, round_by_chip, lanes,
+                                 planes_cache, n_rows, n_cmds, cols):
+        """Pack one super-round's chip slabs at the given shared dims;
+        returns ``(states, chip_keys, chips_entries)``.  Transpose-side
+        savings each chip records while packing mirror into this
+        channel's stats (the rank tier re-mirrors them one level up)."""
+        tr = active_tracer()
         states = np.zeros(
             (self.n_chips, self.n_banks, self.n_subarrays, n_rows,
              cols // 32), np.uint32)
@@ -494,23 +683,7 @@ class SimdramChannel:
             states[c] = st
             chip_keys[c] = tuple(bank_keys)
             chips_entries.append((c, entries_by_bank))
-        tables = TABLE_CACHE.get(
-            ("channel", self.n_chips, self.n_banks, self.n_subarrays,
-             n_cmds, tuple(chip_keys)),
-            lambda: self._build_super_round_tables(chip_keys, n_cmds))
-        if sp is not None:
-            tr.end(sp)
-        pack_s = time.perf_counter() - t_pack
-        self.stats.pack_wall_s += pack_s
-        for c, _ in round_by_chip:
-            self.chips[c].stats.pack_wall_s += pack_s / len(round_by_chip)
-        sp = (tr.begin("channel.replay", cat="replay",
-                       chips=len(round_by_chip))
-              if tr is not None else None)
-        fut = self._submit_super_round(states, tables, chips_entries)
-        if sp is not None:
-            tr.end(sp)
-        return chips_entries, fut
+        return states, chip_keys, chips_entries
 
     def _submit_super_round(self, states, tables, chips_entries):
         """Submit one stacked super-round.  Fault-free: the async
@@ -562,7 +735,10 @@ class SimdramChannel:
         ``bank_waves`` the chip rule used (one cost source, so the
         calibration chain bank → chip → channel never
         desynchronizes: the per-chip delta mirrored into
-        ``chip_busy_s`` equals that chip's term of the max)."""
+        ``chip_busy_s`` equals that chip's term of the max).  Returns
+        the super-round's modeled latency so the caller can schedule
+        the DMA slot (or, at the rank tier, take the max across
+        channels) against it."""
         st = self.stats
         st.super_rounds += 1
         per_chip = self.n_banks * self.n_subarrays
@@ -590,6 +766,7 @@ class SimdramChannel:
         tr = active_tracer()
         if tr is not None:
             tr.charge("channel.replay", round_s)
+        return round_s
 
     def _harvest_super_round(self, queue, pending, planes_cache, needed,
                              results):

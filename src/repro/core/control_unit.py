@@ -294,6 +294,7 @@ def trace_counts() -> Dict[str, int]:
         "hetero": hetero_batched_interpreter()._cache_size(),
         "chip": chip_batched_interpreter()._cache_size(),
         "channel": channel_batched_interpreter()._cache_size(),
+        "rank": rank_batched_interpreter()._cache_size(),
     }
 
 
@@ -514,3 +515,28 @@ def channel_batched_interpreter():
     fits.  Bit-exact against the sharded executor: both run the same
     scan per (chip, bank, subarray)."""
     return jax.jit(channel_replay)
+
+
+def rank_replay(states: jnp.ndarray, tables: jnp.ndarray) -> jnp.ndarray:
+    """Un-jitted rank-level replay body: (n_channels, n_chips, n_banks,
+    n_subarrays, n_rows, n_words) states × matching (…, n_cmds, 13)
+    tables — one more vmapped axis over :func:`channel_replay`'s.
+    Channels on a rank share nothing compute-side (each owns its chips'
+    states and tables; only the host link is shared, and that is the
+    dispatcher's transfer model, not the replay's concern), so the
+    channel axis is embarrassingly parallel exactly like the chip and
+    bank axes below it — which is what lets :mod:`repro.distributed.pum`
+    ``shard_map`` the stack over a 3-D ``("rank", "channel", "data")``
+    mesh: channel slabs across ``rank``, chip slabs across ``channel``,
+    bank slabs across ``data``."""
+
+    return jax.vmap(channel_replay)(states, tables)
+
+
+@functools.lru_cache(maxsize=1)
+def rank_batched_interpreter():
+    """Jitted single-device :func:`rank_replay` — the vmap-over-channels
+    fallback the rank dispatcher uses when no multi-device 3-D mesh
+    fits.  Bit-exact against the sharded executor: both run the same
+    scan per (channel, chip, bank, subarray)."""
+    return jax.jit(rank_replay)

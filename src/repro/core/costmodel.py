@@ -96,13 +96,34 @@ def channel_transfer_bytes(
     return -(-bits // 8)
 
 
+def transfer_bytes_h2d(n_elems: int, horiz_in_bits: Sequence[int]) -> int:
+    """Host→DRAM bytes ONE instruction moves: every horizontal operand
+    crosses once on entry.  ``Ref``-forwarded and ``VerticalOperand``
+    inputs stay PuM-resident — pass only the widths that actually
+    cross.  The channel dispatcher burst-rounds and prices this with
+    :func:`repro.core.timing.h2d_transfer_s`."""
+    bits = n_elems * sum(horiz_in_bits)
+    return -(-bits // 8)
+
+
+def transfer_bytes_d2h(n_elems: int, horiz_out_bits: Sequence[int]) -> int:
+    """DRAM→host bytes ONE instruction moves: every horizontal result
+    crosses once on exit.  ``keep_vertical`` outputs stay PuM-resident
+    and move nothing.  Priced with
+    :func:`repro.core.timing.d2h_transfer_s`."""
+    bits = n_elems * sum(horiz_out_bits)
+    return -(-bits // 8)
+
+
 def transfer_crossover_chips(compute_serial_s: float,
                              transfer_s: float) -> float:
     """The transfer-bound crossover point: with compute spread over *n*
     chips taking ``compute_serial_s / n`` while the shared channel still
     takes ``transfer_s``, adding chips beyond this count no longer helps
-    — the channel, not compute, bounds the dispatch.  ``inf`` when the
-    queue moves nothing across the channel (fully forwarded chains)."""
+    — the channel, not compute, bounds the dispatch.  Under DMA overlap
+    the honest denominator is the *exposed* (post-overlap) transfer
+    time, which moves the crossover outward.  ``inf`` when the queue
+    moves nothing across the channel (fully forwarded chains)."""
     if transfer_s <= 0.0:
         return float("inf")
     return compute_serial_s / transfer_s

@@ -21,8 +21,16 @@ equivalent: a registry of operations, a per-(op, width) compilation cache
                        of n_banks × subarrays_per_bank slots, one stacked
                        super-round replay, shard_map-ed over a 2-D
                        ("channel", "data") mesh on multi-device hosts,
-                       host↔chip transfers priced at cfg.channel_bw_gbs
-                       (see repro.core.channel)
+                       host↔chip transfers priced per direction and
+                       double-buffered against replay (DMA overlap,
+                       see repro.core.channel)
+  backend="rank"       rank-level partitioned engine: cfg.n_channels
+                       channels of cfg.n_chips chips each, one stacked
+                       rank-round replay, shard_map-ed over a 3-D
+                       ("rank", "channel", "data") mesh on multi-device
+                       hosts, with the DMA transfer model accounted
+                       over the rank-shared host link
+                       (see repro.core.rank)
 
 All backends implement identical semantics; tests cross-check them.
 :class:`SimdramDevice` carries the DRAM config and accumulates per-call
@@ -203,6 +211,7 @@ class SimdramDevice:
     _bank: Optional[object] = field(default=None, repr=False)
     _chip: Optional[object] = field(default=None, repr=False)
     _channel: Optional[object] = field(default=None, repr=False)
+    _rank: Optional[object] = field(default=None, repr=False)
     _guard: DispatchGuard = field(
         default_factory=lambda: DispatchGuard("SimdramDevice"), repr=False)
 
@@ -241,6 +250,27 @@ class SimdramDevice:
                 n_subarrays=self.cfg.subarrays_per_bank,
                 cfg=self.cfg, style=self.style, fault=self.fault)
         return self._channel
+
+    def rank(self):
+        """The device's rank-level engine: ``cfg.n_channels`` channels
+        of ``cfg.n_chips`` chips each sharing one host link, channel
+        slabs sharded over the ``rank`` mesh axis, chip slabs over
+        ``channel``, and bank slabs over ``data`` on multi-device
+        hosts; created lazily.  Fault injection is not yet supported at
+        this tier."""
+        if self._rank is None:
+            if self.fault is not None and self.fault.enabled:
+                raise ValueError(
+                    "backend='rank' does not support fault injection yet "
+                    "— use backend='channel' or a faulty SimdramChannel")
+            from .rank import SimdramRank
+            self._rank = SimdramRank(
+                n_channels=self.cfg.n_channels,
+                n_chips=self.cfg.n_chips,
+                n_banks=self.cfg.n_banks,
+                n_subarrays=self.cfg.subarrays_per_bank,
+                cfg=self.cfg, style=self.style)
+        return self._rank
 
     def _account(self, name: str, n_bits: int, uprog: UProgram, elements: int):
         # a zero-element call executes no replay (the engines skip it),
@@ -303,6 +333,10 @@ class SimdramDevice:
             return self.channel().bbop(
                 name, *operands, n_bits=n_bits, signed_out=signed_out)
 
+        if self.backend == "rank":
+            return self.rank().bbop(
+                name, *operands, n_bits=n_bits, signed_out=signed_out)
+
         # bitplane / pallas: fused circuit execution (pallas swaps the
         # elementwise executor for the tiled kernel in repro.kernels.ops)
         if self.backend == "pallas":
@@ -341,8 +375,10 @@ class SimdramDevice:
             :class:`repro.core.bank.VerticalOperand` for
             ``keep_vertical`` instructions.
 
-        Routing: the full backend ladder — the channel-level engine for
-        ``backend="channel"`` (``cfg.n_chips`` chips over a 2-D mesh),
+        Routing: the full backend ladder — the rank-level engine for
+        ``backend="rank"`` (``cfg.n_channels`` channels over a 3-D
+        mesh), the channel-level engine for ``backend="channel"``
+        (``cfg.n_chips`` chips over a 2-D mesh),
         the chip-level engine for ``backend="chip"`` (``cfg.n_banks``
         banks over the ``data`` mesh axis), the fused bank engine for
         ``backend="bank"``, and a per-instruction sequential drain for
@@ -354,8 +390,8 @@ class SimdramDevice:
         :class:`CallStats` per instruction in :attr:`calls` (the
         device-level μProgram cost model, independent of wave fusion),
         and the engines additionally accumulate their own stats objects
-        (``self.channel().stats`` / ``self.chip().stats`` /
-        ``self.bank().stats``).
+        (``self.rank().stats`` / ``self.channel().stats`` /
+        ``self.chip().stats`` / ``self.bank().stats``).
 
         Bit-exactness guarantee: every backend implements identical
         bbop semantics — results match the grouped single-bank baseline
@@ -387,8 +423,8 @@ class SimdramDevice:
 
     def _dispatch_validated(self, queue, cancel=None) -> List:
         from .bank import plan_queue
-        engines = {"channel": self.channel, "chip": self.chip,
-                   "bank": self.bank}
+        engines = {"rank": self.rank, "channel": self.channel,
+                   "chip": self.chip, "bank": self.bank}
         if self.backend not in engines:
             return self._dispatch_sequential(queue, cancel)
         results = engines[self.backend]().dispatch(queue, cancel=cancel)

@@ -19,6 +19,7 @@ bandwidth-bound roofline numbers for the same bulk element-wise workloads
 from __future__ import annotations
 
 from dataclasses import dataclass
+from typing import Optional
 
 from .uprogram import UProgram
 
@@ -35,7 +36,15 @@ class DramConfig:
     n_banks: int = 16                      # compute banks active in parallel
     subarrays_per_bank: int = 1            # simultaneously-computing subarrays
     n_chips: int = 1                       # chips sharing one memory channel
+    n_channels: int = 1                    # channels sharing one host link (rank)
     channel_bw_gbs: float = 19.2           # DDR4-2400 x64
+    # DMA link model: per-direction bandwidth (None → channel_bw_gbs, i.e.
+    # a symmetric full-duplex link), burst granularity (DDR4 BL8 × 8 B),
+    # and whether transfers overlap super-round replay (double-buffering).
+    h2d_bw_gbs: Optional[float] = None
+    d2h_bw_gbs: Optional[float] = None
+    link_burst_bytes: int = 64
+    transfer_overlap: bool = True
 
     @property
     def t_ap_ns(self) -> float:
@@ -140,6 +149,35 @@ def host_transfer_s(n_bytes: float, cfg: DramConfig = DDR4) -> float:
     return n_bytes / (cfg.channel_bw_gbs * 1e9)
 
 
+def burst_rounded_bytes(n_bytes: int, cfg: DramConfig = DDR4) -> int:
+    """Bytes the link actually moves for an ``n_bytes`` payload: DMA
+    engines transfer whole bursts (``cfg.link_burst_bytes``; DDR4 BL8 on
+    a 64-bit bus moves 64 B per burst), so every slice rounds UP to the
+    next burst boundary.  Never undercharges — the rounded size is ≥ the
+    payload for every input, and 0 stays 0."""
+    if n_bytes <= 0:
+        return 0
+    burst = max(1, cfg.link_burst_bytes)
+    return -(-int(n_bytes) // burst) * burst
+
+
+def h2d_transfer_s(n_bytes: int, cfg: DramConfig = DDR4) -> float:
+    """Modeled seconds ``n_bytes`` of host→DRAM traffic (horizontal
+    operands entering PuM) occupy the inbound direction of the link,
+    burst-rounded.  Defaults to the symmetric ``channel_bw_gbs`` when no
+    per-direction bandwidth is configured."""
+    bw = cfg.h2d_bw_gbs if cfg.h2d_bw_gbs is not None else cfg.channel_bw_gbs
+    return burst_rounded_bytes(n_bytes, cfg) / (bw * 1e9)
+
+
+def d2h_transfer_s(n_bytes: int, cfg: DramConfig = DDR4) -> float:
+    """Modeled seconds ``n_bytes`` of DRAM→host traffic (horizontal
+    results draining out of PuM) occupy the outbound direction of the
+    link, burst-rounded."""
+    bw = cfg.d2h_bw_gbs if cfg.d2h_bw_gbs is not None else cfg.channel_bw_gbs
+    return burst_rounded_bytes(n_bytes, cfg) / (bw * 1e9)
+
+
 def channel_round_latency_s(chip_rounds, cfg: DramConfig = DDR4) -> float:
     """Wall-clock of ONE channel super-round: every chip replays its own
     chip round concurrently, so the super-round costs the *slowest
@@ -165,6 +203,33 @@ def channel_throughput_gops(
     only to operands/results that actually cross the channel."""
     return bank_throughput_gops(
         up, cfg, n_subarrays=n_chips * n_banks * n_subarrays)
+
+
+# --- rank-level parallel replay (repro.core.rank engine) ---------------------
+
+def rank_round_latency_s(channel_rounds, cfg: DramConfig = DDR4) -> float:
+    """Wall-clock of ONE rank round: every channel replays its own
+    super-round concurrently, so the rank round costs the *slowest
+    channel's* super-round (:func:`channel_round_latency_s`).
+    ``channel_rounds`` is a list of ``chip_rounds`` lists, one per
+    participating channel (each in the form
+    :func:`channel_round_latency_s` takes)."""
+    if not channel_rounds:
+        return 0.0
+    return max(channel_round_latency_s(cr, cfg) for cr in channel_rounds)
+
+
+def rank_throughput_gops(
+    up: UProgram, cfg: DramConfig = DDR4, n_channels: int = 1,
+    n_chips: int = 1, n_banks: int = 1, n_subarrays: int = 1,
+) -> float:
+    """Compute-side throughput of ``n_channels`` channels of ``n_chips``
+    chips each — one more multiplicative axis over
+    :func:`channel_throughput_gops`.  The host link is shared across the
+    whole rank, so the transfer bound is accounted separately (per
+    direction: :func:`h2d_transfer_s` / :func:`d2h_transfer_s`)."""
+    return bank_throughput_gops(
+        up, cfg, n_subarrays=n_channels * n_chips * n_banks * n_subarrays)
 
 
 # --- fault-tolerance overhead -------------------------------------------------

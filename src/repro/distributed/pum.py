@@ -49,7 +49,8 @@ from repro.core.control_unit import (channel_batched_interpreter,
                                      faulty_channel_batched_interpreter,
                                      faulty_channel_replay,
                                      faulty_chip_batched_interpreter,
-                                     faulty_chip_replay)
+                                     faulty_chip_replay,
+                                     rank_batched_interpreter, rank_replay)
 
 from .sharding import fit_spec
 
@@ -347,4 +348,98 @@ def _sharded_faulty_channel_executor(mesh: Mesh) -> Callable:
         faulty_channel_replay, mesh=mesh,
         in_specs=(chip_spec, chip_spec, unit2, unit2, unit2, unit1, P()),
         out_specs=(chip_spec, unit1),
+        check_rep=False))
+
+
+# ---------------------------------------------------------------------------
+# rank level: channels × chips × banks on a 3-D ("rank", "channel", "data") mesh
+# ---------------------------------------------------------------------------
+
+def rank_mesh(n_channels: int, n_chips: int, n_banks: int,
+              devices: Optional[Sequence] = None) -> Optional[Mesh]:
+    """3-D ``("rank", "channel", "data")`` mesh for a rank's channel ×
+    chip × bank grid.
+
+    Picks the largest device grid ``(ra, ch, da)`` with ``ra |
+    n_channels``, ``ch | n_chips`` and ``da | n_banks`` (equal channel
+    slabs per ``rank`` plane, equal chip slabs per ``channel`` row,
+    equal bank slabs per ``data`` column), preferring to spend devices
+    on the outer axes at equal total — channels are the outermost
+    scaling knob this tier adds.  ``None`` when only a single device
+    would participate: the caller should use the vmap fallback instead
+    of paying shard_map overhead for nothing."""
+    devs = list(devices if devices is not None else jax.devices())
+    best = (1, 1, 1)
+    for ra in range(1, len(devs) + 1):
+        if n_channels % ra:
+            continue
+        for ch in range(1, len(devs) // ra + 1):
+            if n_chips % ch:
+                continue
+            da = max((d for d in range(1, len(devs) // (ra * ch) + 1)
+                      if n_banks % d == 0), default=1)
+            cand = (ra, ch, da)
+            if ((ra * ch * da, ra, ch)
+                    > (best[0] * best[1] * best[2], best[0], best[1])):
+                best = cand
+    ra, ch, da = best
+    if ra * ch * da <= 1:
+        return None
+    return Mesh(np.array(devs[: ra * ch * da]).reshape(ra, ch, da),
+                ("rank", "channel", "data"))
+
+
+def make_rank_executor(
+    n_channels: int,
+    n_chips: int,
+    n_banks: int,
+    mesh: Optional[Mesh] = None,
+    use_shard_map: Optional[bool] = None,
+) -> ChannelExecutor:
+    """Build the rank's replay executor (the :class:`ChannelExecutor`
+    shape fits unchanged — ``run(states, tables)`` over one more leading
+    axis).
+
+    ``use_shard_map``: ``None`` auto-selects (shard_map whenever a
+    multi-device ``("rank", "channel", "data")`` mesh fits the channel ×
+    chip × bank grid), ``True`` requires it (raises if no mesh fits —
+    the CI forced-device path uses this to guarantee the 3-D partitioned
+    executor is actually exercised), ``False`` forces the single-device
+    vmap fallback (the bit-exactness reference).
+    """
+    if use_shard_map is False:
+        _note_executor("rank", None, False)
+        return ChannelExecutor(rank_batched_interpreter(), None, False)
+    if mesh is None:
+        mesh = rank_mesh(n_channels, n_chips, n_banks)
+    has_axes = mesh is not None and {"rank", "channel", "data"} <= set(
+        mesh.axis_names)
+    spec = (fit_spec(mesh, (n_channels, n_chips, n_banks),
+                     "rank", "channel", "data")
+            if has_axes else P(None, None, None))
+    fits = (has_axes and spec[0] == "rank" and spec[1] == "channel"
+            and spec[2] == "data" and mesh.devices.size > 1)
+    if not fits:
+        if use_shard_map:
+            raise ValueError(
+                f"shard_map requested but no multi-device "
+                f"(rank, channel, data) mesh fits n_channels={n_channels} "
+                f"× n_chips={n_chips} × n_banks={n_banks} "
+                f"(devices={jax.device_count()})")
+        _note_executor("rank", mesh, False)
+        return ChannelExecutor(rank_batched_interpreter(), mesh, False)
+    _note_executor("rank", mesh, True)
+    return ChannelExecutor(_sharded_rank_executor(mesh), mesh, True)
+
+
+@functools.lru_cache(maxsize=None)
+def _sharded_rank_executor(mesh: Mesh) -> Callable:
+    """One jitted 3-D shard_map executor per mesh — every rank on the
+    same mesh shares it, exactly like the channel-level executor cache."""
+    from jax.experimental.shard_map import shard_map
+
+    channel_spec = P("rank", "channel", "data", None, None, None)
+    return jax.jit(shard_map(
+        rank_replay, mesh=mesh,
+        in_specs=(channel_spec, channel_spec), out_specs=channel_spec,
         check_rep=False))

@@ -41,7 +41,7 @@ from repro.core.channel import (ChannelStats, SimdramChannel,
 from repro.core.chip import partition_queue
 from repro.core.costmodel import transfer_crossover_chips
 from repro.core.ops_library import ALL_OPS, get_op
-from repro.core.timing import DDR4, host_transfer_s
+from repro.core.timing import DDR4, burst_rounded_bytes, host_transfer_s
 
 LANES = 48
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
@@ -208,9 +208,10 @@ def test_transfer_monotone_in_bandwidth():
 
 
 def test_transfer_accounting_and_crossover():
-    """Horizontal operands/results are charged; Ref-forwarded and
-    keep_vertical traffic is free.  The crossover point is serial
-    compute over transfer time."""
+    """Horizontal operands/results are charged per direction and
+    burst-rounded (never undercharged); Ref-forwarded and keep_vertical
+    traffic is free.  The crossover point is serial compute over
+    *exposed* (post-overlap) transfer time."""
     rng = np.random.default_rng(7)
     x, y = (rng.integers(0, 256, LANES).astype(np.uint64) for _ in range(2))
     channel = SimdramChannel(n_chips=2, n_banks=2, n_subarrays=2)
@@ -219,13 +220,21 @@ def test_transfer_accounting_and_crossover():
         BbopInstr("relu", (Ref(0),), 16, keep_vertical=True),
     ])
     # mul: 2×8b in + 16b out cross; relu: Ref in (free) + vertical out
-    # (free) — so exactly (8+8+16)/8 bytes per lane cross the channel
-    assert channel.stats.transfer_bytes == LANES * (8 + 8 + 16) // 8
+    # (free) — so one h2d slice and one d2h slice of (8+8)/8 and 16/8
+    # bytes per lane, each rounded up to the link burst
+    raw = LANES * (8 + 8) // 8
+    assert channel.stats.transfer_bytes == (
+        burst_rounded_bytes(raw, channel.cfg)
+        + burst_rounded_bytes(LANES * 16 // 8, channel.cfg))
+    assert channel.stats.transfer_bytes >= LANES * (8 + 8 + 16) // 8
     st = channel.stats
+    assert st.transfer_s == st.transfer_h2d_s + st.transfer_d2h_s
+    assert 0.0 <= st.transfer_overlapped_s <= st.transfer_s
+    assert st.exposed_transfer_s == st.transfer_s - st.transfer_overlapped_s
     assert st.crossover_chips == pytest.approx(
         transfer_crossover_chips(float(st.chip_busy_s.sum()),
-                                 st.transfer_s))
-    assert st.total_latency_s >= st.latency_s + st.transfer_s
+                                 st.exposed_transfer_s))
+    assert st.total_latency_s >= st.latency_s + st.exposed_transfer_s
 
     # a fully PuM-resident queue moves nothing: crossover is infinite
     vo = VerticalOperand.from_values(x, 8)
@@ -248,6 +257,8 @@ def test_channel_stats_extend_bank_stats():
     for key in ("bbops", "batches", "fused_batches", "latency_s",
                 "energy_nj", "pack_wall_s", "wall_s", "n_chips", "n_banks",
                 "super_rounds", "transfer_bytes", "transfer_s",
+                "transfer_h2d_s", "transfer_d2h_s", "transfer_overlapped_s",
+                "exposed_transfer_s",
                 "transfer_bound", "crossover_chips", "chip_busy_s",
                 "chip_programs", "utilization", "imbalance"):
         assert key in d, key

@@ -1,0 +1,386 @@
+"""Rank-level partitioned execution vs the sequential per-channel baseline.
+
+Proves the rank-tier half of the DMA tentpole:
+  - ``SimdramRank.dispatch`` (stacked multi-channel rank rounds) is
+    bit-exact against sequential per-channel
+    ``SimdramChannel.dispatch`` (same partition, one channel at a time)
+    across all 16 ops in both styles, property-tested over random
+    queues/geometries;
+  - the channel partitioner keeps Ref chains channel-local;
+  - rank latency models concurrent channels (max per rank round) while
+    the sequential baseline pays the per-channel sum; the DMA transfer
+    model accounts once at the rank tier with the same
+    exposed/overlapped split the channel uses;
+  - ``RankStats`` extends the ChannelStats surface with per-channel
+    busy time / program counts / imbalance over the flattened
+    channel-major chip list;
+  - the 3-D ``("rank", "channel", "data")`` shard_map executor (channel
+    slabs over ``rank``, chip slabs over ``channel``, bank slabs over
+    ``data``) is bit-exact against the single-device vmap fallback —
+    in-process when the host exposes ≥2 devices and via a forced-device
+    subprocess otherwise (slow marker);
+  - repeated same-shape dispatches add zero XLA retraces on the rank
+    interpreter;
+  - edge cases: empty/all-zero-lane queues, rank-wide ``bbop``,
+    constructor validation, and ``backend="rank"`` routing on
+    :class:`~repro.core.isa.SimdramDevice` (including the
+    fault-injection rejection).
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro.core.bank import BbopInstr, Ref, VerticalOperand, flatten_result, plan_queue
+from repro.core.chip import partition_queue
+from repro.core.control_unit import trace_counts
+from repro.core.ops_library import ALL_OPS, get_op
+from repro.core.rank import RankStats, SimdramRank, sequential_rank_dispatch
+
+LANES = 48
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _rand_instr(rng, op, n_bits, lanes=LANES, **kw):
+    spec = get_op(op, n_bits)
+    ops = tuple(rng.integers(0, 1 << w, lanes).astype(np.uint64)
+                for w in spec.operand_bits)
+    return BbopInstr(op, ops, n_bits, **kw)
+
+
+def _assert_same(got, ref):
+    for i, (a, b) in enumerate(zip(got, ref)):
+        fa, fb = flatten_result(a), flatten_result(b)
+        assert len(fa) == len(fb)
+        for x, y in zip(fa, fb):
+            np.testing.assert_array_equal(x, y, err_msg=f"instr {i}")
+
+
+def _both(queue, n_channels=2, n_chips=2, n_banks=2, n_subarrays=2,
+          style="mig", **kw):
+    """Rank dispatch vs sequential per-channel dispatch, bit-exact."""
+    rank = SimdramRank(n_channels=n_channels, n_chips=n_chips,
+                       n_banks=n_banks, n_subarrays=n_subarrays,
+                       style=style, use_shard_map=False, **kw)
+    rr = rank.dispatch(queue)
+    rs, channels = sequential_rank_dispatch(
+        queue, n_channels=n_channels, n_chips=n_chips, n_banks=n_banks,
+        n_subarrays=n_subarrays, style=style)
+    _assert_same(rr, rs)
+    return rank, channels, rr
+
+
+# --- bit-exactness --------------------------------------------------------
+
+@pytest.mark.parametrize("style", ["mig", "aig"])
+def test_rank_matches_sequential_all_ops(style):
+    """All 16 ops in one mixed queue: rank == sequential per-channel,
+    both styles (the PR acceptance criterion's test-side gate)."""
+    rng = np.random.default_rng({"mig": 0, "aig": 1}[style])
+    queue = [_rand_instr(rng, op, 8, lanes=32) for op in ALL_OPS]
+    rank, channels, _ = _both(queue, style=style)
+    assert rank.stats.bbops == len(queue)
+    assert rank.stats.elements == 32 * len(queue)
+    assert rank.stats.channel_programs.sum() == len(queue)
+    assert sum(ch.stats.bbops for ch in rank.channels) == len(queue)
+
+
+@given(st.integers(2, 6), st.integers(1, 3), st.integers(1, 2),
+       st.integers(0, 10_000))
+@settings(max_examples=6, deadline=None)
+def test_rank_property_random_queues(n_bits, n_channels, n_chips, seed):
+    """Random op mixes / widths / lane counts / geometries: rank ==
+    sequential per-channel."""
+    rng = np.random.default_rng(seed)
+    ops = ("addition", "subtraction", "min", "max", "greater", "relu")
+    queue = []
+    for _ in range(int(rng.integers(1, 9))):
+        op = ops[int(rng.integers(0, len(ops)))]
+        lanes = int(rng.integers(1, 70))
+        signed = bool(rng.integers(0, 2)) and op != "greater"
+        queue.append(_rand_instr(rng, op, n_bits, lanes=lanes,
+                                 signed_out=signed))
+    _both(queue, n_channels=n_channels, n_chips=n_chips)
+
+
+def test_rank_chain_with_vertical_operands():
+    """Ref chains + user VerticalOperand + keep_vertical through the
+    rank: forwarded hops stay channel-local and results match the
+    sequential baseline."""
+    rng = np.random.default_rng(2)
+    x, y = (rng.integers(0, 256, LANES).astype(np.uint64) for _ in range(2))
+    z = rng.integers(0, 1 << 16, LANES).astype(np.uint64)
+    vo = VerticalOperand.from_values(x, 8)
+    queue = [
+        BbopInstr("multiplication", (x, y), 8),
+        BbopInstr("addition", (Ref(0), z), 16),
+        BbopInstr("relu", (Ref(1),), 16, keep_vertical=True),
+        BbopInstr("addition", (vo, y), 8),
+    ]
+    rank, _, rr = _both(queue)
+    want = (x * y + z) & 0xFFFF
+    np.testing.assert_array_equal(
+        rr[2].to_values() & 0xFFFF, np.where(want >= 1 << 15, 0, want))
+    # 2 Ref hops + 1 VerticalOperand entry + 1 keep_vertical exit,
+    # mirrored up from the channels into RankStats
+    assert rank.stats.transpositions_skipped == 4
+    assert rank.stats.transpose_s_saved > 0
+
+
+def test_ref_chains_stay_channel_local():
+    """The channel partitioner never splits a Ref-connected component
+    across channels — forwarded planes cannot cross the rank."""
+    rng = np.random.default_rng(3)
+    queue = []
+    for _ in range(5):
+        base = len(queue)
+        queue.append(_rand_instr(rng, "multiplication", 8, lanes=20))
+        queue.append(BbopInstr("relu", (Ref(base),), 8))
+        queue.append(BbopInstr("abs", (Ref(base + 1),), 8))
+    lanes, _, _ = plan_queue(queue)
+    channel_of = partition_queue(queue, list(range(len(queue))), lanes, 2)
+    for base in range(0, len(queue), 3):
+        members = {channel_of[base + j] for j in range(3)}
+        assert len(members) == 1, "chain split across channels"
+
+
+# --- cost model -----------------------------------------------------------
+
+def test_rank_latency_models_concurrent_channels():
+    """Identical work spread over L channels costs one channel's latency
+    per rank round — channels replay concurrently — while the sequential
+    baseline pays the per-channel sum."""
+    rng = np.random.default_rng(5)
+    queue = [_rand_instr(rng, "addition", 8) for _ in range(8)]
+    rank, channels, _ = _both(queue, n_channels=2, n_chips=2)
+    seq_s = sum(ch.stats.latency_s for ch in channels)
+    assert rank.stats.super_rounds >= 1
+    assert rank.stats.latency_s < seq_s
+    assert rank.stats.latency_s == pytest.approx(seq_s / 2)
+    # member channels account their own busy time; the rank charges max
+    np.testing.assert_allclose(
+        rank.stats.channel_busy_s,
+        [ch.stats.latency_s for ch in rank.channels])
+
+
+def test_rank_transfer_accounting():
+    """The DMA model accounts ONCE at the rank tier (the host link is
+    shared by the whole rank): per-direction charges, overlap split, and
+    the exposed remainder in total_latency_s."""
+    rng = np.random.default_rng(6)
+    queue = [_rand_instr(rng, "addition", 8, lanes=64) for _ in range(8)]
+    rank, _, _ = _both(queue)
+    st_ = rank.stats
+    assert st_.transfer_bytes > 0
+    assert st_.transfer_s == st_.transfer_h2d_s + st_.transfer_d2h_s
+    assert 0.0 <= st_.transfer_overlapped_s <= st_.transfer_s
+    assert st_.exposed_transfer_s == st_.transfer_s - st_.transfer_overlapped_s
+    assert st_.total_latency_s >= st_.latency_s + st_.exposed_transfer_s
+    # member channels do NOT double-charge the link
+    assert all(ch.stats.transfer_bytes == 0 for ch in rank.channels)
+
+
+# --- stats surface --------------------------------------------------------
+
+def test_rank_stats_extend_channel_stats():
+    rng = np.random.default_rng(8)
+    rank, _, _ = _both([_rand_instr(rng, "addition", 8),
+                        _rand_instr(rng, "greater", 8)])
+    assert isinstance(rank.stats, RankStats)
+    d = rank.stats.as_dict()
+    # the ChannelStats surface plus the rank extensions
+    for key in ("bbops", "batches", "latency_s", "energy_nj", "wall_s",
+                "super_rounds", "transfer_bytes", "transfer_s",
+                "transfer_h2d_s", "transfer_d2h_s", "transfer_overlapped_s",
+                "exposed_transfer_s", "transfer_bound", "crossover_chips",
+                "chip_busy_s", "chip_programs", "utilization", "imbalance",
+                "n_channels", "channel_busy_s", "channel_programs",
+                "channel_imbalance"):
+        assert key in d, key
+    assert d["n_channels"] == 2
+    assert d["n_chips"] == 4          # rank-wide total, channel-major
+    assert len(d["channel_busy_s"]) == 2
+    assert len(d["chip_busy_s"]) == 4
+    assert d["latency_s"] > 0 and d["wall_s"] > 0
+    assert rank.stats.channel_imbalance >= 1.0
+    rank.reset_stats()
+    assert rank.stats.latency_s == 0.0
+    assert not rank.stats.channel_busy_s.any()
+
+
+# --- edge cases -----------------------------------------------------------
+
+def test_empty_and_zero_lane_rank_queues():
+    rank = SimdramRank(use_shard_map=False)
+    assert rank.dispatch([]) == []
+    assert rank.stats.super_rounds == 0 and rank.stats.bbops == 0
+
+    e = np.zeros(0, np.uint64)
+    queue = [BbopInstr("addition", (e, e), 8),
+             BbopInstr("relu", (Ref(0),), 8)]
+    out = rank.dispatch(queue)
+    assert np.asarray(out[0]).shape == (0,)
+    assert np.asarray(out[1]).shape == (0,)
+    assert rank.stats.super_rounds == 0
+    assert rank.stats.transfer_bytes == 0
+    assert rank.stats.bbops == len(queue)
+
+    rng = np.random.default_rng(9)
+    mixed = [_rand_instr(rng, "addition", 8),
+             BbopInstr("addition", (e, e), 8),
+             _rand_instr(rng, "greater", 8)]
+    rank2, _, rm = _both(mixed)
+    assert np.asarray(rm[1]).shape == (0,)
+    assert rank2.stats.channel_programs.sum() == 2
+
+
+def test_rank_bbop_spans_channels():
+    """One wide bbop splits lanes across every (channel, chip, bank,
+    subarray) slot and reassembles in order."""
+    rng = np.random.default_rng(10)
+    x = rng.integers(0, 256, 1600)
+    y = rng.integers(0, 256, 1600)
+    rank = SimdramRank(use_shard_map=False)
+    got = rank.bbop("addition", x, y, n_bits=8)
+    want = get_op("addition", 8).oracle(
+        x.astype(np.uint64), y.astype(np.uint64))[0]
+    np.testing.assert_array_equal(
+        got.astype(np.int64) & 0xFF, want.astype(np.int64) & 0xFF)
+    assert rank.stats.super_rounds == 1
+    assert rank.stats.channel_programs.sum() == 16
+
+
+def test_rank_validation_and_isa_routing():
+    with pytest.raises(ValueError):
+        SimdramRank(n_channels=0)
+
+    from dataclasses import replace
+
+    from repro.core.isa import SimdramDevice
+    from repro.core.timing import DDR4
+
+    cfg = replace(DDR4, n_channels=2, n_chips=2, n_banks=2,
+                  subarrays_per_bank=2)
+    dev = SimdramDevice(cfg=cfg, backend="rank")
+    x = np.arange(100, dtype=np.uint64) % 251
+    y = (x * 7) % 251
+    got = dev.bbop("addition", x, y, n_bits=8)
+    want = get_op("addition", 8).oracle(x, y)[0]
+    np.testing.assert_array_equal(got.astype(np.int64) & 0xFF,
+                                  want.astype(np.int64) & 0xFF)
+    assert dev.rank().stats.bbops > 0
+    assert dev.calls and dev.calls[-1].op == "addition"
+
+    from repro.core.fault import FaultModel
+    bad = SimdramDevice(cfg=cfg, backend="rank",
+                        fault=FaultModel(enabled=True, seed=0))
+    with pytest.raises(ValueError, match="fault injection"):
+        bad.bbop("addition", x, y, n_bits=8)
+
+
+# --- retraces -------------------------------------------------------------
+
+def test_rank_repeat_dispatch_zero_retraces():
+    """A repeated same-shape dispatch reuses the jitted rank interpreter
+    and the cached stacked tables — zero new XLA traces."""
+    rng = np.random.default_rng(12)
+    queue = [_rand_instr(rng, "addition", 8) for _ in range(4)]
+    rank = SimdramRank(use_shard_map=False)
+    rank.dispatch(queue)
+    t0 = dict(trace_counts())
+    assert t0["rank"] >= 1
+    rank.dispatch([_rand_instr(rng, "addition", 8) for _ in range(4)])
+    assert dict(trace_counts()) == t0
+
+
+# --- sharded executor -----------------------------------------------------
+
+def test_rank_vmap_fallback_on_single_device():
+    """With one device (the tier-1 default), the executor falls back to
+    the vmapped path; requiring shard_map raises."""
+    if jax.device_count() > 1:
+        pytest.skip("host exposes multiple devices")
+    rank = SimdramRank()
+    assert not rank.executor.sharded
+    with pytest.raises(ValueError, match="shard_map requested"):
+        SimdramRank(use_shard_map=True)
+
+
+def test_rank_sharded_executor_multi_device():
+    """Real 3-D shard_map partitioning (channel slabs over ``rank``,
+    chip slabs over ``channel``, bank slabs over ``data``) is bit-exact
+    vs the vmap fallback — runs when the host exposes ≥2 devices."""
+    if jax.device_count() < 2:
+        pytest.skip("needs >= 2 devices "
+                    "(XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+    rng = np.random.default_rng(11)
+    queue = [_rand_instr(rng, op, w)
+             for op in ("addition", "multiplication", "greater", "min")
+             for w in (8, 16)]
+    base = len(queue)
+    queue.append(_rand_instr(rng, "multiplication", 8))
+    queue.append(BbopInstr("relu", (Ref(base),), 8, keep_vertical=True))
+    sharded = SimdramRank(use_shard_map=True)
+    assert sharded.executor.sharded
+    assert sharded.executor.mesh.devices.size >= 2
+    fallback = SimdramRank(use_shard_map=False)
+    _assert_same(sharded.dispatch(queue), fallback.dispatch(queue))
+    _assert_same(sequential_rank_dispatch(queue)[0],
+                 fallback.dispatch(queue))
+
+
+@pytest.mark.slow
+def test_rank_sharded_executor_forced_devices_subprocess():
+    """Belt-and-braces: force 8 host devices in a subprocess and prove
+    the 3-D ``(rank, channel, data)`` shard_map path is bit-exact
+    against the vmap fallback AND the sequential per-channel drain end
+    to end (covers local single-device runs)."""
+    script = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import numpy as np
+        from repro.core.bank import BbopInstr, Ref, flatten_result
+        from repro.core.rank import SimdramRank, sequential_rank_dispatch
+        from repro.core.ops_library import get_op
+
+        rng = np.random.default_rng(0)
+        queue = []
+        for op in ("addition", "multiplication", "greater", "xor_red"):
+            spec = get_op(op, 8)
+            ops = tuple(rng.integers(0, 1 << w, 64).astype(np.uint64)
+                        for w in spec.operand_bits)
+            queue.append(BbopInstr(op, ops, 8))
+        queue.append(BbopInstr("relu", (Ref(0),), 8))
+        sharded = SimdramRank(n_channels=2, n_chips=2, n_banks=2,
+                              n_subarrays=2, use_shard_map=True)
+        assert sharded.executor.sharded
+        mesh = sharded.executor.mesh
+        assert mesh.shape["rank"] == 2
+        assert mesh.shape["channel"] == 2
+        assert mesh.shape["data"] == 2
+        fallback = SimdramRank(n_channels=2, n_chips=2, n_banks=2,
+                               n_subarrays=2, use_shard_map=False)
+        ra = sharded.dispatch(queue)
+        rb = fallback.dispatch(queue)
+        rs, _ = sequential_rank_dispatch(queue, 2, 2, 2, 2)
+        for a, b, c in zip(ra, rb, rs):
+            for x, y in zip(flatten_result(a), flatten_result(b)):
+                np.testing.assert_array_equal(x, y)
+            for x, y in zip(flatten_result(a), flatten_result(c)):
+                np.testing.assert_array_equal(x, y)
+        print("SHARDED_RANK_OK", mesh.shape["rank"],
+              mesh.shape["channel"], mesh.shape["data"])
+    """)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    out = subprocess.run([sys.executable, "-c", script],
+                         capture_output=True, text=True, env=env,
+                         timeout=600)
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert "SHARDED_RANK_OK 2 2 2" in out.stdout

@@ -140,15 +140,101 @@ def test_span_nesting_across_the_ladder():
         ch.dispatch(_queue(lanes=128))
         st = ch.stats
         assert tr.modeled_total("channel.replay") == st.latency_s
-        assert tr.modeled_total("channel.transfer") == st.transfer_s
+        assert (tr.modeled_total("channel.transfer.h2d")
+                == st.transfer_h2d_s)
+        assert (tr.modeled_total("channel.transfer.d2h")
+                == st.transfer_d2h_s)
+        assert (tr.modeled_total("channel.transfer.overlapped")
+                == st.transfer_overlapped_s)
         root = tr.roots[-1]
     assert root.name == "channel.dispatch"
     names = {s.name for s in root.walk()}
     assert {"channel.pack_super_round", "chip.pack_round",
             "bank.pack_wave", "channel.replay",
-            "channel.transfer", "channel.unpack"} <= names
+            "channel.transfer.h2d", "channel.unpack"} <= names
     lanes = {s.lane for s in root.walk()}
     assert "chip0" in lanes and any("/bank" in ln for ln in lanes)
+
+
+def test_transfer_charges_reconcile_span_by_span():
+    """The DMA charge stream is carried on the spans themselves: folding
+    every span's ordered ``charges`` list reproduces ``modeled_total``
+    AND the Stats accumulators exactly (``==``, not isclose) — at the
+    channel tier and at the rank tier (where ``rank.*`` categories own
+    the shared host link and ``channel.busy`` carries each member
+    channel's replay time)."""
+    from repro.core.rank import SimdramRank
+
+    with obs.enabled() as tr:
+        ch = SimdramChannel(n_chips=2, n_banks=2, n_subarrays=2)
+        ch.dispatch(_queue(lanes=128))
+        st = ch.stats
+        for cat, want in (("channel.transfer.h2d", st.transfer_h2d_s),
+                          ("channel.transfer.d2h", st.transfer_d2h_s),
+                          ("channel.transfer.overlapped",
+                           st.transfer_overlapped_s)):
+            assert tr.modeled_total(cat) == want
+            folded = 0.0
+            for root in tr.roots:
+                for sp in root.walk():
+                    for c, s in sp.charges:
+                        if c == cat:
+                            folded += s
+            assert folded == want
+        # every transfer span is byte-annotated and burst-aligned
+        spans = [s for root in tr.roots for s in root.walk()
+                 if s.name.startswith("channel.transfer.")
+                 and s.name != "channel.transfer.overlapped"]
+        assert spans
+        assert all(s.attrs["bytes"] > 0 for s in spans)
+        assert sum(s.attrs["bytes"] for s in spans) == st.transfer_bytes
+
+    with obs.enabled() as tr:
+        rank = SimdramRank(use_shard_map=False)
+        rank.dispatch(_queue(lanes=128))
+        st = rank.stats
+        assert tr.modeled_total("rank.transfer.h2d") == st.transfer_h2d_s
+        assert tr.modeled_total("rank.transfer.d2h") == st.transfer_d2h_s
+        assert (tr.modeled_total("rank.transfer.overlapped")
+                == st.transfer_overlapped_s)
+        assert tr.modeled_total("rank.replay") == st.latency_s
+        # member channels charge their busy time but never the link
+        assert tr.modeled_total("channel.busy") == sum(
+            ch.stats.latency_s for ch in rank.channels)
+        assert "channel.transfer.h2d" not in tr.modeled_categories()
+
+
+def test_disabled_tracer_and_disabled_overlap_add_zero_retraces():
+    """Neither knob touches the jitted interpreters: dispatching with
+    telemetry off, on, and with ``transfer_overlap=False`` reuses the
+    warmed XLA traces — and the overlap knob changes no results and no
+    link charges, only the exposed/overlapped split."""
+    from dataclasses import replace
+
+    from repro.core.control_unit import trace_counts
+    from repro.core.timing import DDR4
+
+    base = SimdramChannel(n_chips=2, n_banks=1, n_subarrays=2)
+    r_base = base.dispatch(_queue(seed=5))
+    t0 = dict(trace_counts())
+
+    with obs.enabled():
+        traced = SimdramChannel(n_chips=2, n_banks=1, n_subarrays=2)
+        r_traced = traced.dispatch(_queue(seed=5))
+    assert dict(trace_counts()) == t0       # tracer: no retraces
+
+    serial = SimdramChannel(n_chips=2, n_banks=1, n_subarrays=2,
+                            cfg=replace(DDR4, transfer_overlap=False))
+    r_serial = serial.dispatch(_queue(seed=5))
+    assert dict(trace_counts()) == t0       # overlap knob: no retraces
+
+    assert _exact(r_traced, r_base) and _exact(r_serial, r_base)
+    for eng in (traced, serial):
+        assert eng.stats.transfer_h2d_s == base.stats.transfer_h2d_s
+        assert eng.stats.transfer_d2h_s == base.stats.transfer_d2h_s
+        assert eng.stats.latency_s == base.stats.latency_s
+    assert serial.stats.transfer_overlapped_s == 0.0
+    assert serial.stats.exposed_transfer_s == serial.stats.transfer_s
 
 
 def test_traced_dispatch_changes_nothing():

@@ -1,0 +1,185 @@
+"""Property-test suite for the DMA-style transfer/replay overlap model.
+
+Gates the transfer-engine tentpole: the per-direction burst-granular
+link model (:func:`repro.core.timing.h2d_transfer_s` /
+:func:`repro.core.timing.d2h_transfer_s`) and the double-buffered
+overlap schedule charged by ``SimdramChannel`` must satisfy, for every
+queue and geometry:
+
+  1. the overlapped (exposed) transfer total never exceeds the serial
+     transfer total — double-buffering can only hide time, never add it;
+  2. with ``cfg.transfer_overlap=False`` the engine degrades bit-exactly
+     to the serial charge: ``exposed_transfer_s == transfer_s`` with
+     zero overlapped seconds, and replay latency is untouched;
+  3. shrinking either direction's bandwidth knob (``h2d_bw_gbs`` /
+     ``d2h_bw_gbs``) monotonically weakly increases that direction's
+     charge, the exposed total, and the modeled end-to-end latency;
+  4. burst rounding never undercharges: the rounded size is ≥ the
+     payload, a whole number of bursts, and the per-direction seconds
+     are ≥ the unrounded bytes-over-bandwidth floor;
+  5. the transfer-bound crossover point moves outward (≥) under overlap
+     on identical queues — hiding transfer time can only extend the
+     range where adding chips still helps.
+
+All properties run through the REAL dispatch path (not a re-derived
+analytic model), so they hold for whatever packing/fusion schedule the
+channel actually chose.
+"""
+
+import math
+from dataclasses import replace
+
+import numpy as np
+
+from _hypothesis_compat import given, settings, st
+from repro.core.bank import BbopInstr, Ref, flatten_result
+from repro.core.channel import SimdramChannel
+from repro.core.ops_library import get_op
+from repro.core.timing import (DDR4, DramConfig, burst_rounded_bytes,
+                               d2h_transfer_s, h2d_transfer_s)
+
+OPS = ("addition", "subtraction", "multiplication", "min", "max",
+       "greater", "relu", "xor_red")
+
+
+def _rand_queue(seed, n_bits=8, max_len=10):
+    """Deterministic random queue with a sprinkling of Ref chains and
+    kept-vertical results so both zero-byte and nonzero-byte slices are
+    exercised."""
+    rng = np.random.default_rng(seed)
+    queue = []
+    for i in range(int(rng.integers(2, max_len + 1))):
+        if i > 0 and rng.integers(0, 4) == 0:
+            # forwarded hop: consumes the previous result vertically,
+            # so its input slice moves zero bytes across the link
+            queue.append(BbopInstr("relu", (Ref(i - 1),), queue[-1].n_bits))
+            continue
+        op = OPS[int(rng.integers(0, len(OPS)))]
+        spec = get_op(op, n_bits)
+        lanes = int(rng.integers(1, 70))
+        ops = tuple(rng.integers(0, 1 << w, lanes).astype(np.uint64)
+                    for w in spec.operand_bits)
+        kw = {}
+        if rng.integers(0, 4) == 0:
+            kw["keep_vertical"] = True
+        queue.append(BbopInstr(op, ops, n_bits, **kw))
+    return queue
+
+
+def _dispatch(queue, cfg, n_chips=2, n_banks=2, n_subarrays=2):
+    eng = SimdramChannel(n_chips=n_chips, n_banks=n_banks,
+                         n_subarrays=n_subarrays, cfg=cfg,
+                         use_shard_map=False)
+    results = eng.dispatch(queue)
+    return eng.stats, results
+
+
+# --- 1. overlap never exceeds serial --------------------------------------
+
+@given(st.integers(0, 10_000), st.integers(4, 8), st.integers(1, 3),
+       st.integers(1, 2))
+@settings(max_examples=8, deadline=None)
+def test_overlap_total_never_exceeds_serial(seed, n_bits, n_chips, n_banks):
+    queue = _rand_queue(seed, n_bits=n_bits)
+    st_, _ = _dispatch(queue, DDR4, n_chips=n_chips, n_banks=n_banks)
+    assert 0.0 <= st_.transfer_overlapped_s <= st_.transfer_s
+    assert st_.exposed_transfer_s == st_.transfer_s - st_.transfer_overlapped_s
+    assert st_.exposed_transfer_s <= st_.transfer_s
+    assert st_.transfer_s == st_.transfer_h2d_s + st_.transfer_d2h_s
+
+
+# --- 2. disabled overlap is bit-exact with the serial charge --------------
+
+@given(st.integers(0, 10_000), st.integers(4, 8))
+@settings(max_examples=6, deadline=None)
+def test_overlap_disabled_equals_serial_bitexact(seed, n_bits):
+    queue = _rand_queue(seed, n_bits=n_bits)
+    on, r_on = _dispatch(queue, replace(DDR4, transfer_overlap=True))
+    off, r_off = _dispatch(queue, replace(DDR4, transfer_overlap=False))
+    # the link charges are identical FP values in both modes ...
+    assert off.transfer_overlapped_s == 0.0
+    assert off.exposed_transfer_s == off.transfer_s
+    assert off.transfer_h2d_s == on.transfer_h2d_s
+    assert off.transfer_d2h_s == on.transfer_d2h_s
+    assert off.transfer_bytes == on.transfer_bytes
+    # ... replay latency does not depend on the overlap knob ...
+    assert off.latency_s == on.latency_s
+    assert off.super_rounds == on.super_rounds
+    # ... and the knob only ever helps the end-to-end total.
+    assert on.total_latency_s <= off.total_latency_s
+    # results are bit-exact regardless of the timing knob
+    for a, b in zip(r_on, r_off):
+        for x, y in zip(flatten_result(a), flatten_result(b)):
+            np.testing.assert_array_equal(x, y)
+
+
+# --- 3. monotone in either direction's bandwidth knob ---------------------
+
+@given(st.integers(0, 10_000), st.sampled_from(["h2d_bw_gbs", "d2h_bw_gbs"]),
+       st.sampled_from([2.0, 4.0, 19.2]))
+@settings(max_examples=6, deadline=None)
+def test_monotone_in_bandwidth_knob(seed, knob, slow_bw):
+    """Shrinking one direction's bandwidth never decreases that
+    direction's charge, the exposed total, or the modeled total."""
+    queue = _rand_queue(seed)
+    fast = _dispatch(queue, replace(DDR4, **{knob: 2.0 * slow_bw}))[0]
+    slow = _dispatch(queue, replace(DDR4, **{knob: slow_bw}))[0]
+    direction = "transfer_h2d_s" if knob == "h2d_bw_gbs" else "transfer_d2h_s"
+    assert getattr(slow, direction) >= getattr(fast, direction)
+    assert slow.transfer_s >= fast.transfer_s
+    assert slow.exposed_transfer_s >= fast.exposed_transfer_s
+    assert slow.total_latency_s >= fast.total_latency_s
+    # replay is bandwidth-independent, so the comparison is apples-to-apples
+    assert slow.latency_s == fast.latency_s
+
+
+# --- 4. burst rounding never undercharges ---------------------------------
+
+@given(st.integers(0, 1 << 20), st.sampled_from([1, 8, 32, 64, 256]))
+@settings(max_examples=50, deadline=None)
+def test_burst_rounding_never_undercharges(n_bytes, burst):
+    cfg = replace(DDR4, link_burst_bytes=burst)
+    rounded = burst_rounded_bytes(n_bytes, cfg)
+    assert rounded >= n_bytes
+    assert rounded % burst == 0
+    assert rounded - n_bytes < burst  # tight: never a full extra burst
+    # per-direction seconds are >= the unrounded bytes/bandwidth floor
+    floor = n_bytes / (cfg.channel_bw_gbs * 1e9)
+    assert h2d_transfer_s(n_bytes, cfg) >= floor
+    assert d2h_transfer_s(n_bytes, cfg) >= floor
+
+
+def test_burst_rounding_edge_cases():
+    assert burst_rounded_bytes(0) == 0
+    assert burst_rounded_bytes(-5) == 0
+    assert burst_rounded_bytes(1) == DDR4.link_burst_bytes
+    assert burst_rounded_bytes(64) == 64
+    assert burst_rounded_bytes(65) == 128
+    assert h2d_transfer_s(0) == 0.0 and d2h_transfer_s(0) == 0.0
+    # per-direction knobs override the symmetric default independently
+    asym = replace(DDR4, h2d_bw_gbs=9.6, d2h_bw_gbs=4.8)
+    assert h2d_transfer_s(64, asym) == 64 / (9.6 * 1e9)
+    assert d2h_transfer_s(64, asym) == 64 / (4.8 * 1e9)
+    # a degenerate burst size of <=0 clamps to byte granularity
+    assert burst_rounded_bytes(7, replace(DDR4, link_burst_bytes=0)) == 7
+
+
+# --- 5. crossover moves outward under overlap -----------------------------
+
+@given(st.integers(0, 10_000), st.integers(2, 3))
+@settings(max_examples=6, deadline=None)
+def test_crossover_moves_outward_under_overlap(seed, n_chips):
+    """On identical queues the transfer-bound crossover point under
+    overlap is >= the serial one: hiding transfer time extends the range
+    where adding chips still helps."""
+    queue = _rand_queue(seed, max_len=12)
+    on = _dispatch(queue, replace(DDR4, transfer_overlap=True),
+                   n_chips=n_chips)[0]
+    off = _dispatch(queue, replace(DDR4, transfer_overlap=False),
+                    n_chips=n_chips)[0]
+    # same compute numerator, denominator can only shrink under overlap
+    assert float(on.chip_busy_s.sum()) == float(off.chip_busy_s.sum())
+    if math.isinf(off.crossover_chips):
+        assert math.isinf(on.crossover_chips)
+    else:
+        assert on.crossover_chips >= off.crossover_chips
